@@ -1,0 +1,65 @@
+"""Kernel-level benchmark: modeled TPU-v5e time per ff_* kernel call from
+each kernel's exact tile-schedule cost model (the CPU container cannot
+time real TPU kernels), plus modeled FF-vs-baseline and M2C2 deltas."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import TPU_V5E, Pipe, Workload, estimate_baseline, \
+    estimate_feedforward
+from repro.kernels.ff_attention import attention_cost
+from repro.kernels.ff_chunk_scan import chunk_scan_cost
+from repro.kernels.ff_decode_attention import decode_attention_cost
+from repro.kernels.ff_gather import gather_cost
+from repro.kernels.ff_matmul import matmul_cost
+
+CASES = [
+    ("ff_matmul/4096", matmul_cost(4096, 4096, 4096, dtype=jnp.bfloat16),
+     True, 128 * 128 * 2 * 2),
+    ("ff_attention/prefill8k", attention_cost(32, 8192, 128), True,
+     128 * 128 * 2 * 2),
+    ("ff_decode_attention/32k", decode_attention_cost(8, 64, 8, 32768, 128),
+     True, 128 * 128 * 2 * 2),
+    ("ff_chunk_scan/mamba4k", chunk_scan_cost(64, 4096, 64, 64), True,
+     64 * (3 * 64 + 64) * 2),
+    ("ff_gather/1M", gather_cost(1 << 20, 512), False, 8 * 512 * 4),
+]
+
+
+def rows():
+    out = []
+    for name, cost, regular, word_bytes in CASES:
+        n_words = max(int(cost.hbm_bytes / word_bytes), 1)
+        w = Workload(n_words=n_words, word_bytes=word_bytes,
+                     flops_per_word=cost.flops / n_words, regular=regular)
+        base = estimate_baseline(w, TPU_V5E)
+        ff = estimate_feedforward(w, TPU_V5E, Pipe(tile=(8, 128), depth=4))
+        m2c2 = estimate_feedforward(w, TPU_V5E,
+                                    Pipe(tile=(8, 128), depth=4, streams=2))
+        out.append({
+            "name": name,
+            "us_per_call": ff.total_s * 1e6,
+            "ff_speedup": base.total_s / ff.total_s,
+            "m2c2_extra": ff.total_s / m2c2.total_s,
+            "hbm_gb": cost.hbm_bytes / 1e9,
+            "gflops": cost.flops / 1e9,
+            "bottleneck": ff.bottleneck,
+            "vmem_kib": cost.vmem_bytes / 1024,
+        })
+    return out
+
+
+def main():
+    print("# Kernel suite: modeled v5e time per call (tile-schedule costs)")
+    print("name,us_per_call,derived")
+    for r in rows():
+        print(f"kernels/{r['name']},{r['us_per_call']:.1f},"
+              f"ff={r['ff_speedup']:.2f}x_m2c2+{(r['m2c2_extra']-1)*100:.0f}%"
+              f"_{r['bottleneck']}")
+        print(f"#  {r['name']:28s} {r['gflops']:9.1f} GF "
+              f"{r['hbm_gb']:7.2f} GB  vmem {r['vmem_kib']:6.0f} KiB")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Roofline report over the dry-run artifacts (EXPERIMENTS.md §Roofline is
+generated from this)."""
+
+from __future__ import annotations
+
+import os
+
+from repro.launch.roofline import analyze_cell, load_all, markdown_table
+
+DRY = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def main():
+    print("# Roofline terms per (arch x shape x mesh) from the dry-run")
+    print("name,us_per_call,derived")
+    rows = []
+    for result in load_all(DRY):
+        a = analyze_cell(result)
+        if a is None:
+            continue
+        rows.append(a)
+        dom = max(a["t_compute_s"], a["t_memory_s"], a["t_collective_s"])
+        print(f"roofline/{a['cell']},{dom * 1e6:.0f},"
+              f"{a['bottleneck']}_RF={a['roofline_fraction']:.3f}")
+    if rows:
+        print("#")
+        for line in markdown_table(rows).splitlines():
+            print("# " + line)
+
+
+if __name__ == "__main__":
+    main()

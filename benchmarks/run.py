@@ -1,0 +1,30 @@
+"""Benchmark harness: one module per paper table/figure + the roofline
+report. Prints ``name,us_per_call,derived`` CSV lines (detail lines are
+'#'-prefixed)."""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (fig4_m2c2, kernel_bench, roofline_report,
+                            table2_feedforward, table3_microbench)
+    failures = []
+    for mod in (table2_feedforward, fig4_m2c2, table3_microbench,
+                kernel_bench, roofline_report):
+        print(f"\n===== {mod.__name__} =====")
+        try:
+            mod.main()
+        except Exception:   # noqa: BLE001 — report all benches
+            failures.append(mod.__name__)
+            traceback.print_exc()
+    if failures:
+        print(f"\nFAILED benches: {failures}", file=sys.stderr)
+        raise SystemExit(1)
+    print("\nall benches ok")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Paper Table 2: feed-forward design model vs. single work-item baseline.
+
+For each benchmark: modeled baseline/FF time on the paper's board
+(ARRIA_CX), modeled speedup vs. the published number, bandwidth-utilization
+before/after, and VMEM (BRAM-analogue) cost. ``--sweep-depth`` reproduces
+the paper's depth-insensitivity observation (depths 1 is the baseline; 2,
+100, 1000 are the paper's sweep).
+"""
+
+from __future__ import annotations
+
+from repro.core import (ARRIA_CX, Pipe, estimate_baseline,
+                        estimate_feedforward)
+from benchmarks.workloads import BENCHES
+
+
+def rows(sweep_depth: bool = False):
+    out = []
+    for name, b in BENCHES.items():
+        base = estimate_baseline(b.workload, ARRIA_CX)
+        pipe = Pipe(tile=(8, 128), depth=8)
+        ff = estimate_feedforward(b.workload, ARRIA_CX, pipe)
+        row = {
+            "name": name,
+            "us_per_call": ff.total_s * 1e6 / b.workload.n_words,
+            "baseline_ms": base.total_s * 1e3,
+            "ff_ms": ff.total_s * 1e3,
+            "speedup": base.total_s / ff.total_s,
+            "paper_speedup": b.paper_speedup,
+            "bw_before_mb_s": base.achieved_bw_mb_s,
+            "bw_after_mb_s": ff.achieved_bw_mb_s,
+            "vmem_bytes": ff.vmem_bytes,
+        }
+        if sweep_depth:
+            for d in (2, 100, 1000):
+                e = estimate_feedforward(b.workload, ARRIA_CX,
+                                         pipe.with_depth(min(d, 1024)))
+                row[f"ff_ms_d{d}"] = e.total_s * 1e3
+        out.append(row)
+    return out
+
+
+def main(sweep_depth: bool = True):
+    print("# Table 2 analogue: FF vs single work-item "
+          "(modeled on the paper's Arria CX board)")
+    print("name,us_per_call,derived")
+    hdr = ("bench", "base ms", "ff ms", "model x", "paper x",
+           "bw before", "bw after")
+    detail = []
+    for r in rows(sweep_depth):
+        print(f"table2/{r['name']},{r['us_per_call']:.3f},"
+              f"speedup={r['speedup']:.2f}x_paper={r['paper_speedup']:.2f}x")
+        detail.append(
+            f"  {r['name']:10s} {r['baseline_ms']:10.1f} {r['ff_ms']:9.1f} "
+            f"{r['speedup']:7.2f} {r['paper_speedup']:7.2f} "
+            f"{r['bw_before_mb_s']:9.0f} {r['bw_after_mb_s']:9.0f} MB/s")
+        if sweep_depth:
+            ds = " ".join(f"d{d}={r[f'ff_ms_d{d}']:.1f}ms"
+                          for d in (2, 100, 1000))
+            detail.append(f"             depth sweep: {ds}")
+    print("#", " | ".join(hdr))
+    for line in detail:
+        print("#" + line)
+    geo = 1.0
+    n = 0
+    for r in rows():
+        if r["paper_speedup"] > 2:    # the paper's big-win kernels
+            geo *= r["speedup"]
+            n += 1
+    print(f"# geomean modeled speedup over big-win kernels: "
+          f"{geo ** (1 / max(n, 1)):.1f}x (paper avg ~20x over all)")
+
+
+if __name__ == "__main__":
+    main(sweep_depth=True)

@@ -1,0 +1,126 @@
+"""Benchmark workload definitions mirroring the paper's Table 1 suite.
+
+Each entry is a :class:`repro.core.Workload` for the analytic DAE model. A
+*word* is one main-loop iteration (the paper pipes one scalar per load per
+iteration). Published structure is used where the paper gives it —
+FW: baseline II=285; BackProp: II=416; NW: true-MLCD rewritten then ~II
+order 300; irregular kernels' divergence from Table 1 — and the remaining
+constants (bytes/iteration, DLCD chain lengths) are calibrated once against
+Table 2; deviations are reported side-by-side by the benchmark, not hidden.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.core import Workload
+
+
+@dataclasses.dataclass(frozen=True)
+class Bench:
+    name: str
+    workload: Workload
+    paper_speedup: float            # Table 2: FF vs single work-item
+    paper_m2c2: Optional[float]     # Fig. 4: M2C2 vs FF (≈, read off bars)
+    note: str = ""
+
+
+BENCHES: Dict[str, Bench] = {
+    "BFS": Bench(
+        "BFS",
+        Workload(n_words=1 << 21, word_bytes=20, flops_per_word=16,
+                 regular=False, divergence=0.8, dlcd_cycles=4,
+                 false_mlcd_ii=96.0),
+        paper_speedup=13.84, paper_m2c2=1.35,
+        note="irregular graph traversal; frontier-dependent divergence"),
+    "PageRank": Bench(
+        "PageRank",
+        Workload(n_words=1 << 21, word_bytes=256, flops_per_word=24,
+                 regular=False, divergence=0.05, dlcd_cycles=2,
+                 false_mlcd_ii=0.0),
+        paper_speedup=0.96, paper_m2c2=1.02,
+        note="already bandwidth-saturated; FF ~neutral (paper: 0.96x)"),
+    "FW": Bench(
+        "FW",
+        Workload(n_words=1 << 22, word_bytes=24, flops_per_word=16,
+                 regular=True, divergence=0.0, dlcd_cycles=4,
+                 false_mlcd_ii=285.0),
+        paper_speedup=64.95, paper_m2c2=1.25,
+        note="paper: II=285 false MLCD; prefetch LSU after FF, 630->3130 MB/s"),
+    "MIS": Bench(
+        "MIS",
+        Workload(n_words=1 << 21, word_bytes=24, flops_per_word=12,
+                 regular=False, divergence=0.6, dlcd_cycles=4,
+                 false_mlcd_ii=64.0),
+        paper_speedup=6.47, paper_m2c2=1.4,
+        note="paper: 208 -> 2116 MB/s bandwidth after FF"),
+    "Color": Bench(
+        "Color",
+        Workload(n_words=1 << 21, word_bytes=128, flops_per_word=24,
+                 regular=False, divergence=0.2, dlcd_cycles=16,
+                 false_mlcd_ii=0.0),
+        paper_speedup=1.02, paper_m2c2=1.3,
+        note="no false MLCD; neutral FF, gains only from M2C2"),
+    "Hotspot": Bench(
+        "Hotspot",
+        Workload(n_words=1 << 20, word_bytes=8192, flops_per_word=1024,
+                 regular=True, divergence=0.0, dlcd_cycles=8,
+                 false_mlcd_ii=0.0),
+        paper_speedup=0.85, paper_m2c2=1.85,
+        note="regular stencil, saturated baseline; M2C2 7.34->13.66 GB/s"),
+    "Hotspot3D": Bench(
+        "Hotspot3D",
+        Workload(n_words=1 << 20, word_bytes=12288, flops_per_word=1536,
+                 regular=True, divergence=0.0, dlcd_cycles=8,
+                 false_mlcd_ii=0.0),
+        paper_speedup=0.88, paper_m2c2=1.5,
+        note="as Hotspot, 3D halo"),
+    "BackProp": Bench(
+        "BackProp",
+        Workload(n_words=1 << 22, word_bytes=512, flops_per_word=64,
+                 regular=True, divergence=0.0, dlcd_cycles=8,
+                 false_mlcd_ii=416.0),
+        paper_speedup=44.54, paper_m2c2=1.05,
+        note="paper: II=416; FF baseline already at high bandwidth -> M2C2 flat"),
+    "NW": Bench(
+        "NW",
+        Workload(n_words=1 << 22, word_bytes=32, flops_per_word=24,
+                 regular=True, divergence=0.1, dlcd_cycles=6,
+                 false_mlcd_ii=320.0),
+        paper_speedup=50.95, paper_m2c2=1.2,
+        note="true MLCD rewritten to private-register carry first (paper §4.2)"),
+}
+
+# Table 3 microbenchmarks: generated kernels (8 loads/iteration; AI 10 / 6;
+# the for-if variants add a variable-trip inner loop + reduction DLCD).
+MICRO: Dict[str, Bench] = {
+    "M_AI10_R": Bench(
+        "M_AI10_R",
+        Workload(n_words=1 << 21, word_bytes=256, flops_per_word=2560,
+                 regular=True, divergence=0.0, dlcd_cycles=0.0,
+                 false_mlcd_ii=0.0),
+        paper_speedup=1.55, paper_m2c2=1.55,
+        note="8 loads, AI=10, regular"),
+    "M_AI10_IR": Bench(
+        "M_AI10_IR",
+        Workload(n_words=1 << 21, word_bytes=256, flops_per_word=2560,
+                 regular=False, divergence=0.0, dlcd_cycles=0.0,
+                 false_mlcd_ii=0.0),
+        paper_speedup=1.00, paper_m2c2=1.00,
+        note="8 loads, AI=10, irregular: contention cancels M2C2"),
+    "M_AI6_forif_R": Bench(
+        "M_AI6_forif_R",
+        Workload(n_words=1 << 21, word_bytes=256, flops_per_word=1536,
+                 regular=True, divergence=0.5, dlcd_cycles=8.0,
+                 false_mlcd_ii=0.0),
+        paper_speedup=1.90, paper_m2c2=1.90,
+        note="divergent for-if + reduction DLCD"),
+    "M_AI6_forif_IR": Bench(
+        "M_AI6_forif_IR",
+        Workload(n_words=1 << 21, word_bytes=256, flops_per_word=1536,
+                 regular=False, divergence=0.5, dlcd_cycles=8.0,
+                 false_mlcd_ii=0.0),
+        paper_speedup=1.84, paper_m2c2=1.84,
+        note="divergent + irregular"),
+}

@@ -1,0 +1,12 @@
+"""Batched serving example: continuous-batching greedy decode with separate
+prefill/decode programs (the feed-forward model at the serving level —
+prefill produces the KV-cache pipe, the decode loop consumes it).
+
+Run:  PYTHONPATH=src python examples/serve_pipelined.py
+"""
+
+from repro.launch import serve as serve_mod
+
+if __name__ == "__main__":
+    serve_mod.main(["--arch", "qwen1_5_0p5b", "--smoke",
+                    "--requests", "8", "--prompt-len", "24", "--max-new", "12"])

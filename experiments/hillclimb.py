@@ -1,0 +1,90 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Perf hillclimb driver (§Perf): re-lowers a cell with one cfg/rule change
+per iteration and reports the roofline-term deltas vs. the recorded
+baseline.
+
+Usage:
+  PYTHONPATH=src python experiments/hillclimb.py --cell qwen2_72b:train_4k \
+      --tag it1_losschunk --patch loss_chunk=8
+  PYTHONPATH=src python experiments/hillclimb.py --cell qwen2_72b:train_4k \
+      --tag it2_seqsp --rule seq_sp=model --patch loss_chunk=8
+"""
+
+import argparse
+import json
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs.base import get_config  # noqa: E402
+from repro.launch import dryrun  # noqa: E402
+from repro.launch.roofline import analyze_cell  # noqa: E402
+
+OUT = os.path.join(os.path.dirname(__file__), "dryrun")
+
+
+def parse_val(v: str):
+    if v in ("True", "False"):
+        return v == "True"
+    try:
+        return int(v)
+    except ValueError:
+        try:
+            return float(v)
+        except ValueError:
+            return v
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, help="arch:shape")
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--patch", nargs="*", default=[], help="k=v cfg fields")
+    ap.add_argument("--rule", nargs="*", default=[],
+                    help="k=v logical-rule overrides (v='None' clears)")
+    ap.add_argument("--mesh", default=None,
+                    help="axis=size,... mesh refactor (same chip count)")
+    args = ap.parse_args()
+    arch, shape = args.cell.split(":")
+    mesh_axes = None
+    if args.mesh:
+        mesh_axes = tuple((kv.split("=")[0], int(kv.split("=")[1]))
+                          for kv in args.mesh.split(","))
+
+    patch = {k: parse_val(v) for k, v in (p.split("=", 1) for p in args.patch)}
+    if args.rule:
+        rules = dict(get_config(arch).rule_overrides or {})
+        for r in args.rule:
+            k, v = r.split("=", 1)
+            rules[k] = (None if v == "None"
+                        else tuple(v.split("+")) if "+" in v else v)
+        patch["rule_overrides"] = rules
+
+    r = dryrun.run_cell(arch, shape, multi_pod=False, cfg_patch=patch,
+                        tag="__" + args.tag, out_dir=OUT,
+                        mesh_axes=mesh_axes)
+    if not r.get("ok"):
+        print("FAILED:", r.get("error"))
+        print(r.get("traceback", "")[-1500:])
+        raise SystemExit(1)
+
+    base_path = os.path.join(OUT, f"{arch}__{shape}__pod16x16.json")
+    with open(base_path) as f:
+        base = json.load(f)
+    a0, a1 = analyze_cell(base), analyze_cell(r)
+    print(f"{'term':14s} {'baseline':>12s} {'variant':>12s} {'delta':>8s}")
+    for key, label in (("t_compute_s", "compute s"), ("t_memory_s", "memory s"),
+                       ("t_collective_s", "collective s"),
+                       ("peak_hbm_gib", "peak HBM GiB"),
+                       ("useful_ratio", "useful/HLO"),
+                       ("roofline_fraction", "roofline frac")):
+        b, v = a0[key], a1[key]
+        d = (v - b) / b * 100 if b else float("nan")
+        print(f"{label:14s} {b:12.4f} {v:12.4f} {d:+7.1f}%")
+    print(f"bottleneck: {a0['bottleneck']} -> {a1['bottleneck']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Regenerate the §Dry-run and §Roofline tables inside EXPERIMENTS.md from
+the dry-run artifacts. Idempotent: content between the marker comments is
+replaced."""
+
+import json
+import os
+import re
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.roofline import analyze_cell, load_all, markdown_table
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+DRY = os.path.join(ROOT, "experiments", "dryrun")
+
+
+def dryrun_table(results):
+    rows = ["| cell | mesh | status | lower (s) | compile (s) | HBM GiB/dev "
+            "| params |",
+            "|---|---|---|---|---|---|---|"]
+    for r in sorted(results, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        if "__it" in r["cell"] or "__" + "tag" in r["cell"]:
+            continue
+        if r.get("skipped"):
+            rows.append(f"| {r['arch']} × {r['shape']} | {r['mesh']} | "
+                        f"SKIP ({r['reason'].split(':')[0]}) | | | | |")
+            continue
+        status = "OK" if r.get("ok") else f"FAIL: {r.get('error', '')[:40]}"
+        t = r.get("timings", {})
+        mem = r.get("memory", {}).get("peak_bytes_est", 0) / 2 ** 30
+        rows.append(
+            f"| {r['arch']} × {r['shape']} | {r['mesh']} | {status} "
+            f"| {t.get('lower_s', 0):.1f} | {t.get('compile_s', 0):.1f} "
+            f"| {mem:.2f} | {r.get('n_params', 0):,} |")
+    return "\n".join(rows)
+
+
+def inject(md, marker, content):
+    pat = re.compile(rf"<!-- {marker} -->.*?(?=\n## |\Z)", re.S)
+    repl = f"<!-- {marker} -->\n\n{content}\n"
+    assert pat.search(md), marker
+    return pat.sub(repl, md)
+
+
+def main():
+    results = [r for r in load_all(DRY)
+               if "__it" not in r["cell"] and "__base" not in r["cell"]]
+    base = [r for r in results if r["cell"].count("__") == 2]
+    analyzed = [a for a in (analyze_cell(r) for r in base) if a]
+    analyzed.sort(key=lambda a: (a["arch"], a["shape"], a["mesh"]))
+
+    path = os.path.join(ROOT, "EXPERIMENTS.md")
+    with open(path) as f:
+        md = f.read()
+    md = inject(md, "DRYRUN_TABLE", dryrun_table(base))
+    md = inject(md, "ROOFLINE_TABLE", markdown_table(analyzed))
+    with open(path, "w") as f:
+        f.write(md)
+    print(f"updated EXPERIMENTS.md with {len(base)} cells, "
+          f"{len(analyzed)} roofline rows")
+
+
+if __name__ == "__main__":
+    main()

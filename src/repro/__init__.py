@@ -1,0 +1,8 @@
+"""repro: feed-forward (decoupled access/execute) design model for JAX/TPU.
+
+Reproduction + extension of "Enabling The Feed-Forward Design Model in
+OpenCL Using Pipes" (Eghbali Zarch & Becchi, PACT'22) as a production-grade
+multi-pod training/serving framework. See DESIGN.md.
+"""
+
+__version__ = "0.1.0"

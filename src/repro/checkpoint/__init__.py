@@ -1,0 +1,10 @@
+"""repro.checkpoint — atomic, resumable, reshardable checkpoints."""
+
+from repro.checkpoint.checkpointer import (
+    latest_step,
+    restore,
+    save,
+    save_async,
+)
+
+__all__ = ["latest_step", "restore", "save", "save_async"]

@@ -1,0 +1,18 @@
+"""repro.configs — one module per assigned architecture (CONFIG: full dims
+from the assignment sheet; SMOKE: reduced same-family config for CPU tests),
+plus the shape set in configs.base."""
+
+from repro.configs.base import (
+    ARCH_IDS,
+    SHAPES,
+    ArchConfig,
+    ShapeConfig,
+    get_config,
+    shape_applicable,
+    smoke_config,
+)
+
+__all__ = [
+    "ARCH_IDS", "SHAPES", "ArchConfig", "ShapeConfig", "get_config",
+    "shape_applicable", "smoke_config",
+]

@@ -1,0 +1,55 @@
+"""repro.core — the paper's contribution: feed-forward pipes for TPU.
+
+Public API:
+  Pipe                      on-chip FIFO spec (depth, streams, tile)
+  StreamSpec / run_reference  the producer/consumer stream-program contract
+  check_no_mlcd             legality (true-MLCD) checker
+  Workload / HardwareModel  analytic DAE pipeline model
+  estimate_baseline / estimate_feedforward / speedup
+  plan_pipe                 roofline-driven (depth, streams) auto-tuner
+"""
+
+from repro.core.pipe import Pipe, required_depth, vmem_budget_ok
+from repro.core.feedforward import (
+    Footprint,
+    StreamSpec,
+    check_no_mlcd,
+    reduction_stream,
+    run_multistream_reference,
+    run_reference,
+    split_words_static,
+)
+from repro.core.pipeline_model import (
+    ARRIA_CX,
+    TPU_V5E,
+    HardwareModel,
+    PipelineEstimate,
+    Workload,
+    estimate_baseline,
+    estimate_feedforward,
+    speedup,
+)
+from repro.core.planner import Plan, plan_pipe
+
+__all__ = [
+    "ARRIA_CX",
+    "Footprint",
+    "HardwareModel",
+    "Pipe",
+    "PipelineEstimate",
+    "Plan",
+    "StreamSpec",
+    "TPU_V5E",
+    "Workload",
+    "check_no_mlcd",
+    "estimate_baseline",
+    "estimate_feedforward",
+    "plan_pipe",
+    "reduction_stream",
+    "required_depth",
+    "run_multistream_reference",
+    "run_reference",
+    "speedup",
+    "split_words_static",
+    "vmem_budget_ok",
+]

@@ -1,0 +1,168 @@
+"""The feed-forward stage abstraction: a composable producer/consumer split.
+
+This module is the JAX-facing embodiment of the paper's kernel transformation
+(Section 3, steps 1-14): a kernel is re-expressed as a *stream program* —
+
+  * a **producer** that, for word index ``i``, names the global-memory reads
+    (and only the reads) needed by that word;
+  * a **consumer** that folds each word into a carry (all arithmetic, DLCDs,
+    and global stores live here);
+
+— plus a :class:`~repro.core.pipe.Pipe` describing the FIFO between them.
+
+Given a :class:`StreamSpec` you can:
+
+  * run it with **reference semantics** (:func:`run_reference`) — the
+    "single work-item" program order, one word fully loaded then fully
+    consumed; this is the correctness oracle for every Pallas kernel;
+  * **estimate** its baseline/FF/M2C2 timing via ``core.pipeline_model``;
+  * hand it to a Pallas kernel in ``repro.kernels`` that implements the same
+    word schedule with a real VMEM ring buffer (the hot paths specialize the
+    schedule rather than interpreting the spec, so the MXU sees static
+    shapes — the spec is the contract they are tested against).
+
+The split is legal only when no word's loads depend on a *later or same*
+word's stores through global memory (the paper's MLCD restriction).
+:func:`check_no_mlcd` verifies this on a declared read/write footprint.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pipe import Pipe
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamSpec:
+    """A feed-forward stream program.
+
+    Attributes:
+      n_words: trip count of the main loop (pipe words).
+      producer: ``f(i, operands) -> word`` gathering word ``i``'s loads from
+        the operand pytree. Must be free of stores and of any dependence on
+        the consumer carry — this *is* the feed-forward restriction, and it
+        is enforced structurally: the producer simply has no access to the
+        carry.
+      consumer: ``f(carry, word, i) -> carry`` folding one word.
+      init: initial consumer carry.
+      finalize: optional ``f(carry) -> out`` epilogue.
+    """
+
+    n_words: int
+    producer: Callable[[int, Any], Any]
+    consumer: Callable[[Any, Any, int], Any]
+    init: Any
+    finalize: Optional[Callable[[Any], Any]] = None
+
+
+def run_reference(spec: StreamSpec, operands: Any) -> Any:
+    """Oracle: execute the stream program in strict program order.
+
+    Equivalent to the paper's single work-item kernel (Fig. 2a): each
+    iteration loads its word then consumes it, no overlap. Every Pallas
+    kernel in ``repro.kernels`` must be allclose to this.
+    """
+
+    def body(i, carry):
+        word = spec.producer(i, operands)
+        return spec.consumer(carry, word, i)
+
+    carry = jax.lax.fori_loop(0, spec.n_words, body, spec.init)
+    return spec.finalize(carry) if spec.finalize is not None else carry
+
+
+def run_multistream_reference(spec: StreamSpec, operands: Any, streams: int,
+                              combine: Callable[[Sequence[Any]], Any]) -> Any:
+    """Oracle for the M2C2 schedule: static parity load balancing.
+
+    Stream ``s`` consumes words ``s, s+streams, s+2*streams, ...`` (the
+    paper's static round-robin split), each with its own carry; ``combine``
+    merges the per-stream carries. Only valid when the consumer fold is
+    reorderable across streams (commutative-monoid carry) — the same
+    restriction the paper places on multi-consumer designs.
+    """
+    outs = []
+    for s in range(streams):
+        n_s = (spec.n_words - s + streams - 1) // streams
+
+        def body(j, carry, s=s):
+            i = s + j * streams
+            word = spec.producer(i, operands)
+            return spec.consumer(carry, word, i)
+
+        outs.append(jax.lax.fori_loop(0, n_s, body, spec.init))
+    merged = combine(outs)
+    return spec.finalize(merged) if spec.finalize is not None else merged
+
+
+# ---------------------------------------------------------------------------
+# MLCD legality check (paper Section 3, "Limitations")
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Footprint:
+    """Declared global-memory footprint of one word, as index ranges.
+
+    ``reads`` / ``writes``: sequences of (buffer_name, lo, hi) half-open
+    intervals word ``i`` touches.
+    """
+
+    reads: Tuple[Tuple[str, int, int], ...]
+    writes: Tuple[Tuple[str, int, int], ...]
+
+
+def check_no_mlcd(footprints: Sequence[Footprint]) -> Tuple[bool, str]:
+    """True MLCD detector over declared footprints.
+
+    A memory loop-carried dependency exists iff some word ``j > i`` *reads*
+    a region word ``i`` *writes* (RAW through global memory across words).
+    Such programs must not be feed-forward split (the paper's NW case needed
+    a register-carried rewrite first). WAR/WAW across words are harmless
+    here because the producer never writes.
+
+    Returns (ok, reason). O(n^2) over words — intended for spec-sized tests
+    and the microbenchmark generator, not production loops.
+    """
+    for i, fi in enumerate(footprints):
+        for name_w, wlo, whi in fi.writes:
+            for j in range(i + 1, len(footprints)):
+                for name_r, rlo, rhi in footprints[j].reads:
+                    if name_w == name_r and max(wlo, rlo) < min(whi, rhi):
+                        return False, (
+                            f"true MLCD: word {j} reads {name_r}[{rlo}:{rhi}) "
+                            f"written by word {i} [{wlo}:{whi})")
+    return True, "no true MLCD"
+
+
+def split_words_static(n_words: int, streams: int) -> Sequence[Sequence[int]]:
+    """The paper's static load-balancing: word i -> stream (i % streams)."""
+    return [list(range(s, n_words, streams)) for s in range(streams)]
+
+
+# ---------------------------------------------------------------------------
+# Convenience: classic tiled-reduction stream (used by tests/microbenchmarks)
+# ---------------------------------------------------------------------------
+
+def reduction_stream(x: jnp.ndarray, tile_rows: int,
+                     fold: Callable[[jnp.ndarray], jnp.ndarray] = jnp.sum) -> StreamSpec:
+    """Stream a [N, C] array by row tiles, folding each tile to a scalar sum."""
+    n, c = x.shape
+    assert n % tile_rows == 0, (n, tile_rows)
+
+    def producer(i, ops):
+        return jax.lax.dynamic_slice_in_dim(ops, i * tile_rows, tile_rows, axis=0)
+
+    def consumer(carry, word, i):
+        return carry + fold(word)
+
+    return StreamSpec(
+        n_words=n // tile_rows,
+        producer=producer,
+        consumer=consumer,
+        init=jnp.zeros((), x.dtype),
+    )

@@ -1,0 +1,249 @@
+"""Analytic cycle model of the feed-forward (DAE) pipeline.
+
+The paper evaluates on an Arria-CX FPGA board with Intel's on-chip profiler.
+This container has no FPGA and no TPU, so the quantitative engine of the
+reproduction is an explicit analytic model of a decoupled access/execute
+pipeline. It models, in seconds:
+
+* the **baseline** ("single work-item") kernel, where loads are *entangled*
+  with compute: the conservative compiler serializes the loop whenever it
+  suspects a memory loop-carried dependency (false MLCD -> initiation
+  interval II >> 1), and divergence/DLCDs stall the load units;
+* the **feed-forward** kernel pair, where the producer streams words through
+  a pipe of ``depth`` slots, so memory time and compute time *overlap* and
+  the steady-state word time is max(t_mem, t_comp) instead of their sum;
+* **multiple producers/consumers** (M2C2 etc.), which raise achievable
+  memory-level parallelism until the memory system saturates — with a
+  contention penalty for irregular access (the paper's Table 3 effect).
+
+The model is deliberately simple, fully documented, and property-tested
+(tests/test_pipeline_model.py): pipelining can never make a kernel slower
+than the sum of its parts predicts, depth beyond the latency-hiding point
+changes nothing (the paper's "depth does not significantly affect
+performance"), and stream count saturates at the memory system's knee
+(the paper's ">2x2 does not help").
+
+Two hardware presets are provided:
+
+* :data:`ARRIA_CX` — the paper's board (34.1 GB/s DDR4, ~300 MHz fabric);
+  used by the benchmark suite to reproduce the paper's tables.
+* :data:`TPU_V5E` — the deployment target (819 GB/s HBM, 197 TFLOP/s bf16);
+  used by the planner to size pipes for the Pallas kernels.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.pipe import Pipe
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareModel:
+    """Memory/compute machine model for the DAE pipeline."""
+
+    name: str
+    clock_hz: float                   # fabric clock for II-denominated stalls
+    hbm_bw: float                     # peak global-memory bandwidth, bytes/s
+    stream_bw_frac: float             # fraction of peak one producer can pull
+    dma_latency_s: float              # issue->first-byte latency of one copy
+    flops: float                      # peak compute, FLOP/s
+    irregular_eff: float              # bandwidth derate for irregular access
+    contention_coeff: float           # per-extra-stream penalty (irregular)
+    max_streams: int                  # memory-system saturation knee
+
+    def stream_bandwidth(self, streams: int, regular: bool) -> float:
+        """Aggregate achievable bandwidth for ``streams`` concurrent producers."""
+        streams = min(streams, self.max_streams)
+        eff = 1.0 if regular else self.irregular_eff
+        per_stream = self.hbm_bw * self.stream_bw_frac * eff
+        if not regular:
+            # concurrent irregular streams fight for row buffers / channels
+            per_stream = per_stream / (1.0 + self.contention_coeff * (streams - 1))
+        return min(self.hbm_bw * eff, streams * per_stream)
+
+
+# The paper's board: Intel PAC, Arria CX, 2x4GB DDR4 @ 34.1 GB/s.
+ARRIA_CX = HardwareModel(
+    name="arria-cx-pac",
+    clock_hz=300e6,
+    hbm_bw=34.1e9,
+    stream_bw_frac=0.55,     # one in-order LSU stream cannot saturate DDR4
+    dma_latency_s=300e-9,
+    flops=1.5e12,
+    irregular_eff=0.18,      # Wang et al. [17]: random access collapses DDR bw
+    contention_coeff=0.85,
+    max_streams=4,
+)
+
+# Deployment target: TPU v5e chip (assignment constants).
+TPU_V5E = HardwareModel(
+    name="tpu-v5e",
+    clock_hz=940e6,
+    hbm_bw=819e9,
+    stream_bw_frac=0.55,     # one DMA queue's practical share of HBM
+    dma_latency_s=2e-6,
+    flops=197e12,
+    irregular_eff=0.25,
+    contention_coeff=0.6,
+    max_streams=4,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    """One kernel's stream program, in pipe words.
+
+    Attributes:
+      n_words: number of pipe words (tiles) the kernel processes.
+      word_bytes: global-memory bytes loaded per word.
+      flops_per_word: arithmetic work per word.
+      regular: access pattern of the loads (paper: R vs IR).
+      divergence: mean fractional control-flow bubble per word when control
+        flow is *entangled* with the loads (baseline); in the FF design the
+        bubble moves to the consumer and is smoothed across consumers.
+      dlcd_cycles: length (cycles) of the data loop-carried dependency chain
+        per word (reductions etc.). In the baseline this stalls the *loads*;
+        in the FF design it bounds only the consumer.
+      false_mlcd_ii: initiation interval (cycles) the conservative compiler
+        assigns the baseline loop for a suspected-but-false memory LCD
+        (paper: FW=285, BackProp=416). 0 = compiler proves independence.
+      store_bytes_per_word: global stores per word (both designs keep stores).
+    """
+
+    n_words: int
+    word_bytes: float
+    flops_per_word: float
+    regular: bool = True
+    divergence: float = 0.0
+    dlcd_cycles: float = 0.0
+    false_mlcd_ii: float = 0.0
+    store_bytes_per_word: float = 0.0
+
+    @property
+    def arithmetic_intensity(self) -> float:
+        return self.flops_per_word / max(self.word_bytes, 1e-30)
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineEstimate:
+    """Model output for one design point."""
+
+    total_s: float
+    t_mem_word_s: float
+    t_comp_word_s: float
+    achieved_bw: float          # bytes/s pulled from global memory
+    bottleneck: str             # "memory" | "compute" | "latency" | "ii"
+    vmem_bytes: int
+
+    @property
+    def achieved_bw_mb_s(self) -> float:
+        return self.achieved_bw / 1e6
+
+
+def _word_mem_bytes(w: Workload) -> float:
+    return w.word_bytes + w.store_bytes_per_word
+
+
+_BURST_LSU_OUTSTANDING = 16   # burst-coalesced LSU request buffer depth
+
+
+def estimate_baseline(w: Workload, hw: HardwareModel) -> PipelineEstimate:
+    """Single work-item kernel: loads entangled with compute.
+
+    A *well-pipelined* baseline loop (no LCD) still achieves II=1 with the
+    burst-coalesced LSU hiding latency over its request buffer — that is why
+    the paper's saturated kernels (PageRank, Hotspot) see ~1x from FF. What
+    the baseline cannot escape: the compiler-assigned II from (suspected)
+    MLCDs / DLCD chains serializes the *whole* loop, and divergence bubbles
+    stall the load units (control flow entangled with addresses).
+    """
+    bw = hw.stream_bandwidth(1, w.regular)
+    t_transfer = _word_mem_bytes(w) / bw
+    t_compute = max(w.flops_per_word / hw.flops,
+                    w.dlcd_cycles / hw.clock_hz)
+    t_lat = (0.0 if w.regular
+             else hw.dma_latency_s / _BURST_LSU_OUTSTANDING)
+    # divergence inflates everything entangled with the loads — including
+    # the DLCD chain; the false-MLCD II is a fixed compiler schedule
+    serial = max(t_lat, t_transfer, t_compute, 1.0 / hw.clock_hz) \
+        * (1.0 + w.divergence)
+
+    t_ii = w.false_mlcd_ii / hw.clock_hz
+    t_word = max(serial, t_ii)
+    bottleneck = "ii" if t_ii >= serial and w.false_mlcd_ii > 0 else (
+        "memory" if t_transfer >= t_compute else "compute")
+    total = w.n_words * t_word
+    return PipelineEstimate(
+        total_s=total,
+        t_mem_word_s=t_transfer,
+        t_comp_word_s=t_compute,
+        achieved_bw=w.n_words * _word_mem_bytes(w) / total,
+        bottleneck=bottleneck,
+        vmem_bytes=0,
+    )
+
+
+def estimate_feedforward(
+    w: Workload,
+    hw: HardwareModel,
+    pipe: Pipe,
+    consumers: Optional[int] = None,
+) -> PipelineEstimate:
+    """Feed-forward kernel pair connected by ``pipe``.
+
+    Steady state: producer and consumer overlap; the word time is the max of
+    the two stages. The producer is free of DLCD/divergence (paper's whole
+    point); the false MLCD vanishes because the split *proves* independence.
+
+    Latency exposure: a *regular* stream is serviced by a prefetching LSU /
+    streaming DMA — issue latency amortizes over the stream and only the
+    pipeline fill pays it. An *irregular* stream pays latency per word,
+    hidden by (depth-1) x streams outstanding transactions, but concurrent
+    irregular streams also contend for the memory system's transaction
+    resources (the paper's Table-3 effect). The pipelined loop itself can
+    retire at most one word per clock (II=1 floor).
+    """
+    producers = pipe.streams
+    consumers = producers if consumers is None else consumers
+
+    bw = hw.stream_bandwidth(producers, w.regular)
+    t_transfer = _word_mem_bytes(w) / bw
+    if w.regular:
+        t_latency_exposed = 0.0
+    else:
+        outstanding = max(pipe.depth - 1, 1) * producers
+        lat = hw.dma_latency_s * (1.0 + hw.contention_coeff * (producers - 1))
+        t_latency_exposed = lat / outstanding
+    t_mem = max(t_transfer, t_latency_exposed)
+
+    t_flops = w.flops_per_word / hw.flops
+    t_dlcd = w.dlcd_cycles / hw.clock_hz
+    # divergence bubbles smooth across consumers (static parity balancing)
+    t_comp = (max(t_flops, t_dlcd) * (1.0 + w.divergence / consumers)) / consumers \
+        if consumers > 1 else max(t_flops, t_dlcd) * (1.0 + w.divergence)
+
+    t_word = max(t_mem, t_comp, 1.0 / hw.clock_hz)   # II=1 retirement floor
+    fill = hw.dma_latency_s + pipe.depth * t_mem          # pipeline warmup
+    total = fill + w.n_words * t_word
+    if t_word == t_mem and t_mem == t_latency_exposed and t_latency_exposed > t_transfer:
+        bottleneck = "latency"
+    else:
+        bottleneck = "memory" if t_mem >= t_comp else "compute"
+    return PipelineEstimate(
+        total_s=total,
+        t_mem_word_s=t_mem,
+        t_comp_word_s=t_comp,
+        achieved_bw=w.n_words * _word_mem_bytes(w) / total,
+        bottleneck=bottleneck,
+        vmem_bytes=pipe.vmem_bytes,
+    )
+
+
+def speedup(w: Workload, hw: HardwareModel, pipe: Pipe,
+            consumers: Optional[int] = None) -> float:
+    """FF speedup over the single work-item baseline (paper Table 2 metric)."""
+    base = estimate_baseline(w, hw)
+    ff = estimate_feedforward(w, hw, pipe, consumers)
+    return base.total_s / ff.total_s

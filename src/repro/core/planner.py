@@ -1,0 +1,75 @@
+"""Roofline-driven pipe planner.
+
+The paper leaves (depth, #producers, #consumers) to the programmer, guided
+by profiler output, and reports two empirical rules: depth barely matters
+once latency is hidden, and >2x2 streams saturate the memory system. The
+planner encodes exactly that reasoning on top of the analytic model, so the
+framework can size pipes automatically per kernel call site.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence, Tuple
+
+from repro.core.pipe import Pipe, required_depth, vmem_budget_ok
+from repro.core.pipeline_model import (
+    HardwareModel,
+    TPU_V5E,
+    Workload,
+    estimate_feedforward,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    pipe: Pipe
+    consumers: int
+    predicted_s: float
+    predicted_bw: float
+    rationale: str
+
+
+def plan_pipe(
+    w: Workload,
+    tile: Tuple[int, ...],
+    dtype,
+    hw: HardwareModel = TPU_V5E,
+    stream_options: Sequence[int] = (1, 2, 4),
+    depth_cap: int = 17,     # (cap-1) outstanding = burst-LSU parity
+
+    vmem_budget_bytes: int = 96 * 1024 * 1024,
+) -> Plan:
+    """Pick (depth, streams) minimizing modeled time under the VMEM budget.
+
+    Ties break toward fewer streams and shallower pipes (the paper's
+    "limit the number of channels" guidance).
+    """
+    base_pipe = Pipe(tile=tile, dtype=dtype, depth=2, streams=1)
+    service = w.word_bytes / hw.stream_bandwidth(1, w.regular)
+    depth = required_depth(hw.dma_latency_s, service, cap=depth_cap)
+
+    best: Plan | None = None
+    for streams in stream_options:
+        if tile[0] % streams != 0:
+            continue
+        pipe = base_pipe.with_depth(depth).with_streams(streams)
+        if not vmem_budget_ok([pipe], vmem_budget_bytes):
+            continue
+        est = estimate_feedforward(w, hw, pipe)
+        cand = Plan(
+            pipe=pipe,
+            consumers=streams,
+            predicted_s=est.total_s,
+            predicted_bw=est.achieved_bw,
+            rationale=(
+                f"depth={depth} hides dma latency "
+                f"({hw.dma_latency_s*1e9:.0f}ns over {service*1e9:.0f}ns/word); "
+                f"streams={streams} bottleneck={est.bottleneck}"),
+        )
+        # require a >2% modeled win to take on more streams (channel-count
+        # frugality, per the paper)
+        if best is None or cand.predicted_s < best.predicted_s * 0.98:
+            best = cand
+    assert best is not None, "no feasible pipe under VMEM budget"
+    return best

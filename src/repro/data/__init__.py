@@ -1,0 +1,6 @@
+"""repro.data — deterministic synthetic data + host producer/consumer pipe."""
+
+from repro.data.pipeline import HostPipeline
+from repro.data.synthetic import SyntheticSpec, batch_at
+
+__all__ = ["HostPipeline", "SyntheticSpec", "batch_at"]

@@ -1,0 +1,81 @@
+"""Host-side feed-forward data pipeline: producer threads -> bounded queue
+(pipe) -> consumer.
+
+This is the paper's design model at the host level: N producer threads (the
+"memory kernels") materialize batches; the bounded queue is the pipe (its
+``depth`` = channel depth); the training loop is the consumer. Static
+round-robin step assignment = the paper's static load balancing, and makes
+delivery order deterministic regardless of producer timing.
+
+State is one integer (next step) because batches are pure functions of the
+step index — checkpoint/resume is exact.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Dict, Optional
+
+import numpy as np
+
+
+class HostPipeline:
+    def __init__(self, batch_fn: Callable[[int], Dict[str, np.ndarray]],
+                 *, depth: int = 2, producers: int = 1, start_step: int = 0):
+        self.batch_fn = batch_fn
+        self.depth = depth
+        self.producers = producers
+        self._next_emit = start_step
+        self._stop = threading.Event()
+        self._ready: Dict[int, Dict[str, np.ndarray]] = {}
+        self._lock = threading.Condition()
+        self._threads = []
+        for p in range(producers):
+            t = threading.Thread(target=self._produce, args=(start_step + p,),
+                                 daemon=True)
+            t.start()
+            self._threads.append(t)
+
+    def _produce(self, first: int) -> None:
+        step = first
+        while not self._stop.is_set():
+            batch = self.batch_fn(step)
+            with self._lock:
+                # pipe back-pressure: only steps inside the lookahead window
+                # [next_emit, next_emit + depth) may sit in the pipe, so a
+                # fast producer can never crowd out the word the consumer
+                # needs next (in-order delivery, bounded occupancy).
+                while step - self._next_emit >= self.depth:
+                    if self._stop.is_set():
+                        return
+                    self._lock.wait(timeout=0.1)
+                self._ready[step] = batch
+                self._lock.notify_all()
+            step += self.producers
+
+    def get(self, timeout: float = 30.0) -> Dict[str, np.ndarray]:
+        """Blocking read from the pipe (in step order)."""
+        with self._lock:
+            deadline_step = self._next_emit
+            ok = self._lock.wait_for(
+                lambda: deadline_step in self._ready, timeout=timeout)
+            if not ok:
+                raise TimeoutError(f"pipe starved at step {deadline_step}")
+            batch = self._ready.pop(deadline_step)
+            self._next_emit += 1
+            self._lock.notify_all()
+            return batch
+
+    @property
+    def state(self) -> int:
+        """Checkpointable pipeline state: the next step to be consumed."""
+        with self._lock:
+            return self._next_emit
+
+    def stop(self) -> None:
+        self._stop.set()
+        with self._lock:
+            self._lock.notify_all()
+        for t in self._threads:
+            t.join(timeout=2.0)

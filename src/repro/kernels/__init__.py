@@ -1,0 +1,18 @@
+"""repro.kernels — Pallas TPU kernels implementing the feed-forward (DAE)
+design model, one subpackage per hot spot:
+
+  ff_matmul            DAE blocked matmul (regular streams)
+  ff_attention         flash attention prefill, GQA, KV ring pipes
+  ff_decode_attention  flash-decode vs. long KV caches
+  ff_chunk_scan        gated linear-attention scan (Mamba2 / RWKV6)
+  ff_gather            irregular row gather (embedding / MoE dispatch)
+
+Each subpackage: kernel.py (pl.pallas_call + BlockSpec + explicit ring-pipe
+DMAs), ops.py (jit wrapper + exact tile-schedule cost model), ref.py
+(pure-jnp oracle). Kernels validate under interpret=True on CPU; real-TPU
+lowering is the target.
+"""
+
+from repro.kernels.dae import cdiv, pad_to
+
+__all__ = ["cdiv", "pad_to"]

@@ -1,0 +1,145 @@
+"""Shared decoupled-access/execute (DAE) machinery for the Pallas kernels.
+
+Every ``ff_*`` kernel realizes the paper's memory-kernel/compute-kernel split
+inside one Pallas program:
+
+* the *memory kernel* is the set of ``start()`` calls issuing async HBM->VMEM
+  copies up to ``depth-1`` words ahead of the consumer (the pipe's lookahead);
+* the *pipe* is a VMEM ring buffer of ``depth`` slots with one DMA semaphore
+  per (slot, stream);
+* the *compute kernel* is the body that ``wait()``s on a slot and feeds the
+  MXU/VPU from it.
+
+``streams > 1`` implements the paper's multi-producer design (M2C2): each
+word's copy is split into ``streams`` disjoint row ranges issued as separate
+DMAs with separate semaphores — the TPU analogue of two memory kernels with
+static index-parity load balancing.
+
+The helpers are deliberately thin: kernels stay explicit about their word
+schedule (what the paper calls the "feed-forward data path"), and the helpers
+only own slot/semaphore bookkeeping.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Sequence, Tuple
+
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.pipe import Pipe
+
+
+def ring_scratch(pipe: Pipe):
+    """Scratch shapes for one pipe: (ring VMEM buffer, DMA semaphore array)."""
+    return (
+        pltpu.VMEM(pipe.buffer_shape, pipe.dtype),
+        pltpu.SemaphoreType.DMA((pipe.depth, pipe.streams)),
+    )
+
+
+class RingPipe:
+    """In-kernel view of one pipe (ring buffer + semaphores).
+
+    ``src_slicer(word) -> ref-slice`` names the HBM region of word ``word``
+    — this is the *memory kernel*'s address stream, and by construction it
+    can depend only on the word index (and scalar-prefetch values), never on
+    consumer state: the feed-forward restriction, enforced structurally.
+    """
+
+    def __init__(self, buf, sems, pipe: Pipe,
+                 src_slicer: Callable[[int], "pl.Ref"]):
+        self.buf = buf
+        self.sems = sems
+        self.pipe = pipe
+        self.src_slicer = src_slicer
+
+    def _stream_rows(self, s: int) -> Tuple[int, int]:
+        rows = self.pipe.tile[0] // self.pipe.streams
+        return s * rows, rows
+
+    def start(self, word) -> None:
+        """Producer: issue the (possibly multi-stream) copy for ``word``."""
+        slot = word % self.pipe.depth
+        src = self.src_slicer(word)
+        for s in range(self.pipe.streams):
+            lo, rows = self._stream_rows(s)
+            pltpu.make_async_copy(
+                src.at[pl.ds(lo, rows)],
+                self.buf.at[slot, pl.ds(lo, rows)],
+                self.sems.at[slot, s],
+            ).start()
+
+    def wait(self, word) -> None:
+        """Consumer: block until ``word``'s copy landed (paper: blocking read)."""
+        slot = word % self.pipe.depth
+        src = self.src_slicer(word)
+        for s in range(self.pipe.streams):
+            lo, rows = self._stream_rows(s)
+            pltpu.make_async_copy(
+                src.at[pl.ds(lo, rows)],
+                self.buf.at[slot, pl.ds(lo, rows)],
+                self.sems.at[slot, s],
+            ).wait()
+
+    def word_ref(self, word):
+        """VMEM ref of the landed word (the pipe read endpoint)."""
+        return self.buf.at[word % self.pipe.depth]
+
+
+def dae_acquire(g, n_words: int, pipes: Sequence[RingPipe], depth: int):
+    """DAE word schedule, acquire phase, at grid step ``g`` of ``n_words``.
+
+    Warmup at g==0 fills the ring (lookahead of ``depth`` words), then blocks
+    until word ``g`` has landed. Call :meth:`RingPipe.word_ref` for the slot,
+    run the compute, then call :func:`dae_release` — releasing *before* the
+    compute would let the refill DMA clobber the slot being consumed (the
+    pipe's read endpoint is only freed once the consumer has read the word,
+    exactly the paper's blocking-read semantics).
+
+    With depth==1 this degenerates to synchronous copy-then-compute — the
+    "single work-item baseline" mode used by the benchmark tables.
+    """
+    if depth == 1:
+        for p in pipes:
+            p.start(g)
+            p.wait(g)
+        return
+
+    @pl.when(g == 0)
+    def _():
+        for d in range(depth):
+            @pl.when(d < n_words)
+            def _(d=d):
+                for p in pipes:
+                    p.start(d)
+
+    for p in pipes:
+        p.wait(g)
+
+
+def dae_release(g, n_words: int, pipes: Sequence[RingPipe], depth: int):
+    """DAE release phase: word ``g`` consumed; refill its slot with g+depth."""
+    if depth == 1:
+        return
+
+    @pl.when(g + depth < n_words)
+    def _():
+        for p in pipes:
+            p.start(g + depth)
+
+
+def cdiv(a: int, b: int) -> int:
+    return (a + b - 1) // b
+
+
+def pad_to(x: jnp.ndarray, multiple: int, axis: int) -> jnp.ndarray:
+    """Zero-pad ``axis`` of x up to a multiple (TPU tile alignment)."""
+    size = x.shape[axis]
+    rem = (-size) % multiple
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads)

@@ -1,0 +1,4 @@
+from repro.kernels.ff_attention.ops import attention, attention_cost
+from repro.kernels.ff_attention.ref import attention_ref
+
+__all__ = ["attention", "attention_cost", "attention_ref"]

@@ -1,0 +1,150 @@
+"""Feed-forward flash attention (prefill), GQA-aware.
+
+Paper mapping: XLA's *un-fused* attention materializes the [S, S] score
+matrix in HBM — the TPU analogue of the baseline kernel whose loads round-
+trip global memory. The feed-forward version streams K/V tiles through VMEM
+ring pipes (memory kernel) while the online-softmax consumer never touches
+HBM for intermediates. The softmax running state (m, l, acc) is the DLCD of
+the paper's Fig. 3: it is loop-carried in the *consumer only*, so the K/V
+stream pipelines at full depth regardless.
+
+Layout: q,k,v are [BH, S, D] with KV heads already broadcast-indexed by the
+wrapper (GQA: q head h reads kv head h // group). Grid is 1-D over
+(bh, qi, kj), kj innermost, causal blocks skipped via predication.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.pipe import Pipe
+from repro.kernels.dae import RingPipe, dae_acquire, dae_release
+
+_NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_hbm, v_hbm, o_ref, m_sc, l_sc, acc,
+            k_buf, k_sems, v_buf, v_sems,
+            *, nq: int, nkv: int, kv_groups: int, bq: int, bkv: int, d: int,
+            causal: bool, scale: float, k_pipe: Pipe, v_pipe: Pipe, out_dtype):
+    g = pl.program_id(0)
+    n_words = pl.num_programs(0)
+    kj = g % nkv
+    qi = (g // nkv) % nq
+    bh = g // (nkv * nq)
+    kv_bh = bh // kv_groups
+
+    def k_slice(word):
+        w_kj = word % nkv
+        w_bh = (word // (nkv * nq)) // kv_groups
+        return k_hbm.at[w_bh, pl.ds(w_kj * bkv, bkv), :]
+
+    def v_slice(word):
+        w_kj = word % nkv
+        w_bh = (word // (nkv * nq)) // kv_groups
+        return v_hbm.at[w_bh, pl.ds(w_kj * bkv, bkv), :]
+
+    pipes = [RingPipe(k_buf, k_sems, k_pipe, k_slice),
+             RingPipe(v_buf, v_sems, v_pipe, v_slice)]
+    dae_acquire(g, n_words, pipes, k_pipe.depth)
+
+    @pl.when(kj == 0)
+    def _():
+        m_sc[...] = jnp.full_like(m_sc, _NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc[...] = jnp.zeros_like(acc)
+
+    q_end = (qi + 1) * bq - 1
+    kv_start = kj * bkv
+    live = (kv_start <= q_end) if causal else True
+
+    @pl.when(live)
+    def _():
+        q = q_ref[0]                                  # [bq, d]
+        k = pipes[0].word_ref(g)[...]                 # [bkv, d]
+        v = pipes[1].word_ref(g)[...]                 # [bkv, d]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # [bq, bkv]
+        if causal:
+            rows = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+            cols = kv_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+            s = jnp.where(rows >= cols, s, _NEG_INF)
+        m_prev = m_sc[:, :1]                          # [bq, 1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)                        # [bq, bkv]
+        alpha = jnp.exp(m_prev - m_new)               # [bq, 1]
+        l_new = l_sc[:, :1] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc[...] = acc[...] * alpha + jnp.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        m_sc[...] = jnp.broadcast_to(m_new, m_sc.shape)
+        l_sc[...] = jnp.broadcast_to(l_new, l_sc.shape)
+
+    @pl.when(kj == nkv - 1)
+    def _():
+        l = l_sc[:, :1]
+        l = jnp.where(l == 0.0, 1.0, l)               # fully-masked rows -> 0
+        o_ref[0] = (acc[...] / l).astype(out_dtype)
+
+    dae_release(g, n_words, pipes, k_pipe.depth)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("kv_groups", "block_q", "block_kv", "depth", "streams",
+                     "causal", "interpret"))
+def flash_attention_ff(
+    q: jnp.ndarray,               # [BH, S, D]
+    k: jnp.ndarray,               # [BKVH, S, D]
+    v: jnp.ndarray,               # [BKVH, S, D]
+    *,
+    kv_groups: int = 1,
+    block_q: int = 128,
+    block_kv: int = 128,
+    depth: int = 2,
+    streams: int = 1,
+    causal: bool = True,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    bh, s, d = q.shape
+    kvbh, skv, dk = k.shape
+    assert d == dk and v.shape == k.shape and bh == kvbh * kv_groups
+    assert s % block_q == 0 and skv % block_kv == 0, (s, skv, block_q, block_kv)
+    nq, nkv = s // block_q, skv // block_kv
+    scale = 1.0 / (d ** 0.5)
+
+    k_pipe = Pipe(tile=(block_kv, d), dtype=k.dtype, depth=depth, streams=streams)
+    v_pipe = Pipe(tile=(block_kv, d), dtype=v.dtype, depth=depth, streams=streams)
+
+    kernel = functools.partial(
+        _kernel, nq=nq, nkv=nkv, kv_groups=kv_groups, bq=block_q,
+        bkv=block_kv, d=d, causal=causal, scale=scale,
+        k_pipe=k_pipe, v_pipe=v_pipe, out_dtype=q.dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=(bh * nq * nkv,),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d),
+                         lambda g: (g // (nkv * nq), (g // nkv) % nq, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, block_q, d), lambda g: (g // (nkv * nq), (g // nkv) % nq, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 128), jnp.float32),
+            pltpu.VMEM((block_q, 128), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+            *[x for p in (k_pipe, v_pipe) for x in
+              (pltpu.VMEM(p.buffer_shape, p.dtype),
+               pltpu.SemaphoreType.DMA((p.depth, p.streams)))],
+        ],
+        interpret=interpret,
+    )(q, k, v)

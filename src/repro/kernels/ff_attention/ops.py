@@ -1,0 +1,52 @@
+"""Public op wrapper + cost model for ff_attention (prefill)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.dae import cdiv, pad_to
+from repro.kernels.ff_attention.kernel import flash_attention_ff
+from repro.kernels.ff_attention.ref import attention_ref
+from repro.kernels.ff_matmul.ops import KernelCost
+
+
+def attention_cost(bh: int, s: int, d: int, *, causal: bool = True,
+                   block_kv: int = 128, depth: int = 2,
+                   dtype=jnp.bfloat16) -> KernelCost:
+    """Exact stream costs for one prefill attention call (per the kernel's
+    tile schedule). Causal halves the live score blocks."""
+    frac = 0.5 if causal else 1.0
+    flops = 4.0 * bh * s * s * d * frac            # qk^T and pv matmuls
+    itemsize = jnp.dtype(dtype).itemsize
+    nq = cdiv(s, 128)
+    # K and V are re-streamed once per live q block; q,o move once.
+    kv_stream = 2 * s * d * itemsize * nq * frac
+    hbm = bh * (kv_stream + 2 * s * d * itemsize)
+    vmem = 2 * depth * block_kv * d * itemsize + 128 * d * 4 * 3
+    return KernelCost(flops=flops, hbm_bytes=float(hbm), vmem_bytes=vmem)
+
+
+def attention(q, k, v, *, kv_groups: int = 1, causal: bool = True,
+              block_q: int = 128, block_kv: int = 128, depth: int = 2,
+              streams: int = 1, mode: str = "ff", interpret: bool = True):
+    """Flash attention over [BH, S, D] tensors (wrapper pads S to blocks).
+
+    mode="ff"|"baseline"(depth=1)|"ref".
+    """
+    if mode == "ref":
+        return attention_ref(q, k, v, kv_groups=kv_groups, causal=causal)
+    bh, s, d = q.shape
+    skv = k.shape[1]
+    qp = pad_to(q, block_q, 1)
+    kp = pad_to(k, block_kv, 1)
+    vp = pad_to(v, block_kv, 1)
+    if kp.shape[1] > skv and not causal:
+        raise ValueError(
+            "non-causal attention requires Skv to be a block multiple "
+            "(padded keys would receive softmax mass)")
+    if mode == "baseline":
+        depth = 1
+    out = flash_attention_ff(
+        qp, kp, vp, kv_groups=kv_groups, block_q=block_q, block_kv=block_kv,
+        depth=depth, streams=streams, causal=causal, interpret=interpret)
+    return out[:, :s, :]

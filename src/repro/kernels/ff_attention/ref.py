@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for ff_attention (GQA, optional causal)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  *, kv_groups: int = 1, causal: bool = True) -> jnp.ndarray:
+    """q: [BH, Sq, D]; k, v: [BKVH, Skv, D]; BH = BKVH * kv_groups."""
+    bh, sq, d = q.shape
+    kvbh, skv, _ = k.shape
+    assert bh == kvbh * kv_groups
+    kk = jnp.repeat(k, kv_groups, axis=0)
+    vv = jnp.repeat(v, kv_groups, axis=0)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) / (d ** 0.5)
+    if causal:
+        rows = jnp.arange(sq)[:, None]
+        cols = jnp.arange(skv)[None, :]
+        s = jnp.where(rows >= cols, s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bqk,bkd->bqd", p, vv.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,4 @@
+from repro.kernels.ff_chunk_scan.ops import chunk_scan, chunk_scan_cost
+from repro.kernels.ff_chunk_scan.ref import chunk_scan_ref, chunk_scan_xla
+
+__all__ = ["chunk_scan", "chunk_scan_cost", "chunk_scan_ref", "chunk_scan_xla"]

@@ -1,0 +1,51 @@
+"""Public op wrapper + cost model for ff_chunk_scan."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.dae import pad_to
+from repro.kernels.ff_chunk_scan.kernel import chunk_scan_ff
+from repro.kernels.ff_chunk_scan.ref import chunk_scan_ref, chunk_scan_xla
+from repro.kernels.ff_matmul.ops import KernelCost
+
+
+def chunk_scan_cost(bh: int, s: int, n: int, p: int, *, chunk: int = 64,
+                    depth: int = 2, dtype=jnp.bfloat16) -> KernelCost:
+    nc = max(s // chunk, 1)
+    # per chunk: inter [L,N]@[N,P], intra ~L^2(N+P)/2, state [N,L]@[L,P]
+    per_chunk = 2.0 * chunk * n * p * 2 + chunk * chunk * (n + p)
+    itemsize = jnp.dtype(dtype).itemsize
+    hbm = bh * s * (3 * n + 2 * p) * itemsize     # q,k,w in; v in; y out
+    vmem = depth * chunk * (3 * n + p) * itemsize + n * p * 4
+    return KernelCost(flops=bh * nc * per_chunk, hbm_bytes=float(hbm),
+                      vmem_bytes=vmem)
+
+
+def chunk_scan(q, k, v, log_w, u=None, *, chunk: int = 64, subtile: int = 16,
+               inclusive: bool = True, depth: int = 2, streams: int = 1,
+               mode: str = "ff", interpret: bool = True):
+    """Gated linear-attention scan over [BH, S, *] streams.
+
+    mode="ff"|"baseline"(depth=1)|"ref"(naive scan)|"xla"|"xla_tiled"
+    (chunked, HLO-visible; _tiled = tile-pair factorized intra-chunk).
+    Pads S up to a chunk multiple (decay 1, zero k/v contribute nothing).
+    """
+    if mode == "ref":
+        return chunk_scan_ref(q, k, v, log_w, u, inclusive=inclusive)
+    if mode in ("xla", "xla_tiled"):
+        s = q.shape[1]
+        qp, kp, vp = (pad_to(x, chunk, 1) for x in (q, k, v))
+        lwp = pad_to(log_w, chunk, 1)
+        return chunk_scan_xla(qp, kp, vp, lwp, u, chunk=chunk,
+                              inclusive=inclusive,
+                              tiled=mode == "xla_tiled")[:, :s]
+    s = q.shape[1]
+    qp, kp, vp = (pad_to(x, chunk, 1) for x in (q, k, v))
+    lwp = pad_to(log_w, chunk, 1)
+    if mode == "baseline":
+        depth = 1
+    out = chunk_scan_ff(qp, kp, vp, lwp, u, chunk=chunk, subtile=subtile,
+                        inclusive=inclusive, depth=depth, streams=streams,
+                        interpret=interpret)
+    return out[:, :s]

@@ -1,0 +1,177 @@
+"""Oracles for ff_chunk_scan.
+
+``chunk_scan_ref``      — naive per-timestep scan (the ground truth).
+``chunk_scan_xla``      — scalable pure-XLA chunked formulation with an
+                          associative scan across chunk boundaries; used in
+                          the model graphs (dry-run / CPU paths) because it
+                          is HLO-visible (cost analysis) and log-depth.
+Both implement:
+    h_t = diag(w_t) h_{t-1} + k_t (x) v_t
+    inclusive:  y_t = q_t . h_t
+    exclusive:  y_t = q_t . (h_{t-1} + diag(u) k_t (x) v_t)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def chunk_scan_ref(q, k, v, log_w, u=None, *, inclusive: bool = True):
+    """Naive scan. q,k,log_w: [BH,S,N]; v: [BH,S,P]; u: [BH,N] or None."""
+    q, k, v = (x.astype(jnp.float32) for x in (q, k, v))
+    lw = jnp.minimum(log_w.astype(jnp.float32), 0.0)
+    bh, s, n = q.shape
+    p = v.shape[2]
+
+    def step(h, xs):
+        qt, kt, vt, lwt = xs
+        kv = kt[:, :, None] * vt[:, None, :]            # [BH,N,P]
+        h_new = jnp.exp(lwt)[:, :, None] * h + kv
+        if inclusive:
+            y = jnp.einsum("bn,bnp->bp", qt, h_new)
+        else:
+            eff = h + (u[:, :, None] * kv if u is not None else 0.0)
+            y = jnp.einsum("bn,bnp->bp", qt, eff)
+        return h_new, y
+
+    h0 = jnp.zeros((bh, n, p), jnp.float32)
+    xs = (jnp.swapaxes(q, 0, 1), jnp.swapaxes(k, 0, 1),
+          jnp.swapaxes(v, 0, 1), jnp.swapaxes(lw, 0, 1))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return jnp.swapaxes(ys, 0, 1).astype(q.dtype)
+
+
+def _intra_chunk(q, k, v, lw, u, inclusive):
+    """Exact pairwise intra-chunk term. q,k,lw: [..., L, N]; v: [..., L, P]."""
+    cw = jnp.cumsum(lw, axis=-2)
+    e = cw[..., :, None, :] - cw[..., None, :, :]       # [..., L, L, N]
+    if not inclusive:
+        e = e - lw[..., :, None, :]
+    e = jnp.minimum(e, 0.0)
+    a = jnp.einsum("...tn,...tsn,...sn->...ts", q, jnp.exp(e), k)
+    L = q.shape[-2]
+    rows = jnp.arange(L)[:, None]
+    cols = jnp.arange(L)[None, :]
+    keep = (rows >= cols) if inclusive else (rows > cols)
+    a = jnp.where(keep, a, 0.0)
+    y = jnp.einsum("...ts,...sp->...tp", a, v)
+    if u is not None and not inclusive:
+        c = jnp.sum(q * u[..., None, :] * k, axis=-1, keepdims=True)
+        y = y + c * v
+    return y, cw
+
+
+def _intra_chunk_tiled(q, k, v, lw, u, inclusive, subtile: int = 16,
+                       compute_dtype=None):
+    """Tile-pair intra-chunk term (the kernel's factorization, vectorized):
+    never materializes the [L, L, N] pairwise-decay tensor — only [T, T, N]
+    diagonal tiles (T=16) and [T, prefix] matmul scores. All decay exponents
+    are <= 0 ("decay-to-boundary"), so f32-stable. §Perf 'tiled chunk scan'.
+    ``compute_dtype``: operand dtype for the matmuls (decay-scaled operands
+    cast down, f32 accumulation) — §Perf it3 'bf16 scan operands'.
+
+    q,k,lw: [..., L, N]; v: [..., L, P]. Returns (y, cw) like _intra_chunk.
+    """
+    L, n = q.shape[-2], q.shape[-1]
+    p = v.shape[-1]
+    t = subtile
+    nt = L // t
+    cw = jnp.cumsum(lw, axis=-2)
+    cd = compute_dtype or q.dtype
+
+    # diagonal tiles: exact pairwise within each T-tile
+    def tiles(x):
+        return x.reshape(*x.shape[:-2], nt, t, x.shape[-1])
+
+    qt, kt, vt, lwt, cwt = map(tiles, (q, k, v, lw, cw))
+    e = cwt[..., :, None, :] - cwt[..., None, :, :]      # [..., nt, T, T, N]
+    if not inclusive:
+        e = e - lwt[..., :, None, :]
+    e = jnp.minimum(e, 0.0)
+    a = jnp.einsum("...tn,...tsn,...sn->...ts", qt.astype(cd),
+                   jnp.exp(e).astype(cd), kt.astype(cd),
+                   preferred_element_type=jnp.float32)
+    rows = jnp.arange(t)[:, None]
+    cols = jnp.arange(t)[None, :]
+    a = jnp.where((rows >= cols) if inclusive else (rows > cols), a, 0.0)
+    y = jnp.einsum("...ts,...sp->...tp", a.astype(cd), vt.astype(cd),
+                   preferred_element_type=jnp.float32)   # [..., nt, T, P]
+    y = y.reshape(*q.shape[:-2], L, p)
+
+    # cross-tile pairs via boundary-factorized matmuls
+    for i in range(1, nt):
+        t0 = i * t
+        cwb = cw[..., t0 - 1, :]                         # [..., N]
+        q_exp = cw[..., t0:t0 + t, :] - cwb[..., None, :]
+        if not inclusive:
+            q_exp = q_exp - lw[..., t0:t0 + t, :]
+        q_i = (q[..., t0:t0 + t, :] * jnp.exp(q_exp)).astype(cd)
+        k_pre = (k[..., :t0, :] *
+                 jnp.exp(cwb[..., None, :] - cw[..., :t0, :])).astype(cd)
+        scores = jnp.einsum("...tn,...sn->...ts", q_i, k_pre,
+                            preferred_element_type=jnp.float32)
+        y_i = jnp.einsum("...ts,...sp->...tp", scores.astype(cd),
+                         v[..., :t0, :].astype(cd),
+                         preferred_element_type=jnp.float32)
+        y = y.at[..., t0:t0 + t, :].add(y_i)
+
+    if u is not None and not inclusive:
+        c = jnp.sum(q * u[..., None, :] * k, axis=-1, keepdims=True)
+        y = y + c * v
+    return y, cw
+
+
+def chunk_scan_xla(q, k, v, log_w, u=None, *, chunk: int = 64,
+                   inclusive: bool = True, tiled: bool = False):
+    """Chunked formulation, fully vectorized; associative scan over chunks.
+
+    Same signature as chunk_scan_ref. S must be a multiple of ``chunk``
+    (callers pad with log_w=0, k=v=0). ``tiled=True`` uses the tile-pair
+    intra-chunk factorization (O(S*T*N) live memory instead of O(S*L*N)).
+    """
+    orig_dtype = q.dtype
+    q, k, v = (x.astype(jnp.float32) for x in (q, k, v))
+    lw = jnp.minimum(log_w.astype(jnp.float32), 0.0)
+    bh, s, n = q.shape
+    p = v.shape[2]
+    assert s % chunk == 0, (s, chunk)
+    c = s // chunk
+    qc = q.reshape(bh, c, chunk, n)
+    kc = k.reshape(bh, c, chunk, n)
+    vc = v.reshape(bh, c, chunk, p)
+    lwc = lw.reshape(bh, c, chunk, n)
+
+    uc = u[:, None, :].astype(jnp.float32) if u is not None else None
+    cd = orig_dtype if tiled else jnp.float32   # bf16 operands (f32 accum)
+    if tiled:
+        y_intra, cw = _intra_chunk_tiled(qc, kc, vc, lwc, uc, inclusive,
+                                         compute_dtype=cd)
+    else:
+        y_intra, cw = _intra_chunk(qc, kc, vc, lwc, uc, inclusive)
+
+    # per-chunk transition: h' = diag(D) h + S
+    d_c = jnp.exp(cw[..., -1, :])                                   # [bh,c,n]
+    k2 = (kc * jnp.exp(cw[..., -1:, :] - cw)).astype(cd)             # <= 0
+    s_c = jnp.einsum("bcln,bclp->bcnp", k2, vc.astype(cd),
+                     preferred_element_type=jnp.float32)             # [bh,c,n,p]
+
+    def combine(a, b):
+        d1, s1 = a
+        d2, s2 = b
+        return d2 * d1, d2[..., None] * s1 + s2
+
+    # scan over the chunk axis (moved to front for associative_scan)
+    d_s = jnp.moveaxis(d_c, 1, 0)                                    # [c,bh,n]
+    s_s = jnp.moveaxis(s_c, 1, 0)                                    # [c,bh,n,p]
+    d_acc, s_acc = jax.lax.associative_scan(combine, (d_s, s_s))
+    h_after = jnp.moveaxis(s_acc, 0, 1)                              # [bh,c,n,p]
+    h_prev = jnp.concatenate(
+        [jnp.zeros_like(h_after[:, :1]), h_after[:, :-1]], axis=1)
+
+    q_decay = cw if inclusive else cw - lwc
+    qd = (qc * jnp.exp(q_decay)).astype(cd)
+    y_inter = jnp.einsum("bcln,bcnp->bclp", qd, h_prev.astype(cd),
+                         preferred_element_type=jnp.float32)
+    y = (y_intra + y_inter).reshape(bh, s, p)
+    return y.astype(orig_dtype)

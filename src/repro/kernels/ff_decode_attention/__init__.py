@@ -1,0 +1,7 @@
+from repro.kernels.ff_decode_attention.ops import (
+    decode_attention,
+    decode_attention_cost,
+)
+from repro.kernels.ff_decode_attention.ref import decode_attention_ref
+
+__all__ = ["decode_attention", "decode_attention_cost", "decode_attention_ref"]

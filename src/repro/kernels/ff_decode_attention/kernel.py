@@ -1,0 +1,144 @@
+"""Feed-forward decode attention: one new token vs. a long KV cache.
+
+The decode step is the paper's favourable case par excellence: a huge,
+perfectly *regular* stream (the KV cache) consumed by a tiny reduction with
+a loop-carried softmax state. The cache stream is DLCD-free, so the memory
+kernel prefetches KV tiles at full pipe depth while the consumer folds the
+online softmax — the whole kernel runs at HBM bandwidth (roofline-memory
+bound), which is exactly what the roofline table shows for decode cells.
+
+Layout: q is [B, KVH, G, D] (G = padded query-head group per KV head, GQA),
+cache k/v are [B, KVH, S, D], ``lengths[B]`` gives the live cache prefix.
+Grid: 1-D over (b*kvh, kv_block), kv innermost.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.pipe import Pipe
+from repro.kernels.dae import RingPipe, dae_acquire, dae_release
+
+_NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_hbm, v_hbm, o_ref, m_sc, l_sc, acc,
+            k_buf, k_sems, v_buf, v_sems,
+            *, nkv: int, kvh: int, g_pad: int, bkv: int, d: int,
+            scale: float, k_pipe: Pipe, v_pipe: Pipe, out_dtype):
+    g = pl.program_id(0)
+    n_words = pl.num_programs(0)
+    kj = g % nkv
+    bh = g // nkv
+    b = bh // kvh
+    length = len_ref[b]
+
+    def k_slice(word):
+        w_kj = word % nkv
+        w_bh = word // nkv
+        return k_hbm.at[w_bh // kvh, w_bh % kvh, pl.ds(w_kj * bkv, bkv), :]
+
+    def v_slice(word):
+        w_kj = word % nkv
+        w_bh = word // nkv
+        return v_hbm.at[w_bh // kvh, w_bh % kvh, pl.ds(w_kj * bkv, bkv), :]
+
+    pipes = [RingPipe(k_buf, k_sems, k_pipe, k_slice),
+             RingPipe(v_buf, v_sems, v_pipe, v_slice)]
+    dae_acquire(g, n_words, pipes, k_pipe.depth)
+
+    @pl.when(kj == 0)
+    def _():
+        m_sc[...] = jnp.full_like(m_sc, _NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc[...] = jnp.zeros_like(acc)
+
+    kv_start = kj * bkv
+
+    @pl.when(kv_start < length)
+    def _():
+        q = q_ref[0, 0]                                # [g_pad, d]
+        k = pipes[0].word_ref(g)[...]                  # [bkv, d]
+        v = pipes[1].word_ref(g)[...]                  # [bkv, d]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale    # [g_pad, bkv]
+        cols = kv_start + jax.lax.broadcasted_iota(jnp.int32, (g_pad, bkv), 1)
+        s = jnp.where(cols < length, s, _NEG_INF)
+        m_prev = m_sc[:, :1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_sc[...] = jnp.broadcast_to(
+            l_sc[:, :1] * alpha + jnp.sum(p, axis=1, keepdims=True), l_sc.shape)
+        acc[...] = acc[...] * alpha + jnp.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        m_sc[...] = jnp.broadcast_to(m_new, m_sc.shape)
+
+    @pl.when(kj == nkv - 1)
+    def _():
+        l = l_sc[:, :1]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc[...] / l).astype(out_dtype)
+
+    dae_release(g, n_words, pipes, k_pipe.depth)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_kv", "depth", "streams", "interpret"))
+def decode_attention_ff(
+    q: jnp.ndarray,           # [B, KVH, G_pad, D]
+    k: jnp.ndarray,           # [B, KVH, S, D]
+    v: jnp.ndarray,           # [B, KVH, S, D]
+    lengths: jnp.ndarray,     # [B] int32
+    *,
+    block_kv: int = 128,
+    depth: int = 2,
+    streams: int = 1,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    b, kvh, g_pad, d = q.shape
+    _, _, s, _ = k.shape
+    assert s % block_kv == 0, (s, block_kv)
+    nkv = s // block_kv
+    scale = 1.0 / (d ** 0.5)
+
+    k_pipe = Pipe(tile=(block_kv, d), dtype=k.dtype, depth=depth, streams=streams)
+    v_pipe = Pipe(tile=(block_kv, d), dtype=v.dtype, depth=depth, streams=streams)
+
+    kernel = functools.partial(
+        _kernel, nkv=nkv, kvh=kvh, g_pad=g_pad, bkv=block_kv, d=d,
+        scale=scale, k_pipe=k_pipe, v_pipe=v_pipe, out_dtype=q.dtype)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(b * kvh * nkv,),
+            in_specs=[
+                pl.BlockSpec((1, 1, g_pad, d),
+                             lambda g, lens: ((g // nkv) // kvh,
+                                              (g // nkv) % kvh, 0, 0)),
+                pl.BlockSpec(memory_space=pl.ANY),
+                pl.BlockSpec(memory_space=pl.ANY),
+            ],
+            out_specs=pl.BlockSpec(
+                (1, 1, g_pad, d),
+                lambda g, lens: ((g // nkv) // kvh, (g // nkv) % kvh, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((g_pad, 128), jnp.float32),
+                pltpu.VMEM((g_pad, 128), jnp.float32),
+                pltpu.VMEM((g_pad, d), jnp.float32),
+                *[x for p in (k_pipe, v_pipe) for x in
+                  (pltpu.VMEM(p.buffer_shape, p.dtype),
+                   pltpu.SemaphoreType.DMA((p.depth, p.streams)))],
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g_pad, d), q.dtype),
+        interpret=interpret,
+    )(lengths, q, k, v)

@@ -1,0 +1,50 @@
+"""Public op wrapper + cost model for ff_decode_attention."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.dae import cdiv
+from repro.kernels.ff_decode_attention.kernel import decode_attention_ff
+from repro.kernels.ff_decode_attention.ref import decode_attention_ref
+from repro.kernels.ff_matmul.ops import KernelCost
+
+
+def decode_attention_cost(b: int, h: int, kvh: int, s: int, d: int,
+                          *, block_kv: int = 128, depth: int = 2,
+                          dtype=jnp.bfloat16) -> KernelCost:
+    itemsize = jnp.dtype(dtype).itemsize
+    flops = 4.0 * b * h * s * d
+    hbm = b * kvh * 2 * s * d * itemsize + 2 * b * h * d * itemsize
+    g_pad = max(8, -(-(h // kvh) // 8) * 8)
+    vmem = 2 * depth * block_kv * d * itemsize + g_pad * d * 4 * 3
+    return KernelCost(flops=flops, hbm_bytes=float(hbm), vmem_bytes=vmem)
+
+
+def decode_attention(q, k, v, lengths=None, *, kv_heads: int = None,
+                     block_kv: int = 128, depth: int = 2, streams: int = 1,
+                     mode: str = "ff", interpret: bool = True):
+    """Decode attention for one new token.
+
+    q: [B, H, D]; k, v: [B, KVH, S, D]; lengths: [B] int32 (defaults to S).
+    Returns [B, H, D]. The wrapper regroups q heads per KV head and pads the
+    group to the 8-sublane granule.
+    """
+    b, h, d = q.shape
+    _, kvh, s, _ = k.shape
+    assert h % kvh == 0
+    group = h // kvh
+    if lengths is None:
+        lengths = jnp.full((b,), s, jnp.int32)
+    if mode == "ref":
+        qg = q.reshape(b, kvh, group, d)
+        return decode_attention_ref(qg, k, v, lengths).reshape(b, h, d)
+    g_pad = -(-group // 8) * 8
+    qg = q.reshape(b, kvh, group, d)
+    qg = jnp.pad(qg, ((0, 0), (0, 0), (0, g_pad - group), (0, 0)))
+    if mode == "baseline":
+        depth = 1
+    out = decode_attention_ff(
+        qg, k, v, lengths.astype(jnp.int32), block_kv=block_kv, depth=depth,
+        streams=streams, interpret=interpret)
+    return out[:, :, :group, :].reshape(b, h, d)

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for ff_decode_attention."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                         lengths: jnp.ndarray) -> jnp.ndarray:
+    """q: [B, KVH, G, D]; k, v: [B, KVH, S, D]; lengths: [B] -> [B, KVH, G, D]."""
+    b, kvh, g, d = q.shape
+    s = k.shape[2]
+    scores = jnp.einsum("bhgd,bhsd->bhgs", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / (d ** 0.5)
+    mask = jnp.arange(s)[None, None, None, :] < lengths[:, None, None, None]
+    scores = jnp.where(mask, scores, -jnp.inf)
+    p = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bhgs,bhsd->bhgd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,4 @@
+from repro.kernels.ff_gather.ops import gather, gather_cost
+from repro.kernels.ff_gather.ref import gather_ref
+
+__all__ = ["gather", "gather_cost", "gather_ref"]

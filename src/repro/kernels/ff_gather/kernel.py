@@ -1,0 +1,94 @@
+"""Feed-forward irregular gather: rows = table[idx].
+
+The paper's *irregular memory access* case (Table 3, M-AI10-IR; MoE
+dispatch / embedding lookup in our models). The index stream is scalar-
+prefetched (TPU analogue of the FPGA burst-coalesced LSU's request buffer),
+and each pipe word is a bundle of ``rows_per_word`` single-row DMAs issued
+``depth-1`` words ahead — memory-level parallelism for a pattern the MXU
+pipeline cannot prefetch on its own.
+
+A true-MLCD variant of this op (gather from a table the same kernel is
+scattering into) is *rejected* by core.check_no_mlcd and deliberately has no
+kernel here — the paper's legality restriction.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_ROWS = 8   # rows per pipe word (one f32 sublane granule)
+
+
+def _kernel(idx_ref, tab_hbm, o_ref, buf, sems, *, depth: int, cols: int):
+    g = pl.program_id(0)
+    n_words = pl.num_programs(0)
+
+    def start(word):
+        slot = word % depth
+        for r in range(_ROWS):
+            row = idx_ref[word * _ROWS + r]
+            pltpu.make_async_copy(
+                tab_hbm.at[pl.ds(row, 1), :],
+                buf.at[slot, pl.ds(r, 1), :],
+                sems.at[slot, r],
+            ).start()
+
+    def wait(word):
+        slot = word % depth
+        for r in range(_ROWS):
+            row = idx_ref[word * _ROWS + r]
+            pltpu.make_async_copy(
+                tab_hbm.at[pl.ds(row, 1), :],
+                buf.at[slot, pl.ds(r, 1), :],
+                sems.at[slot, r],
+            ).wait()
+
+    if depth == 1:
+        start(g)
+        wait(g)
+    else:
+        @pl.when(g == 0)
+        def _():
+            for d in range(depth):
+                @pl.when(d < n_words)
+                def _(d=d):
+                    start(d)
+
+        wait(g)
+
+    o_ref[...] = buf[g % depth]
+
+    if depth > 1:
+        @pl.when(g + depth < n_words)
+        def _():
+            start(g + depth)
+
+
+@functools.partial(jax.jit, static_argnames=("depth", "interpret"))
+def gather_ff(table: jnp.ndarray, idx: jnp.ndarray, *, depth: int = 4,
+              interpret: bool = True) -> jnp.ndarray:
+    """table: [R, C]; idx: [n] int32 with n % 8 == 0. Returns [n, C]."""
+    r, c = table.shape
+    n = idx.shape[0]
+    assert n % _ROWS == 0, n
+    kernel = functools.partial(_kernel, depth=depth, cols=c)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(n // _ROWS,),
+            in_specs=[pl.BlockSpec(memory_space=pl.ANY)],
+            out_specs=pl.BlockSpec((_ROWS, c), lambda g, idx: (g, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((depth, _ROWS, c), table.dtype),
+                pltpu.SemaphoreType.DMA((depth, _ROWS)),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((n, c), table.dtype),
+        interpret=interpret,
+    )(idx, table)

@@ -1,0 +1,33 @@
+"""Public op wrapper + cost model for ff_gather."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.ff_gather.kernel import gather_ff
+from repro.kernels.ff_gather.ref import gather_ref
+from repro.kernels.ff_matmul.ops import KernelCost
+
+
+def gather_cost(n: int, cols: int, *, depth: int = 4,
+                dtype=jnp.float32) -> KernelCost:
+    itemsize = jnp.dtype(dtype).itemsize
+    return KernelCost(
+        flops=0.0,
+        hbm_bytes=float(2 * n * cols * itemsize + n * 4),
+        vmem_bytes=depth * 8 * cols * itemsize,
+    )
+
+
+def gather(table, idx, *, depth: int = 4, mode: str = "ff",
+           interpret: bool = True):
+    """rows = table[idx]; mode="ff"|"baseline"(depth=1)|"ref"."""
+    if mode == "ref":
+        return gather_ref(table, idx)
+    n = idx.shape[0]
+    pad = (-n) % 8
+    idx_p = jnp.pad(idx.astype(jnp.int32), (0, pad))
+    if mode == "baseline":
+        depth = 1
+    out = gather_ff(table, idx_p, depth=depth, interpret=interpret)
+    return out[:n]

@@ -1,0 +1,7 @@
+"""Pure-jnp oracle for ff_gather."""
+
+import jax.numpy as jnp
+
+
+def gather_ref(table: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(table, idx, axis=0)

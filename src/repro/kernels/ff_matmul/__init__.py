@@ -1,0 +1,4 @@
+from repro.kernels.ff_matmul.ops import KernelCost, matmul, matmul_cost
+from repro.kernels.ff_matmul.ref import matmul_ref
+
+__all__ = ["KernelCost", "matmul", "matmul_cost", "matmul_ref"]

@@ -1,0 +1,118 @@
+"""Feed-forward (DAE) blocked matmul: C = A @ B.
+
+The paper's transformation, applied to the canonical MXU workload:
+
+* memory kernel  = async HBM->VMEM copies of A/B tiles, issued ``depth-1``
+  words ahead through two ring pipes (one per operand);
+* compute kernel = MXU dot over the landed tiles, accumulating in VMEM f32;
+* pipe           = the ring buffers; ``streams`` splits each tile copy into
+  parallel sub-DMAs (multi-producer M2C2 analogue).
+
+``depth=1`` degenerates to synchronous copy-then-compute — the "single
+work-item" baseline used by the Table-2 benchmark.
+
+Word schedule: 1-D grid over (mi, ni, ki) with k innermost; the output block
+(mi, ni) is revisited for nK consecutive steps and written on the last.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.pipe import Pipe
+from repro.kernels.dae import RingPipe, dae_acquire, dae_release, ring_scratch
+
+
+def _kernel(a_hbm, b_hbm, o_ref, acc, a_buf, a_sems, b_buf, b_sems,
+            *, nm: int, nn: int, nk: int, a_pipe: Pipe, b_pipe: Pipe,
+            out_dtype):
+    g = pl.program_id(0)
+    n_words = nm * nn * nk
+    ki = g % nk
+    ni = (g // nk) % nn
+    mi = g // (nk * nn)
+    bm, bk = a_pipe.tile
+    _, bn = b_pipe.tile
+
+    def a_slice(word):
+        w_ki = word % nk
+        w_mi = word // (nk * nn)
+        return a_hbm.at[pl.ds(w_mi * bm, bm), pl.ds(w_ki * bk, bk)]
+
+    def b_slice(word):
+        w_ki = word % nk
+        w_ni = (word // nk) % nn
+        return b_hbm.at[pl.ds(w_ki * bk, bk), pl.ds(w_ni * bn, bn)]
+
+    pipes = [
+        RingPipe(a_buf, a_sems, a_pipe, a_slice),
+        RingPipe(b_buf, b_sems, b_pipe, b_slice),
+    ]
+    dae_acquire(g, n_words, pipes, a_pipe.depth)
+
+    @pl.when(ki == 0)
+    def _():
+        acc[...] = jnp.zeros_like(acc)
+
+    a_tile = pipes[0].word_ref(g)[...]
+    b_tile = pipes[1].word_ref(g)[...]
+    acc[...] += jnp.dot(a_tile, b_tile, preferred_element_type=jnp.float32)
+
+    @pl.when(ki == nk - 1)
+    def _():
+        o_ref[...] = acc[...].astype(out_dtype)
+
+    dae_release(g, n_words, pipes, a_pipe.depth)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block", "depth", "streams", "out_dtype", "interpret"))
+def matmul_ff(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    block: Tuple[int, int, int] = (128, 128, 128),
+    depth: int = 2,
+    streams: int = 1,
+    out_dtype=None,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """DAE-pipelined matmul. Shapes must be multiples of ``block`` (use
+    ops.matmul for auto-padding)."""
+    (m, k), (k2, n) = a.shape, b.shape
+    assert k == k2, (a.shape, b.shape)
+    bm, bn, bk = block
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (a.shape, b.shape, block)
+    nm, nn, nk = m // bm, n // bn, k // bk
+    out_dtype = out_dtype or a.dtype
+
+    a_pipe = Pipe(tile=(bm, bk), dtype=a.dtype, depth=depth, streams=streams)
+    b_pipe = Pipe(tile=(bk, bn), dtype=b.dtype, depth=depth, streams=streams)
+
+    kernel = functools.partial(
+        _kernel, nm=nm, nn=nn, nk=nk, a_pipe=a_pipe, b_pipe=b_pipe,
+        out_dtype=out_dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=(nm * nn * nk,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec(
+            (bm, bn), lambda g: (g // (nn * nk), (g // nk) % nn)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bm, bn), jnp.float32),
+            *ring_scratch(a_pipe),
+            *ring_scratch(b_pipe),
+        ],
+        interpret=interpret,
+    )(a, b)

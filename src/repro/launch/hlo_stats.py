@@ -1,0 +1,92 @@
+"""Collective statistics from compiled HLO text.
+
+``cost_analysis()`` has no collective term, so the roofline's third term is
+parsed from the (per-device, SPMD-partitioned) HLO: every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute op's result
+bytes, its replica-group size, and a ring-model wire-time estimate:
+
+    all-reduce          2 (g-1)/g * bytes / link_bw
+    all-gather          (g-1)/g * bytes / link_bw      (bytes = gathered)
+    reduce-scatter      (g-1)/g * bytes / link_bw      (bytes = input)
+    all-to-all          (g-1)/g * bytes / link_bw
+    collective-permute  bytes / link_bw
+
+The dry-run applies this to *unrolled* L=1/L=2 program variants (no while
+loops -> nothing hidden in loop bodies) and extrapolates per layer.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+        "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    return 1
+
+
+def collective_stats(hlo_text: str, link_bw: float = 50e9) -> Dict:
+    """Returns {op: {count, bytes, seconds}, total_bytes, total_seconds}."""
+    stats = {op: {"count": 0, "bytes": 0.0, "seconds": 0.0} for op in _OPS}
+    for line in hlo_text.splitlines():
+        for op in _OPS:
+            token = f" {op}("
+            token_start = f" {op}-start("
+            if token not in line and token_start not in line:
+                continue
+            if f"{op}-done" in line:
+                continue
+            eq = line.find("= ")
+            if eq < 0:
+                continue
+            opn = line.find(token_start if token_start in line else token)
+            result_type = line[eq + 2:opn + 1]
+            nbytes = _shape_bytes(result_type)
+            g = max(_group_size(line), 1)
+            if op == "all-reduce":
+                sec = 2.0 * (g - 1) / g * nbytes / link_bw
+            elif op == "collective-permute":
+                sec = nbytes / link_bw
+            else:
+                sec = (g - 1) / g * nbytes / link_bw
+            stats[op]["count"] += 1
+            stats[op]["bytes"] += float(nbytes)
+            stats[op]["seconds"] += sec
+            break
+    stats["total_bytes"] = sum(stats[o]["bytes"] for o in _OPS)
+    stats["total_seconds"] = sum(stats[o]["seconds"] for o in _OPS)
+    stats["total_count"] = sum(stats[o]["count"] for o in _OPS)
+    return stats

@@ -1,0 +1,28 @@
+"""Production meshes.
+
+Single pod: 16 x 16 = 256 chips (data x model).
+Multi-pod:  2 x 16 x 16 = 512 chips (pod x data x model) — the "pod" axis is
+data-parallel across ICI-connected pods (DCN at real scale); the sharding
+rules map logical "batch" to ("pod", "data") so the same model code serves
+both meshes.
+
+``make_production_mesh`` is a *function* (never a module-level constant) so
+importing this module touches no jax device state.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_axis: int = 2):
+    """Small mesh over whatever devices exist (tests / examples on CPU)."""
+    n = len(jax.devices())
+    model_axis = min(model_axis, n)
+    return jax.make_mesh((n // model_axis, model_axis), ("data", "model"))

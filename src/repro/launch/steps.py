@@ -1,0 +1,126 @@
+"""Step builders: train / prefill / decode, with shardings derived from the
+logical rules. Used identically by the real trainer, the server, and the
+dry-run (which lowers these very functions with ShapeDtypeStructs).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.optim import adafactor, adamw
+from repro.optim.compression import QuantizedAccumulator
+from repro.runtime import sharding as shlib
+
+
+def opt_init_and_update(optimizer: str, opt_cfg=None):
+    if optimizer == "adafactor":
+        cfg = opt_cfg or adafactor.AdafactorConfig()
+        return (lambda p: adafactor.init(p),
+                lambda g, s, p: adafactor.update(cfg, g, s, p))
+    cfg = opt_cfg or adamw.AdamWConfig()
+    return (lambda p: adamw.init(p),
+            lambda g, s, p: adamw.update(cfg, g, s, p))
+
+
+def opt_state_axes(optimizer: str, param_axes):
+    """Logical axes for the optimizer state (mirrors param axes)."""
+    if optimizer == "adafactor":
+        def st(ax):
+            if len(ax) >= 2:
+                return {"vr": tuple(ax[:-1]), "vc": tuple(ax[:-2]) + (ax[-1],)}
+            return {"v": tuple(ax)}
+        return {"v": jax.tree.map(st, param_axes,
+                                  is_leaf=lambda x: isinstance(x, tuple)),
+                "step": ()}
+    return {"m": param_axes, "v": param_axes, "step": ()}
+
+
+def make_train_step(model, *, optimizer: str = "adamw", opt_cfg=None,
+                    accum_steps: int = 1, quantized_accum: bool = False):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics). With accum_steps > 1 the batch splits into microbatches along
+    dim 0 and gradients accumulate (optionally in int8 w/ error feedback)
+    before one optimizer update — collective-frugal: the DP all-reduce
+    happens once per step, not per microbatch."""
+    _, opt_update = opt_init_and_update(optimizer, opt_cfg)
+    grad_fn = jax.value_and_grad(model.loss, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        if accum_steps == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape(accum_steps, x.shape[0] // accum_steps,
+                                    *x.shape[1:]), batch)
+
+            if quantized_accum:
+                acc0 = QuantizedAccumulator.init(params)
+
+                def body(acc, mb):
+                    (l, m), g = grad_fn(params, mb)
+                    return QuantizedAccumulator.add(acc, g), (l, m)
+
+                acc, (losses, metricses) = jax.lax.scan(body, acc0, micro)
+                grads = jax.tree.map(lambda g: g / accum_steps,
+                                     QuantizedAccumulator.read(acc))
+            else:
+                acc0 = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+                def body(acc, mb):
+                    (l, m), g = grad_fn(params, mb)
+                    return jax.tree.map(
+                        lambda a, gg: a + gg.astype(jnp.float32), acc, g), \
+                        (l, m)
+
+                acc, (losses, metricses) = jax.lax.scan(body, acc0, micro)
+                grads = jax.tree.map(lambda g: g / accum_steps, acc)
+            loss = jnp.mean(losses)
+            metrics = jax.tree.map(jnp.mean, metricses)
+        new_params, new_opt, opt_metrics = opt_update(grads, opt_state, params)
+        return new_params, new_opt, {**metrics, **opt_metrics}
+
+    return train_step
+
+
+def make_prefill_step(model):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch)
+    return prefill_step
+
+
+def make_decode_step(model):
+    def decode_step(params, batch, cache):
+        logits, new_cache = model.decode_step(params, batch, cache)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, logits, new_cache
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# Sharding assembly for the jit entry points
+# ---------------------------------------------------------------------------
+
+
+def shardings_for_cell(model, shape: ShapeConfig, ctx, *,
+                       optimizer: str = "adamw"):
+    """(in_shardings pytrees per entry point) for the given mesh context."""
+    tupleish = lambda x: isinstance(x, tuple) and all(
+        a is None or isinstance(a, str) for a in x)
+    sh = lambda axes_tree: jax.tree.map(
+        lambda ax: shlib.sharding_for(ax, ctx), axes_tree, is_leaf=tupleish)
+
+    p_sh = sh(model.param_axes())
+    batch_sh = sh(model.input_axes(shape))
+    out = {"params": p_sh, "batch": batch_sh}
+    if shape.kind == "train":
+        out["opt"] = sh(opt_state_axes(optimizer, model.param_axes()))
+    if shape.kind == "decode":
+        _, cache_axes = model.cache_spec(shape)
+        out["cache"] = sh(cache_axes)
+    return out

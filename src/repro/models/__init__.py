@@ -1,0 +1,6 @@
+"""repro.models — model families (dense GQA, MoE, MLA, Mamba2 hybrid,
+RWKV6, encoder-decoder, VLM) behind one registry interface."""
+
+from repro.models.registry import build_model, build_model_by_id
+
+__all__ = ["build_model", "build_model_by_id"]

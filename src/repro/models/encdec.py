@@ -1,0 +1,184 @@
+"""Whisper-style encoder-decoder backbone.
+
+Per the assignment, the conv/audio frontend is a STUB: ``input_specs``
+provides precomputed frame embeddings [B, n_frames, d_model] (what the two
+conv layers would emit). The encoder is a non-causal transformer over
+frames; the decoder is a causal transformer with cross-attention whose K/V
+are computed once from the encoder output and reused every decode step (a
+pipe-resident stream in the ff path).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import transformer
+from repro.runtime.sharding import constrain
+
+
+def specs(cfg: ArchConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    enc_layer = {
+        "norm1": L.norm_specs(cfg.norm, d),
+        "attn": transformer.attn_specs(cfg),
+        "norm2": L.norm_specs(cfg.norm, d),
+        "ffn": L.mlp_specs(d, cfg.d_ff, cfg.act),
+    }
+    dec_layer = {
+        "norm1": L.norm_specs(cfg.norm, d),
+        "self_attn": transformer.attn_specs(cfg),
+        "norm_x": L.norm_specs(cfg.norm, d),
+        "cross_attn": transformer.attn_specs(cfg),
+        "norm2": L.norm_specs(cfg.norm, d),
+        "ffn": L.mlp_specs(d, cfg.d_ff, cfg.act),
+    }
+
+    def stack(one, n):
+        return jax.tree.map(
+            lambda s: L.ParamSpec((n, *s.shape), ("layers", *s.axes),
+                                  s.dtype, s.init, s.scale),
+            one, is_leaf=L.is_spec)
+
+    return {
+        "enc_layers": stack(enc_layer, cfg.n_enc_layers),
+        "enc_norm": L.norm_specs(cfg.norm, d),
+        "dec_layers": stack(dec_layer, cfg.n_layers),
+        "dec_norm": L.norm_specs(cfg.norm, d),
+        "dec_pos": L.ParamSpec((4096 * 9, d), (None, "embed"), init="small"),
+    }
+
+
+def _mha(cfg, p, xq, xkv, *, causal, positions_q, positions_kv=None,
+         cache=None, lengths=None):
+    """Generic (self or cross) attention using transformer attn weights.
+    RoPE is skipped (whisper uses absolute positions)."""
+    dt = xq.dtype
+    q = jnp.einsum("bsd,dhk->bshk", xq, p["wq"].astype(dt))
+    if cache is not None and "k" in cache and xkv is None:
+        k, v = cache["k"], cache["v"]     # precomputed cross K/V
+        new_cache = cache
+        out = L.attention_xla(q, k, v, causal=False)
+    else:
+        k = jnp.einsum("bsd,dhk->bshk", xkv, p["wk"].astype(dt))
+        v = jnp.einsum("bsd,dhk->bshk", xkv, p["wv"].astype(dt))
+        if cache is not None:   # decode self-attn append
+            k = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice_in_dim(
+                c, u, i, axis=0))(cache["k"], k, lengths)
+            v = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice_in_dim(
+                c, u, i, axis=0))(cache["v"], v, lengths)
+            out = L.decode_attention_op(q[:, 0], k, v, lengths + 1,
+                                        impl="xla")[:, None]
+            new_cache = {"k": k, "v": v}
+            return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt)), \
+                new_cache
+        out = L.attention_xla(q, k, v, causal=causal)
+        new_cache = {"k": k, "v": v}
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt)), new_cache
+
+
+def encode(cfg: ArchConfig, params, frames):
+    """frames: [B,F,D] stub embeddings -> encoder output [B,F,D]."""
+    x = frames + L.sinusoidal_positions(frames.shape[1], cfg.d_model) \
+        .astype(frames.dtype)[None]
+    x = constrain(x, ("batch", "frames", "embed"))
+
+    def body(xx, p):
+        h = L.norm_apply(cfg.norm, xx, p["norm1"])
+        a, _ = _mha(cfg, p["attn"], h, h, causal=False,
+                    positions_q=None)
+        xx = xx + a
+        h = L.norm_apply(cfg.norm, xx, p["norm2"])
+        xx = xx + L.mlp_apply(p["ffn"], h, cfg.act)
+        return constrain(xx, ("batch", "frames", "embed")), None
+
+    if cfg.remat != "none":
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    else:
+        for i in range(cfg.n_enc_layers):
+            x, _ = body(x, jax.tree.map(lambda a: a[i], params["enc_layers"]))
+    return L.norm_apply(cfg.norm, x, params["enc_norm"])
+
+
+def decode_stack(cfg: ArchConfig, params, x, enc_out, *, positions,
+                 caches=None, lengths=None, want_cache=False):
+    """x: [B,S,D] token embeddings (+pos added by caller).
+    caches (decode): {"self": stacked, "cross": stacked}. enc_out may be
+    None when cross K/V are cached."""
+
+    def layer(p, xx, self_cache, cross_cache):
+        h = L.norm_apply(cfg.norm, xx, p["norm1"])
+        a, new_self = _mha(cfg, p["self_attn"], h, h, causal=True,
+                           positions_q=positions, cache=self_cache,
+                           lengths=lengths)
+        xx = xx + a
+        h = L.norm_apply(cfg.norm, xx, p["norm_x"])
+        a, new_cross = _mha(cfg, p["cross_attn"], h,
+                            enc_out if cross_cache is None else None,
+                            causal=False, positions_q=None, cache=cross_cache)
+        xx = xx + a
+        h = L.norm_apply(cfg.norm, xx, p["norm2"])
+        xx = xx + L.mlp_apply(p["ffn"], h, cfg.act)
+        xx = constrain(xx, ("batch", "seq", "embed"))
+        return xx, new_self, new_cross
+
+    if cfg.remat != "none":
+        layer = jax.checkpoint(layer,
+                               policy=jax.checkpoint_policies.nothing_saveable)
+
+    if not cfg.scan_layers:
+        outs = []
+        for i in range(cfg.n_layers):
+            p = jax.tree.map(lambda a: a[i], params["dec_layers"])
+            sc = (jax.tree.map(lambda a: a[i], caches["self"])
+                  if caches is not None else None)
+            cc = (jax.tree.map(lambda a: a[i], caches["cross"])
+                  if caches is not None else None)
+            x, new_self, new_cross = layer(p, x, sc, cc)
+            outs.append((new_self, new_cross))
+        if want_cache or caches is not None:
+            stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+            new_caches = {"self": stacked[0], "cross": stacked[1]}
+        else:
+            new_caches = None
+    elif caches is None:
+        def body(xx, p):
+            xx, new_self, new_cross = layer(p, xx, None, None)
+            ys = (new_self, new_cross) if want_cache else None
+            return xx, ys
+        x, ys = jax.lax.scan(body, x, params["dec_layers"])
+        new_caches = {"self": ys[0], "cross": ys[1]} if want_cache else None
+    else:
+        def body(xx, xs):
+            p, sc, cc = xs
+            xx, new_self, new_cross = layer(p, xx, sc, cc)
+            return xx, (new_self, new_cross)
+        x, ys = jax.lax.scan(
+            body, x, (params["dec_layers"], caches["self"], caches["cross"]))
+        new_caches = {"self": ys[0], "cross": ys[1]}
+    x = L.norm_apply(cfg.norm, x, params["dec_norm"])
+    return x, new_caches
+
+
+def cache_spec(cfg: ArchConfig, batch: int, s_max: int):
+    kv = (batch, s_max, cfg.n_kv_heads, cfg.hd)
+    cross = (batch, cfg.n_frames, cfg.n_kv_heads, cfg.hd)
+    ls = cfg.n_layers
+    spec = {
+        "self": {"k": jax.ShapeDtypeStruct((ls, *kv), cfg.cdtype),
+                 "v": jax.ShapeDtypeStruct((ls, *kv), cfg.cdtype)},
+        "cross": {"k": jax.ShapeDtypeStruct((ls, *cross), cfg.cdtype),
+                  "v": jax.ShapeDtypeStruct((ls, *cross), cfg.cdtype)},
+    }
+    ax_kv = ("layers", "batch", "kv", "kv_heads", None)
+    ax_cross = ("layers", "batch", "frames", "kv_heads", None)
+    axes = {"self": {"k": ax_kv, "v": ax_kv},
+            "cross": {"k": ax_cross, "v": ax_cross}}
+    return spec, axes

@@ -1,0 +1,143 @@
+"""zamba2 hybrid stack: Mamba2 blocks + one shared attention block.
+
+Layer layout (attn_every_n = k): segments of k Mamba2 blocks, each segment
+followed by one application of the *shared* transformer block (GQA attention
++ MLP, single weight set, one KV cache per application). 54 Mamba2 layers /
+k=6 -> 9 shared-block applications. The Mamba2 segment is scanned (stacked
+params); shared-block applications are a short unrolled loop over their own
+KV caches.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import mamba2, transformer
+from repro.runtime.sharding import constrain
+
+
+def _n_segments(cfg: ArchConfig) -> int:
+    k = cfg.attn_every_n or cfg.n_layers
+    assert cfg.n_layers % k == 0, (cfg.n_layers, k)
+    return cfg.n_layers // k
+
+
+def specs(cfg: ArchConfig) -> Dict[str, Any]:
+    k = cfg.attn_every_n or cfg.n_layers
+    one = {
+        "norm": L.norm_specs(cfg.norm, cfg.d_model),
+        "mixer": mamba2.mamba_specs(cfg),
+    }
+    stacked = jax.tree.map(
+        lambda s: L.ParamSpec((cfg.n_layers, *s.shape), ("layers", *s.axes),
+                              s.dtype, s.init, s.scale),
+        one, is_leaf=L.is_spec)
+    shared = {
+        "norm1": L.norm_specs(cfg.norm, cfg.d_model),
+        "attn": transformer.attn_specs(cfg),
+        "norm2": L.norm_specs(cfg.norm, cfg.d_model),
+        "ffn": L.mlp_specs(cfg.d_model, cfg.d_ff, cfg.act),
+    }
+    return {"mamba_layers": stacked, "shared": shared}
+
+
+def _mamba_layer(cfg, p, x, cache, lengths):
+    h = L.norm_apply(cfg.norm, x, p["norm"])
+    out, new_cache = mamba2.mamba_apply(cfg, p["mixer"], h, cache=cache,
+                                        lengths=lengths)
+    return x + out, new_cache
+
+
+def _shared_block(cfg, p, x, positions, cache, lengths):
+    h = L.norm_apply(cfg.norm, x, p["norm1"])
+    attn_out, new_cache = transformer.attn_apply(
+        cfg, p["attn"], h, positions=positions, cache=cache, lengths=lengths)
+    x = x + attn_out
+    h = L.norm_apply(cfg.norm, x, p["norm2"])
+    x = x + L.mlp_apply(p["ffn"], h, cfg.act)
+    return constrain(x, ("batch", "seq", "embed")), new_cache
+
+
+def forward(cfg: ArchConfig, params, x, *, positions, caches=None,
+            lengths=None, want_cache: bool = False):
+    """x: [B,S,D]. caches: {"mamba": stacked [L,...], "attn": [n_seg, ...]}.
+    Returns (x, new_caches, aux)."""
+    nseg = _n_segments(cfg)
+    k = cfg.attn_every_n or cfg.n_layers
+    remat = cfg.remat != "none"
+
+    mamba_fn = _mamba_layer
+    shared_fn = _shared_block
+    if remat:
+        policy = jax.checkpoint_policies.nothing_saveable
+        mamba_fn = jax.checkpoint(mamba_fn, policy=policy, static_argnums=(0,))
+        shared_fn = jax.checkpoint(shared_fn, policy=policy,
+                                   static_argnums=(0,))
+
+    new_mamba_caches = []
+    new_attn_caches = []
+    lp = params["mamba_layers"]
+    for seg in range(nseg):
+        seg_params = jax.tree.map(lambda a: a[seg * k:(seg + 1) * k], lp)
+        seg_caches = None
+        if caches is not None:
+            seg_caches = jax.tree.map(
+                lambda a: a[seg * k:(seg + 1) * k], caches["mamba"])
+
+        if cfg.scan_layers:
+            if caches is not None:
+                def body(carry, xs):
+                    p, cache = xs
+                    xx, nc = mamba_fn(cfg, p, carry, cache, lengths)
+                    return xx, nc
+                x, seg_new = jax.lax.scan(body, x, (seg_params, seg_caches))
+            else:
+                def body_nc(carry, p):
+                    xx, nc = mamba_fn(cfg, p, carry, None, lengths)
+                    if not want_cache:
+                        nc = None
+                    return xx, nc
+                x, seg_new = jax.lax.scan(body_nc, x, seg_params)
+        else:
+            outs = []
+            for i in range(k):
+                p_i = jax.tree.map(lambda a: a[i], seg_params)
+                c_i = (jax.tree.map(lambda a: a[i], seg_caches)
+                       if seg_caches is not None else None)
+                x, nc = mamba_fn(cfg, p_i, x, c_i, lengths)
+                outs.append(nc if (want_cache or caches is not None) else None)
+            seg_new = (jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+                       if outs[0] is not None else None)
+        new_mamba_caches.append(seg_new)
+        attn_cache = caches["attn"][seg] if caches is not None else None
+        x, nac = shared_fn(cfg, params["shared"], x, positions, attn_cache,
+                           lengths)
+        if want_cache or caches is not None:
+            new_attn_caches.append(nac)
+
+    new_caches = None
+    if want_cache or caches is not None:
+        mamba_stack = jax.tree.map(
+            lambda *xs: jnp.concatenate(xs, axis=0), *new_mamba_caches) \
+            if new_mamba_caches[0] is not None else None
+        new_caches = {"mamba": mamba_stack, "attn": new_attn_caches}
+    return x, new_caches, jnp.zeros((), jnp.float32)
+
+
+def cache_spec(cfg: ArchConfig, batch: int, s_max: int):
+    nseg = _n_segments(cfg)
+    m_one, m_axes = mamba2.mamba_cache_spec(cfg, batch)
+    m_spec = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((cfg.n_layers, *s.shape), s.dtype),
+        m_one)
+    m_axes = jax.tree.map(lambda a: ("layers", *a), m_axes,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    a_one, a_axes = transformer.attn_cache_spec(cfg, batch, s_max)
+    spec = {"mamba": m_spec, "attn": [a_one] * nseg}
+    axes = {"mamba": m_axes, "attn": [a_axes] * nseg}
+    return spec, axes

@@ -1,0 +1,362 @@
+"""Shared building blocks for all model families.
+
+Params are plain nested dicts of arrays. Each model module declares its
+parameters as :class:`ParamSpec` trees, which give us three views for free:
+
+  * ``init``      — materialized random params (smoke tests / real training)
+  * ``abstract``  — ShapeDtypeStruct stand-ins (dry-run lowering, no alloc)
+  * ``axes``      — logical sharding axes per leaf (runtime.sharding rules)
+
+Attention/scan/matmul call sites go through ``repro.kernels`` wrappers with
+an ``impl`` switch: "xla" (HLO-visible reference path — used when lowering
+for the dry-run and on CPU) or "ff" (the feed-forward Pallas kernels — the
+TPU fast path, validated in interpret mode).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.runtime.sharding import constrain
+
+# ---------------------------------------------------------------------------
+# Param specs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    dtype: Any = jnp.float32
+    init: str = "normal"          # "normal" | "zeros" | "ones" | "small"
+    scale: Optional[float] = None  # override fan-in scale
+
+    def initializer(self, key: jax.Array) -> jnp.ndarray:
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, self.dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, self.dtype)
+        if self.init == "small":
+            return 0.01 * jax.random.normal(key, self.shape, self.dtype)
+        # fan-in = product of all non-output dims, skipping the stacked layer
+        # dim (a [d, heads, hd] projection must scale by 1/sqrt(d), not
+        # 1/sqrt(heads) — the old shape[-2] rule exploded wide attention)
+        dims = self.shape
+        if self.axes and self.axes[0] == "layers":
+            dims = dims[1:]
+        fan_in = max(int(np.prod(dims[:-1])), 1) if len(dims) >= 2 \
+            else dims[-1]
+        scale = self.scale if self.scale is not None else 1.0 / math.sqrt(fan_in)
+        return scale * jax.random.normal(key, self.shape, self.dtype)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def init_params(specs, key: jax.Array):
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(
+        treedef, [s.initializer(k) for s, k in zip(leaves, keys)])
+
+
+def abstract_params(specs):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), specs, is_leaf=is_spec)
+
+
+def param_axes(specs):
+    return jax.tree.map(lambda s: s.axes, specs, is_leaf=is_spec)
+
+
+def param_count(specs) -> int:
+    return sum(int(np.prod(s.shape))
+               for s in jax.tree.leaves(specs, is_leaf=is_spec))
+
+
+# ---------------------------------------------------------------------------
+# Norms / activations
+# ---------------------------------------------------------------------------
+
+
+# NOTE (§Perf it5, refuted): applying the norm scale in bf16 (f32 stats
+# only) was tried to shrink boundary collectives; collective bytes did not
+# move and HBM bytes **rose** 18% (lost fusion in the backward). Reverted to
+# f32-internal norms.
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w.astype(jnp.float32)).astype(dt)
+
+
+def layernorm(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+              eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+def norm_apply(kind: str, x, p):
+    if kind == "rmsnorm":
+        return rmsnorm(x, p["w"])
+    return layernorm(x, p["w"], p["b"])
+
+
+def norm_specs(kind: str, d: int) -> Dict[str, ParamSpec]:
+    s = {"w": ParamSpec((d,), ("embed",), init="ones")}
+    if kind == "layernorm":
+        s["b"] = ParamSpec((d,), ("embed",), init="zeros")
+    return s
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+         dim: Optional[int] = None) -> jnp.ndarray:
+    """Rotary embedding. x: [..., S, H, D]; positions: [..., S]."""
+    d = dim or x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs   # [..., S, half]
+    cos = jnp.cos(ang)[..., None, :]                            # [..., S, 1, half]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:d]
+    rot = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    if d < x.shape[-1]:
+        rot = jnp.concatenate([rot, x[..., d:]], axis=-1)
+    return rot.astype(x.dtype)
+
+
+def sinusoidal_positions(s: int, d: int) -> jnp.ndarray:
+    pos = np.arange(s)[:, None]
+    dim = np.arange(d // 2)[None, :]
+    ang = pos / np.power(10000.0, 2 * dim / d)
+    return jnp.asarray(
+        np.concatenate([np.sin(ang), np.cos(ang)], axis=-1), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA) — XLA reference path + kernel fast path
+# ---------------------------------------------------------------------------
+
+
+_Q_CHUNK = 1024
+
+
+def _attention_xla_block(q, k, v, *, causal, q_offset, positions_q=None,
+                         lengths=None) -> jnp.ndarray:
+    b, s, h, d = q.shape
+    kvh = k.shape[2]
+    group = h // kvh
+    qg = q.reshape(b, s, kvh, group, d)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(d)
+    skv = k.shape[1]
+    if causal:
+        qpos = (positions_q if positions_q is not None
+                else q_offset + jnp.arange(s))
+        mask = qpos[:, None] >= jnp.arange(skv)[None, :]
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+    if lengths is not None:
+        mask = jnp.arange(skv)[None, :] < lengths[:, None]      # [B, Skv]
+        scores = jnp.where(mask[:, None, None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", p, v.astype(jnp.float32))
+    return out.reshape(b, s, h, v.shape[-1]).astype(q.dtype)
+
+
+def attention_xla(q, k, v, *, causal: bool, positions_q=None,
+                  lengths=None) -> jnp.ndarray:
+    """q: [B,S,H,D]; k,v: [B,Skv,KVH,D] -> [B,S,H,D]. HLO-visible path.
+
+    This is the roofline *baseline*: scores materialize through HBM exactly
+    like the paper's baseline round-trips global memory. Long sequences are
+    processed in q-chunks (scan) so the live score block stays bounded at
+    [B, H, _Q_CHUNK, Skv] — the un-fused-but-not-insane baseline a careful
+    XLA user would write.
+    """
+    b, s, h, d = q.shape
+    if s <= _Q_CHUNK or s % _Q_CHUNK != 0 or positions_q is not None:
+        return _attention_xla_block(q, k, v, causal=causal, q_offset=0,
+                                    positions_q=positions_q, lengths=lengths)
+    # statically unrolled q-chunks: a lax.map here would hide the chunk body
+    # from cost_analysis (loop bodies are counted once — DESIGN.md §4)
+    outs = []
+    for i in range(s // _Q_CHUNK):
+        qc = jax.lax.slice_in_dim(q, i * _Q_CHUNK, (i + 1) * _Q_CHUNK, axis=1)
+        outs.append(_attention_xla_block(qc, k, v, causal=causal,
+                                         q_offset=i * _Q_CHUNK,
+                                         lengths=lengths))
+    return jnp.concatenate(outs, axis=1)
+
+
+def attention_op(q, k, v, *, causal: bool, impl: str = "xla",
+                 lengths=None, interpret: bool = True) -> jnp.ndarray:
+    """Dispatch between the XLA path and the ff_attention Pallas kernel."""
+    if impl == "xla":
+        return attention_xla(q, k, v, causal=causal, lengths=lengths)
+    from repro.kernels.ff_attention import attention as ff_attn
+    b, s, h, d = q.shape
+    kvh = k.shape[2]
+    qh = q.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    kh = k.transpose(0, 2, 1, 3).reshape(b * kvh, k.shape[1], d)
+    vh = v.transpose(0, 2, 1, 3).reshape(b * kvh, v.shape[1], d)
+    block_q = min(128, max(8, s))
+    out = ff_attn(qh, kh, vh, kv_groups=h // kvh, causal=causal,
+                  block_q=block_q, block_kv=128, mode="ff",
+                  interpret=interpret)
+    return out.reshape(b, h, s, d).transpose(0, 2, 1, 3)
+
+
+def decode_attention_op(q, k, v, lengths, *, impl: str = "xla",
+                        interpret: bool = True) -> jnp.ndarray:
+    """q: [B,H,D] one token; k,v: [B,Skv,KVH,D] cache; lengths: [B]."""
+    if impl == "xla":
+        out = attention_xla(q[:, None], k, v, causal=False, lengths=lengths)
+        return out[:, 0]
+    from repro.kernels.ff_decode_attention import decode_attention as ff_dec
+    kh = k.transpose(0, 2, 1, 3)
+    vh = v.transpose(0, 2, 1, 3)
+    return ff_dec(q, kh, vh, lengths, mode="ff", interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def mlp_specs(d: int, f: int, act: str) -> Dict[str, ParamSpec]:
+    s = {"wo": ParamSpec((f, d), ("mlp", "embed"))}
+    if act == "swiglu":
+        s["wi"] = ParamSpec((d, 2 * f), ("embed", "mlp"))
+    else:
+        s["wi"] = ParamSpec((d, f), ("embed", "mlp"))
+        s["bi"] = ParamSpec((f,), ("mlp",), init="zeros")
+        s["bo"] = ParamSpec((d,), ("embed",), init="zeros")
+    return s
+
+
+def mlp_apply(p, x, act: str) -> jnp.ndarray:
+    dt = x.dtype
+    if act == "swiglu":
+        gate_up = x @ p["wi"].astype(dt)
+        gate, up = jnp.split(gate_up, 2, axis=-1)
+        h = jax.nn.silu(gate) * up
+        return h @ p["wo"].astype(dt)
+    h = x @ p["wi"].astype(dt) + p["bi"].astype(dt)
+    h = jax.nn.gelu(h)
+    return h @ p["wo"].astype(dt) + p["bo"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding / loss
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def bf16_grad_barrier(x):
+    """Identity whose cotangent is cast to bf16: placed between the (f32)
+    loss and the decoder stack so every backward all-reduce below runs in
+    bf16 — halves TP-boundary collective bytes (§Perf 'bf16 grads')."""
+    return x
+
+
+def _bgb_fwd(x):
+    return x, None
+
+
+def _bgb_bwd(_, ct):
+    return (ct.astype(jnp.bfloat16).astype(ct.dtype)
+            if ct.dtype == jnp.float32 else ct,)
+
+
+# NOTE: casting f32->bf16->f32 keeps dtypes consistent for jax while
+# quantizing the cotangent mantissa; XLA then propagates the cheap form.
+bf16_grad_barrier.defvjp(_bgb_fwd, _bgb_bwd)
+
+
+@jax.custom_vjp
+def bf16_grad_cast(x):
+    """Identity fwd; bwd converts the cotangent to true bf16 (dtype change).
+    Valid where the primal is bf16 (cotangent dtype must match primal)."""
+    return x
+
+
+def _bgc_fwd(x):
+    return x, jnp.zeros((0,), x.dtype)    # dtype token (valid JAX residual)
+
+
+def _bgc_bwd(tok, ct):
+    return (ct.astype(tok.dtype),)
+
+
+bf16_grad_cast.defvjp(_bgc_fwd, _bgc_bwd)
+
+
+def embed_specs(vocab: int, d: int) -> ParamSpec:
+    return ParamSpec((vocab, d), ("vocab", "embed"), scale=0.02)
+
+
+def embed_lookup(table: jnp.ndarray, tokens: jnp.ndarray,
+                 compute_dtype) -> jnp.ndarray:
+    out = jnp.take(table, tokens, axis=0).astype(compute_dtype)
+    return constrain(out, ("batch", "seq", "embed"))
+
+
+def unembed_logits(x: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
+    """x: [B,S,D] -> logits [B,S,V] (bf16, sharded batch x vocab)."""
+    logits = x @ table.T.astype(x.dtype)
+    return constrain(logits, ("batch", "seq", "vocab"))
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  z_loss: float = 1e-4) -> jnp.ndarray:
+    """Mean token CE in f32, with a z-loss regularizer (stabilizes bf16)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = lse - gold
+    if z_loss:
+        loss = loss + z_loss * lse ** 2
+    return jnp.mean(loss)
+
+
+def chunked_unembed_loss(x: jnp.ndarray, table: jnp.ndarray,
+                         labels: jnp.ndarray, n_chunks: int,
+                         z_loss: float = 1e-4) -> jnp.ndarray:
+    """CE without materializing the full [B,S,V] logits: the unembed matmul
+    + softmax run per sequence chunk (statically unrolled so cost_analysis
+    sees every chunk). Cuts the dominant train-step temp (f32 logits) by
+    ``n_chunks`` — §Perf iteration 'chunked-vocab loss'."""
+    b, s, d = x.shape
+    assert s % n_chunks == 0, (s, n_chunks)
+    cs = s // n_chunks
+    total = jnp.zeros((), jnp.float32)
+    wt = table.T.astype(x.dtype)
+    for i in range(n_chunks):
+        xc = jax.lax.slice_in_dim(x, i * cs, (i + 1) * cs, axis=1)
+        lc = jax.lax.slice_in_dim(labels, i * cs, (i + 1) * cs, axis=1)
+        logits = constrain(xc @ wt, ("batch", "seq", "vocab"))
+        logits = logits.astype(jnp.float32)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        piece = lse - gold
+        if z_loss:
+            piece = piece + z_loss * lse ** 2
+        total = total + jnp.sum(piece)
+    return total / (b * s)

@@ -1,0 +1,149 @@
+"""Mamba2 (SSD) mixer + the zamba2 hybrid stack.
+
+The SSD recurrence h_t = exp(A dt_t) h_{t-1} + dt_t B_t (x) x_t is the
+paper's data loop-carried dependency (Fig. 3) in the flesh: the kernel path
+(``ff_chunk_scan``) keeps the state in the consumer while x/B/C/dt stream
+DLCD-free through pipes; the XLA path (``chunk_scan_xla``) uses the same
+chunked math with a log-depth associative scan across chunk boundaries
+(HLO-visible for the roofline).
+
+zamba2: a stack of Mamba2 blocks with one *shared* full-attention
+transformer block applied every ``attn_every_n`` layers (weights reused
+across applications, each application with its own KV cache), per the
+Zamba2 architecture. LoRA adapters on the shared block are omitted (noted
+in DESIGN.md).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.kernels.ff_chunk_scan import chunk_scan, chunk_scan_xla
+from repro.models import layers as L
+from repro.runtime.sharding import constrain
+
+
+def _dims(cfg: ArchConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    n_heads = d_in // cfg.ssm_head_dim
+    return d_in, n_heads, cfg.ssm_state, cfg.ssm_head_dim
+
+
+def mamba_specs(cfg: ArchConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    d_in, nh, n, hd = _dims(cfg)
+    conv_dim = d_in + 2 * n
+    return {
+        "in_proj": L.ParamSpec((d, 2 * d_in + 2 * n + nh), ("embed", "mlp")),
+        "conv_w": L.ParamSpec((cfg.conv_width, conv_dim), (None, "mlp"),
+                              init="small"),
+        "conv_b": L.ParamSpec((conv_dim,), ("mlp",), init="zeros"),
+        "a_log": L.ParamSpec((nh,), ("ssm_heads",), init="zeros"),
+        "dt_bias": L.ParamSpec((nh,), ("ssm_heads",), init="zeros"),
+        "d_skip": L.ParamSpec((nh,), ("ssm_heads",), init="ones"),
+        "norm_w": L.ParamSpec((d_in,), ("mlp",), init="ones"),
+        "out_proj": L.ParamSpec((d_in, d), ("mlp", "embed")),
+    }
+
+
+def _split_proj(cfg: ArchConfig, zxbcdt):
+    d_in, nh, n, hd = _dims(cfg)
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in:d_in + d_in + 2 * n]
+    dt = zxbcdt[..., -nh:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b, prev: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv along time. xbc: [B,S,C]; w: [W,C].
+    prev: [B,W-1,C] carried state (decode). Returns (y, new_prev)."""
+    width = w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((xbc.shape[0], width - 1, xbc.shape[2]), xbc.dtype)
+    xx = jnp.concatenate([prev, xbc], axis=1)
+    y = sum(xx[:, i:i + xbc.shape[1], :] * w[i][None, None, :]
+            for i in range(width))
+    y = jax.nn.silu(y + b[None, None, :])
+    new_prev = xx[:, -(width - 1):, :]
+    return y, new_prev
+
+
+def mamba_apply(cfg: ArchConfig, p, x, *, positions=None, cache=None,
+                lengths=None) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """x: [B,S,D]. cache (decode): {"conv": [B,W-1,C], "h": [B*NH,N,HD]}."""
+    b, s, d = x.shape
+    d_in, nh, n, hd = _dims(cfg)
+    zxbcdt = x @ p["in_proj"].astype(x.dtype)
+    z, xbc, dt_raw = _split_proj(cfg, zxbcdt)
+    conv_prev = cache["conv"] if cache is not None else None
+    xbc, conv_new = _causal_conv(xbc, p["conv_w"].astype(x.dtype),
+                                 p["conv_b"].astype(x.dtype), conv_prev)
+    x_ssm = xbc[..., :d_in]
+    b_ssm = xbc[..., d_in:d_in + n]
+    c_ssm = xbc[..., d_in + n:]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                         p["dt_bias"][None, None, :])             # [B,S,NH]
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))                  # [NH]
+    log_w = dt * a[None, None, :]                                 # <= 0
+
+    xs = x_ssm.reshape(b, s, nh, hd)
+    v = (xs.astype(jnp.float32) * dt[..., None]).astype(x.dtype)
+
+    def to_bh(t):                                                 # [B,S,*]->[B*NH,S,*]
+        return jnp.broadcast_to(t[:, :, None, :], (b, s, nh, t.shape[-1])) \
+            .transpose(0, 2, 1, 3).reshape(b * nh, s, t.shape[-1])
+
+    q_bh = to_bh(c_ssm)
+    k_bh = to_bh(b_ssm)
+    v_bh = xs.transpose(0, 2, 1, 3).reshape(b * nh, s, hd)
+    v_bh = (v_bh.astype(jnp.float32) *
+            dt.transpose(0, 2, 1).reshape(b * nh, s, 1)).astype(x.dtype)
+    lw_bh = jnp.broadcast_to(
+        log_w.transpose(0, 2, 1).reshape(b * nh, s, 1), (b * nh, s, n))
+
+    if cache is None:
+        mode = cfg.scan_impl if cfg.scan_impl in ("xla", "xla_tiled", "ff") \
+            else "xla"
+        y = chunk_scan(q_bh, k_bh, v_bh, lw_bh, inclusive=True, mode=mode,
+                       chunk=cfg.scan_chunk)
+        # final state for prefill->decode handoff:
+        #   h_S = sum_s exp(cw_S - cw_s) k_s (x) v_s   (exponents <= 0)
+        cw = jnp.cumsum(lw_bh.astype(jnp.float32), axis=1)        # [BH,S,N]
+        k2 = k_bh.astype(jnp.float32) * jnp.exp(cw[:, -1:, :] - cw)
+        h_final = jnp.einsum("bsn,bsp->bnp", k2, v_bh.astype(jnp.float32))
+        new_cache = {"conv": conv_new, "h": h_final}
+    else:
+        # single-token recurrence
+        h = cache["h"]                                            # [B*NH,N,HD]
+        w1 = jnp.exp(lw_bh[:, 0, :])                              # [B*NH,N]
+        kv = k_bh[:, 0, :, None] * v_bh[:, 0, None, :]            # [B*NH,N,HD]
+        h = w1[:, :, None] * h + kv.astype(jnp.float32)
+        y = jnp.einsum("bn,bnp->bp", q_bh[:, 0].astype(jnp.float32), h)
+        y = y[:, None, :].astype(x.dtype)                         # [B*NH,1,HD]
+        new_cache = {"conv": conv_new, "h": h}
+
+    y = y.reshape(b, nh, s, hd).transpose(0, 2, 1, 3)             # [B,S,NH,HD]
+    y = y + xs * p["d_skip"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(b, s, d_in)
+    y = L.rmsnorm(y * jax.nn.silu(z), p["norm_w"])
+    y = constrain(y, ("batch", "seq", "mlp"))
+    out = y @ p["out_proj"].astype(x.dtype)
+    return out, new_cache
+
+
+def mamba_cache_spec(cfg: ArchConfig, batch: int):
+    d_in, nh, n, hd = _dims(cfg)
+    conv_dim = d_in + 2 * n
+    spec = {
+        "conv": jax.ShapeDtypeStruct((batch, cfg.conv_width - 1, conv_dim),
+                                     cfg.cdtype),
+        "h": jax.ShapeDtypeStruct((batch * nh, n, hd), jnp.float32),
+    }
+    axes = {"conv": ("batch", None, "mlp"),
+            "h": ("ssm_heads", "state", None)}
+    return spec, axes

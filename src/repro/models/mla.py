@@ -1,0 +1,96 @@
+"""Multi-head Latent Attention (deepseek-v2) mixer.
+
+KV is compressed to a ``kv_lora_rank`` latent plus a single shared RoPE key;
+the decode cache stores only ``[B, S, kv_lora + rope]`` — ~10x smaller than a
+GQA cache at these dims. Paper mapping: the latent cache is a *small regular
+stream* (the paper's favourable prefetching-LSU case); decode cells for
+deepseek are the least memory-bound of the MoE archs in the roofline table.
+
+Shapes (lite defaults): d=2048, H=16, kv_lora=512, nope=128, rope=64, v=128.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.runtime.sharding import constrain
+
+
+def mla_specs(cfg: ArchConfig) -> Dict[str, Any]:
+    d, h = cfg.d_model, cfg.n_heads
+    r, nope, rope_d, vd = (cfg.kv_lora_rank, cfg.qk_nope_dim,
+                           cfg.qk_rope_dim, cfg.v_head_dim)
+    return {
+        "wq": L.ParamSpec((d, h, nope + rope_d), ("embed", "heads", None)),
+        "wdkv": L.ParamSpec((d, r + rope_d), ("embed", None)),
+        "kv_norm": L.norm_specs("rmsnorm", r),
+        "wuk": L.ParamSpec((r, h, nope), (None, "heads", None)),
+        "wuv": L.ParamSpec((r, h, vd), (None, "heads", None)),
+        "wo": L.ParamSpec((h, vd, d), ("heads", None, "embed")),
+    }
+
+
+def _compress(cfg: ArchConfig, p, x):
+    """x: [B,S,D] -> latent c_kv [B,S,r], k_rope [B,S,rope]."""
+    dt = x.dtype
+    ckv = x @ p["wdkv"].astype(dt)
+    c, k_rope = jnp.split(ckv, [cfg.kv_lora_rank], axis=-1)
+    c = L.rmsnorm(c, p["kv_norm"]["w"])
+    return c, k_rope
+
+
+def _decompress(cfg: ArchConfig, p, c, k_rope, positions):
+    """latent -> per-head k [B,S,H,nope+rope], v [B,S,H,vd]."""
+    dt = c.dtype
+    k_nope = jnp.einsum("bsr,rhk->bshk", c, p["wuk"].astype(dt))
+    v = jnp.einsum("bsr,rhk->bshk", c, p["wuv"].astype(dt))
+    k_rope = L.rope(k_rope[:, :, None, :], positions, cfg.rope_theta)
+    h = cfg.n_heads
+    k_rope = jnp.broadcast_to(k_rope, (*k_nope.shape[:3], cfg.qk_rope_dim))
+    k = jnp.concatenate([k_nope, k_rope], axis=-1)
+    return k, v
+
+
+def mla_apply(cfg: ArchConfig, p, x, *, positions, cache=None,
+              lengths=None) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    q_nope, q_rope = jnp.split(q, [cfg.qk_nope_dim], axis=-1)
+    q_rope = L.rope(q_rope, positions, cfg.rope_theta)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+
+    if cache is None:
+        c, k_rope = _compress(cfg, p, x)
+        k, v = _decompress(cfg, p, c, k_rope, positions)
+        q = constrain(q, ("batch", "seq", "heads", None))
+        out = L.attention_op(q, k, v, causal=True, impl=cfg.attn_impl)
+        new_cache = {"c": c, "k_rope": k_rope}
+    else:
+        c_new, k_rope_new = _compress(cfg, p, x)
+        cc = jax.vmap(lambda cch, u, i: jax.lax.dynamic_update_slice_in_dim(
+            cch, u, i, axis=0))(cache["c"], c_new, lengths)
+        cr = jax.vmap(lambda cch, u, i: jax.lax.dynamic_update_slice_in_dim(
+            cch, u, i, axis=0))(cache["k_rope"], k_rope_new, lengths)
+        # decompress the whole cached latent stream (explicit form)
+        s_max = cc.shape[1]
+        pos = jnp.arange(s_max)[None, :]
+        k, v = _decompress(cfg, p, cc, cr, pos)
+        out = L.decode_attention_op(q[:, 0], k, v, lengths + 1,
+                                    impl="xla")[:, None]
+        new_cache = {"c": cc, "k_rope": cr}
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt)), new_cache
+
+
+def mla_cache_spec(cfg: ArchConfig, batch: int, s_max: int):
+    spec = {
+        "c": jax.ShapeDtypeStruct((batch, s_max, cfg.kv_lora_rank), cfg.cdtype),
+        "k_rope": jax.ShapeDtypeStruct((batch, s_max, cfg.qk_rope_dim),
+                                       cfg.cdtype),
+    }
+    axes = {"c": ("batch", "kv", None), "k_rope": ("batch", "kv", None)}
+    return spec, axes

@@ -1,0 +1,202 @@
+"""Mixture-of-experts FFN (grok-1, deepseek-v2-lite).
+
+Capacity-based top-k routing with scatter dispatch / gather combine:
+tokens are placed into a ``[E, C, d]`` dispatch buffer (expert-sharded under
+the "expert" rule — EP over the model axis), experts run as one batched
+einsum, and results gather back weighted by router probs. Overflow beyond
+capacity ``C = ceil(T/E * k * capacity_factor)`` is dropped (standard
+token-dropping MoE).
+
+Paper mapping: the dispatch/combine *is* the irregular-gather microbenchmark
+at system scale — under EP sharding XLA materializes it as all-to-alls, which
+the roofline's collective term picks up (deepseek/grok are the most
+collective-bound cells in EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.runtime.sharding import constrain, current
+
+
+def moe_ffn_specs(cfg: ArchConfig) -> Dict[str, Any]:
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    s = {
+        "router": L.ParamSpec((d, e), ("embed", None), scale=0.02),
+        "w1": L.ParamSpec((e, d, 2 * f), ("expert", "embed", "mlp")),
+        "w2": L.ParamSpec((e, f, d), ("expert", "mlp", "embed")),
+    }
+    if cfg.n_shared_experts:
+        fs = cfg.n_shared_experts * cfg.moe_d_ff
+        s["shared"] = L.mlp_specs(d, fs, "swiglu")
+    return s
+
+
+def _dispatch_indices(gates: jnp.ndarray, top_k: int, capacity: int):
+    """gates: [T, E] router probs. Returns (expert_idx [T,k], probs [T,k],
+    slot [T,k], keep [T,k]) with capacity-ranked slots per expert."""
+    t, e = gates.shape
+    probs, idx = jax.lax.top_k(gates, top_k)                    # [T,k]
+    probs = probs / (jnp.sum(probs, axis=-1, keepdims=True) + 1e-9)
+    count = jnp.zeros((e,), jnp.int32)
+    slots = []
+    for k in range(top_k):
+        oh = jax.nn.one_hot(idx[:, k], e, dtype=jnp.int32)       # [T,E]
+        rank = jnp.cumsum(oh, axis=0) - 1                        # [T,E]
+        r = jnp.take_along_axis(rank, idx[:, k:k + 1], axis=1)[:, 0]
+        slots.append(r + count[idx[:, k]])
+        count = count + jnp.sum(oh, axis=0)
+    slot = jnp.stack(slots, axis=1)                              # [T,k]
+    keep = slot < capacity
+    return idx, probs, slot, keep
+
+
+def _batch_shards() -> int:
+    """How many ways the token (batch) dim is sharded under current rules."""
+    ctx = current()
+    if ctx is None:
+        return 1
+    target = ctx.rules.get("batch")
+    if target is None:
+        return 1
+    tgt = (target,) if isinstance(target, str) else target
+    n = 1
+    for a in tgt:
+        n *= ctx.axis_size(a)
+    return n
+
+
+def _local_dispatch_apply(cfg: ArchConfig, p, x
+                          ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Hierarchical dispatch (§Perf, 'MoE local dispatch'): slot ranks and
+    capacity are computed *per data shard*, and the dispatch buffer's
+    capacity dim is laid out [E, shards, C_local] with the shard dim aligned
+    to the token sharding — the scatter/gather becomes shard-local and the
+    only cross-device movement is the expert-parallel all-to-all, instead of
+    the global-buffer all-gathers of the naive path."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    t = b * s
+    shards = _batch_shards()
+    if t % shards:
+        shards = 1
+    tl = t // shards
+    xf = x.reshape(t, d)
+
+    gates = jax.nn.softmax(
+        (xf.astype(jnp.float32) @ p["router"].astype(jnp.float32)), axis=-1)
+    probs_k, idx = jax.lax.top_k(gates, k)
+    probs_k = probs_k / (jnp.sum(probs_k, axis=-1, keepdims=True) + 1e-9)
+
+    me = jnp.mean(gates, axis=0)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(idx, e, dtype=jnp.float32), axis=1), axis=0)
+    aux = e * jnp.sum(me * ce)
+
+    cap_l = int(tl // e * k * cfg.capacity_factor) + 1
+    cap_l = -(-cap_l // 8) * 8
+    idx_s = idx.reshape(shards, tl, k)
+    count = jnp.zeros((shards, e), jnp.int32)
+    slots = []
+    for kk in range(k):
+        oh = jax.nn.one_hot(idx_s[:, :, kk], e, dtype=jnp.int32)  # [D,tl,E]
+        rank = jnp.cumsum(oh, axis=1) - 1
+        r = jnp.take_along_axis(rank, idx_s[:, :, kk:kk + 1], axis=2)[..., 0]
+        base = jnp.take_along_axis(count, idx_s[:, :, kk], axis=1)
+        slots.append(r + base)
+        count = count + jnp.sum(oh, axis=1)
+    slot = jnp.stack(slots, axis=2)                               # [D,tl,k]
+    keep = slot < cap_l
+
+    # vmapped shard-local scatter: the buffer is *born* sharded on its
+    # leading (data) dim, so the partitioner never materializes a global
+    # buffer (the naive path all-gathers the whole [E,C,d] buffer — the
+    # 181 GiB/layer pathology in the baseline grok HLO)
+    flat_local = idx_s * cap_l + slot                             # [D,tl,k]
+    contrib = xf.reshape(shards, tl, 1, d) * keep[..., None].astype(x.dtype)
+    contrib = jnp.broadcast_to(contrib, (shards, tl, k, d))
+    buf_s = jnp.zeros((shards, e * cap_l, d), x.dtype)
+    buf_s = constrain(buf_s, ("batch", None, "embed"))
+    buf_s = jax.vmap(
+        lambda bb, ix, cc: bb.at[ix.reshape(-1)].add(
+            cc.reshape(-1, d), mode="drop"))(buf_s, flat_local, contrib)
+    buf = buf_s.reshape(shards, e, cap_l, d).transpose(1, 0, 2, 3) \
+        .reshape(e, shards * cap_l, d)
+    buf = constrain(buf, ("expert", "exp_cap", "embed"))
+
+    dt = x.dtype
+    h = jnp.einsum("ecd,edf->ecf", buf, p["w1"].astype(dt))
+    gate, up = jnp.split(h, 2, axis=-1)
+    h = jax.nn.silu(gate) * up
+    y = jnp.einsum("ecf,efd->ecd", h, p["w2"].astype(dt))
+    y = constrain(y, ("expert", "exp_cap", "embed"))
+
+    y_s = y.reshape(e, shards, cap_l, d).transpose(1, 0, 2, 3) \
+        .reshape(shards, e * cap_l, d)
+    y_s = constrain(y_s, ("batch", None, "embed"))
+    picked = jax.vmap(lambda yy, ix: yy[ix.reshape(-1)])(
+        y_s, flat_local).reshape(t, k, d)
+    w = (probs_k.reshape(t, k) *
+         keep.reshape(t, k).astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("tkd,tk->td", picked, w).reshape(b, s, d)
+    if cfg.n_shared_experts:
+        out = out + L.mlp_apply(p["shared"], x, "swiglu")
+    return out, aux.astype(jnp.float32)
+
+
+def moe_ffn_apply(cfg: ArchConfig, p, x) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: [B,S,D] -> (out [B,S,D], aux load-balance loss)."""
+    if cfg.moe_local_dispatch:
+        return _local_dispatch_apply(cfg, p, x)
+    b, s, d = x.shape
+    e, k, f = cfg.n_experts, cfg.top_k, cfg.moe_d_ff
+    t = b * s
+    xf = x.reshape(t, d)
+    capacity = int(t // e * k * cfg.capacity_factor) + 1
+    # round capacity so the buffer's capacity dim stays mesh-divisible
+    gran = 2048 if t >= (1 << 17) else 8
+    capacity = -(-capacity // gran) * gran
+
+    gates = jax.nn.softmax(
+        (xf.astype(jnp.float32) @ p["router"].astype(jnp.float32)), axis=-1)
+    idx, probs, slot, keep = _dispatch_indices(gates, k, capacity)
+
+    # load-balance aux loss (Switch-style)
+    me = jnp.mean(gates, axis=0)                                  # [E]
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(idx, e, dtype=jnp.float32), axis=1), axis=0)
+    aux = e * jnp.sum(me * ce)
+
+    # scatter tokens into the expert-sharded dispatch buffer
+    flat_idx = (idx * capacity + slot)                            # [T,k]
+    buf = jnp.zeros((e * capacity, d), x.dtype)
+    contrib = xf[:, None, :] * keep[:, :, None].astype(x.dtype)   # [T,k,D]
+    buf = buf.at[flat_idx.reshape(-1)].add(
+        contrib.reshape(t * k, d), mode="drop")
+    # "exp_cap" shards the capacity dim when experts themselves cannot be
+    # sharded (grok: 8 experts vs 16-way model axis)
+    buf = constrain(buf.reshape(e, capacity, d), ("expert", "exp_cap", "embed"))
+
+    # batched expert FFN (swiglu)
+    dt = x.dtype
+    h = jnp.einsum("ecd,edf->ecf", buf, p["w1"].astype(dt))
+    gate, up = jnp.split(h, 2, axis=-1)
+    h = jax.nn.silu(gate) * up
+    y = jnp.einsum("ecf,efd->ecd", h, p["w2"].astype(dt))
+    y = constrain(y, ("expert", "exp_cap", "embed"))
+
+    # gather/combine
+    flat_y = y.reshape(e * capacity, d)
+    picked = flat_y[flat_idx.reshape(-1)].reshape(t, k, d)
+    w = (probs * keep.astype(jnp.float32)).astype(x.dtype)        # [T,k]
+    out = jnp.einsum("tkd,tk->td", picked, w).reshape(b, s, d)
+
+    if cfg.n_shared_experts:
+        out = out + L.mlp_apply(p["shared"], x, "swiglu")
+    return out, aux.astype(jnp.float32)

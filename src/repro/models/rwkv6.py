@@ -1,0 +1,172 @@
+"""RWKV6 ("Finch") — attention-free, data-dependent decay.
+
+Per layer: a time-mixing block whose wkv operator is the *exclusive* gated
+linear-attention scan with a per-channel data-dependent decay w_t and a
+current-token bonus u (both the paper-relevant DLCD and the assignment's
+"data-dependent decay"), plus a channel-mixing (squared-ReLU) FFN. Token
+shift uses the static per-channel lerp plus a low-rank data-dependent term
+for the decay, following the RWKV6 design (per-component LoRA mixers are
+reduced to the decay path; noted in DESIGN.md).
+
+Applicability note (DESIGN.md §Arch-applicability): rwkv6 has no attention
+operator, so ff_attention does not apply; the feed-forward technique applies
+to the wkv scan via ff_chunk_scan (exclusive mode + u bonus).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.kernels.ff_chunk_scan import chunk_scan
+from repro.models import layers as L
+from repro.runtime.sharding import constrain
+
+_DECAY_LORA = 64
+
+
+def _dims(cfg: ArchConfig):
+    hd = cfg.ssm_head_dim or 64
+    return cfg.d_model // hd, hd     # (n_heads, head_dim)
+
+
+def time_mix_specs(cfg: ArchConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    nh, hd = _dims(cfg)
+    return {
+        "mu_r": L.ParamSpec((d,), ("embed",), init="small"),
+        "mu_k": L.ParamSpec((d,), ("embed",), init="small"),
+        "mu_v": L.ParamSpec((d,), ("embed",), init="small"),
+        "mu_w": L.ParamSpec((d,), ("embed",), init="small"),
+        "mu_g": L.ParamSpec((d,), ("embed",), init="small"),
+        "wr": L.ParamSpec((d, d), ("embed", "heads")),
+        "wk": L.ParamSpec((d, d), ("embed", "heads")),
+        "wv": L.ParamSpec((d, d), ("embed", "heads")),
+        "wg": L.ParamSpec((d, d), ("embed", "heads")),
+        "w0": L.ParamSpec((d,), ("heads",), init="small"),
+        "w_lora_a": L.ParamSpec((d, _DECAY_LORA), ("embed", None), init="small"),
+        "w_lora_b": L.ParamSpec((_DECAY_LORA, d), (None, "heads"), init="small"),
+        "u": L.ParamSpec((nh, hd), ("ssm_heads", None), init="small"),
+        "ln_w": L.ParamSpec((d,), ("heads",), init="ones"),
+        "ln_b": L.ParamSpec((d,), ("heads",), init="zeros"),
+        "wo": L.ParamSpec((d, d), ("heads", "embed")),
+    }
+
+
+def channel_mix_specs(cfg: ArchConfig) -> Dict[str, Any]:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "mu_k": L.ParamSpec((d,), ("embed",), init="small"),
+        "mu_r": L.ParamSpec((d,), ("embed",), init="small"),
+        "wk": L.ParamSpec((d, f), ("embed", "mlp")),
+        "wv": L.ParamSpec((f, d), ("mlp", "embed")),
+        "wr": L.ParamSpec((d, d), ("embed", None)),
+    }
+
+
+def _shift(x, prev: Optional[jnp.ndarray]):
+    """Token shift: x_{t-1} (zeros / carried state at t=0).
+    x: [B,S,D]; prev: [B,D] or None. Returns (shifted, new_prev)."""
+    if x.shape[1] == 1 and prev is not None:
+        return prev[:, None, :], x[:, -1, :]
+    pad = jnp.zeros_like(x[:, :1]) if prev is None else prev[:, None, :]
+    return jnp.concatenate([pad, x[:, :-1]], axis=1), x[:, -1, :]
+
+
+def _lerp(x, x_prev, mu):
+    return x + (x_prev - x) * mu[None, None, :].astype(x.dtype)
+
+
+def time_mix_apply(cfg: ArchConfig, p, x, *, cache=None
+                   ) -> Tuple[jnp.ndarray, Dict]:
+    b, s, d = x.shape
+    nh, hd = _dims(cfg)
+    prev = cache["shift_tm"] if cache is not None else None
+    x_prev, new_prev = _shift(x, prev)
+
+    r = _lerp(x, x_prev, p["mu_r"]) @ p["wr"].astype(x.dtype)
+    k = _lerp(x, x_prev, p["mu_k"]) @ p["wk"].astype(x.dtype)
+    v = _lerp(x, x_prev, p["mu_v"]) @ p["wv"].astype(x.dtype)
+    g = _lerp(x, x_prev, p["mu_g"]) @ p["wg"].astype(x.dtype)
+    xw = _lerp(x, x_prev, p["mu_w"])
+    w_dd = jnp.tanh(xw @ p["w_lora_a"].astype(x.dtype)) @ \
+        p["w_lora_b"].astype(x.dtype)
+    # log decay, guaranteed < 0: w = exp(-exp(w0 + lora)). Carried in the
+    # compute dtype across sharding boundaries (§Perf rwkv6 it6); the scan
+    # re-upcasts for its f32 cumsum.
+    log_w = -jnp.exp(jnp.clip(
+        p["w0"][None, None, :].astype(jnp.float32) + w_dd.astype(jnp.float32),
+        -8.0, 8.0))
+    log_w = log_w.astype(x.dtype)                                 # [B,S,D]
+
+    def heads(t):
+        return t.reshape(b, s, nh, hd).transpose(0, 2, 1, 3) \
+            .reshape(b * nh, s, hd)
+
+    u = jnp.broadcast_to(p["u"][None], (b, nh, hd)).reshape(b * nh, hd)
+
+    if cache is None or x.shape[1] > 1:
+        mode = cfg.scan_impl if cfg.scan_impl in ("xla", "xla_tiled", "ff") \
+            else "xla"
+        y = chunk_scan(heads(r), heads(k), heads(v), heads(log_w),
+                       u, inclusive=False, mode=mode, chunk=cfg.scan_chunk)
+        # final state for prefill->decode handoff (low-precision operands,
+        # f32 accumulation)
+        lw = heads(log_w).astype(jnp.float32)
+        cw = jnp.cumsum(lw, axis=1)
+        k2 = heads(k) * jnp.exp(cw[:, -1:, :] - cw).astype(x.dtype)
+        h_new = jnp.einsum("bsn,bsp->bnp", k2, heads(v),
+                           preferred_element_type=jnp.float32)
+        if cache is not None and "h" in cache:
+            # prefill on top of existing state: decay it through the window
+            h_new = h_new + jnp.exp(cw[:, -1, :])[:, :, None] * cache["h"]
+    else:
+        h = cache["h"]                                            # [B*NH,N,P]
+        rr, kk, vv = heads(r)[:, 0], heads(k)[:, 0], heads(v)[:, 0]
+        lw = heads(log_w)[:, 0].astype(jnp.float32)
+        kv = kk[:, :, None].astype(jnp.float32) * vv[:, None, :]
+        y = jnp.einsum("bn,bnp->bp",
+                       rr.astype(jnp.float32),
+                       h + u[:, :, None] * kv)[:, None, :].astype(x.dtype)
+        h_new = jnp.exp(lw)[:, :, None] * h + kv
+        y = y.reshape(b * nh, 1, hd)
+
+    y = y.reshape(b, nh, s, hd).transpose(0, 2, 1, 3).reshape(b, s, d)
+    # per-head group norm
+    y = y.reshape(b, s, nh, hd)
+    y = (y - jnp.mean(y, axis=-1, keepdims=True)) * jax.lax.rsqrt(
+        jnp.var(y, axis=-1, keepdims=True) + 64e-5)
+    y = y.reshape(b, s, d) * p["ln_w"].astype(x.dtype) + \
+        p["ln_b"].astype(x.dtype)
+    y = y * jax.nn.silu(g)
+    y = constrain(y, ("batch", "seq", "heads"))
+    out = y @ p["wo"].astype(x.dtype)
+    return out, {"shift_tm": new_prev, "h": h_new}
+
+
+def channel_mix_apply(cfg: ArchConfig, p, x, *, cache=None
+                      ) -> Tuple[jnp.ndarray, Dict]:
+    prev = cache["shift_cm"] if cache is not None else None
+    x_prev, new_prev = _shift(x, prev)
+    xk = _lerp(x, x_prev, p["mu_k"])
+    xr = _lerp(x, x_prev, p["mu_r"])
+    k = jnp.square(jax.nn.relu(xk @ p["wk"].astype(x.dtype)))
+    k = constrain(k, ("batch", "seq", "mlp"))
+    kv = k @ p["wv"].astype(x.dtype)
+    out = jax.nn.sigmoid(xr @ p["wr"].astype(x.dtype)) * kv
+    return out, {"shift_cm": new_prev}
+
+
+def rwkv_cache_spec(cfg: ArchConfig, batch: int):
+    nh, hd = _dims(cfg)
+    spec = {
+        "shift_tm": jax.ShapeDtypeStruct((batch, cfg.d_model), cfg.cdtype),
+        "shift_cm": jax.ShapeDtypeStruct((batch, cfg.d_model), cfg.cdtype),
+        "h": jax.ShapeDtypeStruct((batch * nh, hd, hd), jnp.float32),
+    }
+    axes = {"shift_tm": ("batch", "embed"), "shift_cm": ("batch", "embed"),
+            "h": ("ssm_heads", "state", None)}
+    return spec, axes

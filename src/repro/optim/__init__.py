@@ -1,0 +1,5 @@
+"""repro.optim — sharded optimizers + gradient compression."""
+
+from repro.optim import adafactor, adamw, compression
+
+__all__ = ["adafactor", "adamw", "compression"]

@@ -1,0 +1,71 @@
+"""Adafactor (factored second moment) — the memory-frugal option for the
+largest archs (grok-1 314B does not fit AdamW fp32 state on one 256-chip
+pod; see EXPERIMENTS.md §Dry-run)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdafactorConfig:
+    lr_peak: float = 1e-3
+    decay: float = 0.8
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+    weight_decay: float = 0.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2
+
+
+def init(params) -> Dict[str, Any]:
+    def st(p):
+        if _factored(p.shape):
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+    return {"v": jax.tree.map(st, params,
+                              is_leaf=lambda x: isinstance(x, jnp.ndarray)),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def update(cfg: AdafactorConfig, grads, state, params):
+    step = state["step"] + 1
+    sf = step.astype(jnp.float32)
+    lr = cfg.lr_peak * jnp.minimum(1.0, sf / cfg.warmup_steps) * \
+        jax.lax.rsqrt(jnp.maximum(sf, cfg.warmup_steps))
+    beta = 1.0 - sf ** (-cfg.decay)
+
+    def upd(p, g, v):
+        g = g.astype(jnp.float32)
+        g2 = g * g + cfg.eps
+        if _factored(p.shape):
+            vr = beta * v["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+            vc = beta * v["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+            denom = (vr[..., None] / jnp.mean(vr, axis=-1, keepdims=True)[..., None]) \
+                * vc[..., None, :]
+            u = g * jax.lax.rsqrt(denom + cfg.eps)
+            nv = {"vr": vr, "vc": vc}
+        else:
+            nv = {"v": beta * v["v"] + (1 - beta) * g2}
+            u = g * jax.lax.rsqrt(nv["v"] + cfg.eps)
+        rms = jnp.sqrt(jnp.mean(u * u) + 1e-12)
+        u = u / jnp.maximum(1.0, rms / cfg.clip_threshold)
+        p32 = p.astype(jnp.float32) * (1 - cfg.weight_decay * lr) - lr * u
+        return p32.astype(p.dtype), nv
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_v = treedef.flatten_up_to(state["v"])
+    outs = [upd(p, g, v) for p, g, v in zip(flat_p, flat_g, flat_v)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in outs])
+    new_v = jax.tree.unflatten(treedef, [o[1] for o in outs])
+    return new_params, {"v": new_v, "step": step}, {"lr": lr}

@@ -1,0 +1,17 @@
+"""repro.runtime — distributed substrate: sharding rules, overlap
+collectives, pipeline parallelism, fault tolerance, elastic remesh,
+straggler mitigation."""
+
+from repro.runtime import (
+    collectives,
+    elastic,
+    fault_tolerance,
+    pipeline_parallel,
+    sharding,
+    stragglers,
+)
+
+__all__ = [
+    "collectives", "elastic", "fault_tolerance", "pipeline_parallel",
+    "sharding", "stragglers",
+]

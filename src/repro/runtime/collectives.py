@@ -1,0 +1,90 @@
+"""Overlap-friendly collectives (shard_map building blocks).
+
+The feed-forward model at mesh scale: communication is the producer, the MXU
+is the consumer, and `ppermute` rings are the pipes. ``allgather_matmul``
+and ``matmul_reducescatter`` interleave each ring hop with the partial
+matmul it feeds — the collective version of the kernel-level DAE schedule
+(hop k+1 is in flight while chunk k multiplies), XLA overlaps the
+independent ppermute with the dot.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def ring_allgather(x: jnp.ndarray, axis_name: str) -> jnp.ndarray:
+    """All-gather along ``axis_name`` via a ppermute ring (shard_map body).
+    Returns the concatenation over devices along dim 0."""
+    n = jax.lax.axis_size(axis_name)
+    idx = jax.lax.axis_index(axis_name)
+    perm = [(i, (i + 1) % n) for i in range(n)]
+    chunks = [x]
+    cur = x
+    for _ in range(n - 1):
+        cur = jax.lax.ppermute(cur, axis_name, perm)
+        chunks.append(cur)
+
+    def roll_back(i, c):
+        return c  # chunk i holds shard (idx - i) mod n
+
+    # reorder so output is device-order independent
+    out = jnp.zeros((n, *x.shape), x.dtype)
+    for i, c in enumerate(chunks):
+        src = (idx - i) % n
+        out = out.at[src].set(c)
+    return out.reshape(n * x.shape[0], *x.shape[1:])
+
+
+def allgather_matmul(x_shard: jnp.ndarray, w: jnp.ndarray,
+                     axis_name: str) -> jnp.ndarray:
+    """Compute (allgather(x) @ w) with per-hop overlap.
+
+    x_shard: [m_shard, k] (sharded on rows over ``axis_name``); w: [k, n]
+    replicated. Returns [m_shard * n_dev, n] — each hop's chunk multiplies
+    while the next hop's ppermute is in flight.
+    """
+    n_dev = jax.lax.axis_size(axis_name)
+    idx = jax.lax.axis_index(axis_name)
+    perm = [(i, (i + 1) % n_dev) for i in range(n_dev)]
+    m = x_shard.shape[0]
+    out = jnp.zeros((n_dev, m, w.shape[1]),
+                    jnp.promote_types(x_shard.dtype, w.dtype))
+    cur = x_shard
+    for i in range(n_dev):
+        src = (idx - i) % n_dev
+        part = jnp.dot(cur, w, preferred_element_type=out.dtype)  # consumer
+        out = out.at[src].set(part)
+        if i + 1 < n_dev:
+            cur = jax.lax.ppermute(cur, axis_name, perm)          # producer
+    return out.reshape(n_dev * m, w.shape[1])
+
+
+def matmul_reducescatter(x: jnp.ndarray, w_shard: jnp.ndarray,
+                         axis_name: str) -> jnp.ndarray:
+    """Compute reduce_scatter(x @ allgathered-w) in ring form: each step
+    multiplies one weight shard and shifts the partial sum — the ring
+    reduce-scatter fused with the matmul that produces it.
+
+    x: [m, k_shard] (k sharded); w_shard: [k_shard, n]. Output: [m, n]
+    reduced over the axis, scattered by rows: returns [m // n_dev, n].
+    """
+    n_dev = jax.lax.axis_size(axis_name)
+    idx = jax.lax.axis_index(axis_name)
+    perm = [(i, (i - 1) % n_dev) for i in range(n_dev)]
+    m = x.shape[0]
+    rows = m // n_dev
+    acc = jnp.zeros((rows, w_shard.shape[1]),
+                    jnp.promote_types(x.dtype, w_shard.dtype))
+    for i in range(n_dev):
+        blk = (idx + 1 + i) % n_dev
+        x_blk = jax.lax.dynamic_slice_in_dim(x, blk * rows, rows, axis=0)
+        part = jnp.dot(x_blk, w_shard, preferred_element_type=acc.dtype)
+        acc = acc + part
+        if i + 1 < n_dev:
+            acc = jax.lax.ppermute(acc, axis_name, perm)
+    return acc

@@ -1,0 +1,53 @@
+"""Elastic scaling: reshard a checkpoint onto a different mesh.
+
+Recovery path when a pod (or slice) is lost: rebuild the mesh from the
+surviving device set, recompute shardings from the same logical rules, and
+restore the last checkpoint with the new placements. Since checkpoints are
+host-numpy and shardings are derived (not stored), any mesh whose axes
+divide the array dims works — scale down 2 pods -> 1, or up 1 -> 2.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.checkpoint import restore
+from repro.runtime import sharding as shlib
+
+
+def remesh_restore(ckpt_dir: str, state_like: Any, axes_tree: Any,
+                   mesh: Mesh, *, step: Optional[int] = None,
+                   overrides=None) -> Tuple[Any, int]:
+    """Restore ``state_like`` onto ``mesh`` using logical ``axes_tree``."""
+    with shlib.use_sharding(mesh, overrides=overrides) as ctx:
+        shardings = jax.tree.map(
+            lambda ax: shlib.sharding_for(ax, ctx), axes_tree,
+            is_leaf=lambda x: isinstance(x, tuple) and
+            all(a is None or isinstance(a, str) for a in x))
+        state, got_step, _ = restore(ckpt_dir, state_like, step=step,
+                                     shardings=shardings)
+    return state, got_step
+
+
+def survivable_mesh(devices: Sequence[jax.Device], model_axis: int,
+                    pod_axis: int = 1) -> Mesh:
+    """Largest (pod, data, model) mesh the surviving devices support.
+
+    Keeps the model axis intact (TP groups must be complete) and shrinks
+    data parallelism — the standard elastic-DP policy.
+    """
+    n = len(devices)
+    if n % model_axis != 0:
+        raise ValueError(
+            f"{n} surviving devices cannot host model_axis={model_axis}")
+    data = n // (model_axis * pod_axis)
+    if data < 1:
+        raise ValueError("not enough devices for one data shard")
+    shape = (pod_axis, data, model_axis) if pod_axis > 1 else (data, model_axis)
+    names = ("pod", "data", "model") if pod_axis > 1 else ("data", "model")
+    devs = np.asarray(devices[:pod_axis * data * model_axis]).reshape(shape)
+    return Mesh(devs, names)

@@ -1,0 +1,77 @@
+"""Fault tolerance: checkpoint/restart supervision + preemption handling.
+
+Designed for the 1000+ node regime where *something* is always failing:
+
+* periodic atomic checkpoints (every N steps) + async host offload;
+* SIGTERM/preemption -> drain current step, final checkpoint, clean exit
+  (cluster schedulers send SIGTERM before eviction);
+* on start, auto-resume from the newest complete checkpoint — a killed job
+  restarted with the same command continues bitwise-identically (stateless
+  data pipeline + pure-function batches make this exact; tested by killing
+  a training subprocess mid-run);
+* failure injection hooks for tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import signal
+import threading
+import time
+from typing import Any, Callable, Dict, Optional
+
+from repro.checkpoint import latest_step, restore, save
+
+
+@dataclasses.dataclass
+class FTConfig:
+    ckpt_dir: str
+    ckpt_every: int = 50
+    keep_last: int = 3
+    handle_sigterm: bool = True
+
+
+class Supervisor:
+    """Wraps a step function with checkpoint/restart semantics."""
+
+    def __init__(self, cfg: FTConfig, state_like: Any,
+                 fail_at_step: Optional[int] = None):
+        self.cfg = cfg
+        self.state_like = state_like
+        self.fail_at_step = fail_at_step
+        self._preempted = threading.Event()
+        if cfg.handle_sigterm:
+            try:
+                signal.signal(signal.SIGTERM, self._on_sigterm)
+            except ValueError:
+                pass    # not on main thread (tests)
+
+    def _on_sigterm(self, *_):
+        self._preempted.set()
+
+    def resume(self) -> tuple[Any, int]:
+        """(state, start_step); fresh state_like if no checkpoint exists."""
+        step = latest_step(self.cfg.ckpt_dir)
+        if step is None:
+            return self.state_like, 0
+        state, step, _ = restore(self.cfg.ckpt_dir, self.state_like, step=step)
+        return state, step
+
+    def run(self, state: Any, start_step: int, n_steps: int,
+            step_fn: Callable[[Any, int], Any],
+            on_step: Optional[Callable[[int, Any], None]] = None) -> Any:
+        step = start_step
+        while step < n_steps:
+            if self.fail_at_step is not None and step == self.fail_at_step:
+                raise RuntimeError(f"injected failure at step {step}")
+            state = step_fn(state, step)
+            step += 1
+            if on_step:
+                on_step(step, state)
+            if step % self.cfg.ckpt_every == 0 or self._preempted.is_set() \
+                    or step == n_steps:
+                save(self.cfg.ckpt_dir, step, state,
+                     keep_last=self.cfg.keep_last)
+            if self._preempted.is_set():
+                break
+        return state

@@ -1,0 +1,63 @@
+"""Pipeline parallelism over the ``pod`` axis: the paper's pipes at pod
+scale.
+
+GPipe-style schedule under shard_map: each pod holds a contiguous stage of
+layers; activations flow stage->stage through ``ppermute`` (the inter-pod
+pipe, one microbatch per word). With M microbatches and S stages the bubble
+is (S-1)/(M+S-1) — the driver picks M >= 4*S.
+
+The rotating-buffer schedule below runs all stages every tick: stage s
+computes microbatch (t - s) while the permute moves last tick's outputs —
+compute/comm overlap identical in shape to the kernel DAE schedule.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def pipeline_apply(stage_fn: Callable[[Any, jnp.ndarray], jnp.ndarray],
+                   stage_params: Any,
+                   microbatches: jnp.ndarray,
+                   axis_name: str) -> jnp.ndarray:
+    """Run a GPipe pipeline under shard_map.
+
+    stage_fn(params, x) -> x           one stage's forward
+    stage_params                       this device's stage params (sharded)
+    microbatches: [M, mb, ...]         this *pipeline's* input, replicated
+                                       (stage 0 consumes them in order)
+    Returns [M, mb, ...] final-stage outputs (valid on the last stage;
+    replicated back by the caller if needed).
+    """
+    n_stage = jax.lax.axis_size(axis_name)
+    stage = jax.lax.axis_index(axis_name)
+    m = microbatches.shape[0]
+    ticks = m + n_stage - 1
+    perm = [(i, i + 1) for i in range(n_stage - 1)]       # stage s -> s+1
+
+    buf = jnp.zeros_like(microbatches[0])
+    outs = jnp.zeros_like(microbatches)
+
+    def tick(t, carry):
+        buf, outs = carry
+        mb_idx = t - stage                                 # microbatch at this stage
+        feed = jax.lax.dynamic_index_in_dim(
+            microbatches, jnp.clip(t, 0, m - 1), keepdims=False)
+        x_in = jnp.where(stage == 0, feed, buf)
+        active = (mb_idx >= 0) & (mb_idx < m)
+        y = stage_fn(stage_params, x_in)
+        y = jnp.where(active, y, buf)
+        # last stage banks its result; others forward through the pipe
+        outs = jax.lax.cond(
+            active & (stage == n_stage - 1),
+            lambda o: jax.lax.dynamic_update_index_in_dim(
+                o, y, jnp.clip(mb_idx, 0, m - 1), 0),
+            lambda o: o, outs)
+        buf = jax.lax.ppermute(y, axis_name, perm)
+        return buf, outs
+
+    _, outs = jax.lax.fori_loop(0, ticks, tick, (buf, outs))
+    return outs

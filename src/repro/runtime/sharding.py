@@ -1,0 +1,168 @@
+"""Logical-axis sharding rules (MaxText-style) for the production meshes.
+
+Model code names axes logically ("batch", "embed", "heads", "mlp", "vocab",
+"expert", ...). A rule table maps logical names to mesh axes; the trainer /
+dry-run installs a :class:`ShardingContext`, and model code calls
+:func:`constrain` on activations. Without a context every call is a no-op,
+so kernels/smoke tests run unchanged on one CPU device.
+
+Default rules implement DP over ("pod","data") x TP/EP over "model":
+
+  batch   -> (pod, data)     activations' global-batch dim
+  embed   -> None            residual stream stays replicated across model
+  heads   -> model           attention heads (TP)
+  mlp     -> model           FFN hidden (TP)
+  vocab   -> model           embedding/unembedding table + logits
+  expert  -> model           MoE expert dim (EP), when divisible
+  seq     -> None            (sequence parallelism opt-in: -> model)
+  kv      -> None
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Rules = Dict[str, Union[None, str, Tuple[str, ...]]]
+
+# Data parallel spans pod x data so that the same rules serve both meshes.
+DEFAULT_RULES: Rules = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "seq_sp": None,    # Megatron-style sequence parallelism for the residual
+                       # stream / layer-boundary saves (hillclimb knob:
+                       # -> "model"); attention/MLP internals re-shard by
+                       # heads/mlp, XLA inserts the boundary collectives
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "kv": None,
+    "mlp": "model",
+    "vocab": "model",
+    "expert": "model",
+    "exp_cap": None,
+    "ssm_heads": "model",
+    "state": None,
+    "layers": None,
+    "frames": None,
+    "patches": None,
+}
+
+
+@dataclasses.dataclass
+class ShardingContext:
+    mesh: Mesh
+    rules: Rules
+
+    def axis_size(self, name: str) -> int:
+        return self.mesh.shape.get(name, 1)
+
+
+_LOCAL = threading.local()
+
+
+def current() -> Optional[ShardingContext]:
+    return getattr(_LOCAL, "ctx", None)
+
+
+@contextlib.contextmanager
+def use_sharding(mesh: Mesh, rules: Optional[Rules] = None,
+                 overrides: Optional[Rules] = None):
+    """Install mesh + logical rules for model code (and enter the mesh)."""
+    rules = dict(DEFAULT_RULES if rules is None else rules)
+    if overrides:
+        rules.update(overrides)
+    # prune rule targets not present in this mesh (e.g. "pod" on single-pod)
+    axes = set(mesh.axis_names)
+
+    def prune(target):
+        if target is None:
+            return None
+        if isinstance(target, str):
+            return target if target in axes else None
+        kept = tuple(a for a in target if a in axes)
+        return kept if kept else None
+
+    ctx = ShardingContext(mesh=mesh, rules={k: prune(v) for k, v in rules.items()})
+    prev = getattr(_LOCAL, "ctx", None)
+    _LOCAL.ctx = ctx
+    try:
+        with mesh:
+            yield ctx
+    finally:
+        _LOCAL.ctx = prev
+
+
+def spec_for(logical_axes: Sequence[Optional[str]],
+             ctx: Optional[ShardingContext] = None) -> P:
+    """PartitionSpec for a tuple of logical axis names (None = replicated)."""
+    ctx = ctx or current()
+    if ctx is None:
+        return P()
+    parts = []
+    used = set()
+    for name in logical_axes:
+        target = ctx.rules.get(name) if name is not None else None
+        # a mesh axis may appear at most once in a spec
+        if target is None:
+            parts.append(None)
+            continue
+        tgt = (target,) if isinstance(target, str) else tuple(target)
+        tgt = tuple(a for a in tgt if a not in used)
+        if not tgt:
+            parts.append(None)
+        else:
+            used.update(tgt)
+            parts.append(tgt if len(tgt) > 1 else tgt[0])
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def sharding_for(logical_axes: Sequence[Optional[str]],
+                 ctx: Optional[ShardingContext] = None) -> Optional[NamedSharding]:
+    ctx = ctx or current()
+    if ctx is None:
+        return None
+    return NamedSharding(ctx.mesh, spec_for(logical_axes, ctx))
+
+
+def constrain(x: jax.Array, logical_axes: Sequence[Optional[str]]) -> jax.Array:
+    """Annotate an activation with its logical sharding (no-op w/o context)."""
+    ctx = current()
+    if ctx is None:
+        return x
+    if len(logical_axes) != x.ndim:
+        raise ValueError(f"{logical_axes} vs rank-{x.ndim} activation")
+    return jax.lax.with_sharding_constraint(x, sharding_for(logical_axes, ctx))
+
+
+def divisible(logical: str, size: int, ctx: Optional[ShardingContext] = None) -> bool:
+    """Can axis ``logical`` of extent ``size`` be sharded under the rules?"""
+    ctx = ctx or current()
+    if ctx is None:
+        return True
+    target = ctx.rules.get(logical)
+    if target is None:
+        return True
+    tgt = (target,) if isinstance(target, str) else target
+    n = 1
+    for a in tgt:
+        n *= ctx.axis_size(a)
+    return size % n == 0
+
+
+def tree_shardings(axes_tree, ctx: Optional[ShardingContext] = None):
+    """Map a pytree of logical-axes tuples to NamedShardings (or None)."""
+    ctx = ctx or current()
+    if ctx is None:
+        return jax.tree.map(lambda _: None, axes_tree,
+                            is_leaf=lambda x: isinstance(x, tuple))
+    return jax.tree.map(lambda ax: sharding_for(ax, ctx), axes_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and
+                        all(a is None or isinstance(a, str) for a in x))

@@ -1,0 +1,84 @@
+"""Straggler detection + mitigation policy.
+
+At 1000+ nodes, the slowest participant sets the step time for synchronous
+SPMD. The watchdog keeps a robust (median/MAD) model of per-step durations
+and per-host heartbeats; persistent outliers trigger a mitigation action:
+
+  "none"            within tolerance
+  "rebalance"       transient slowness: shrink that host's data shard
+                    (batch rebalancing hook)
+  "replace"         persistent: promote a hot spare, evict the host, and
+                    elastic-remesh (runtime.elastic) from checkpoint
+
+The policy is pure bookkeeping (host-side), so it is fully unit-testable
+without hardware; the trainer wires `observe_step` around its step timer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional, Tuple
+
+
+@dataclasses.dataclass
+class StragglerConfig:
+    window: int = 50
+    slow_factor: float = 1.5       # x median step time = outlier
+    tolerate: int = 3              # consecutive outliers before rebalance
+    evict_after: int = 10          # consecutive outliers before replace
+    hot_spares: int = 2
+
+
+class StragglerWatchdog:
+    def __init__(self, cfg: StragglerConfig, hosts: List[str]):
+        self.cfg = cfg
+        self.hosts = list(hosts)
+        self.spares: List[str] = [f"spare_{i}" for i in range(cfg.hot_spares)]
+        self._times: Dict[str, Deque[float]] = {
+            h: deque(maxlen=cfg.window) for h in hosts}
+        self._strikes: Dict[str, int] = {h: 0 for h in hosts}
+        self.evicted: List[str] = []
+
+    def _median(self) -> float:
+        all_t = sorted(t for dq in self._times.values() for t in dq)
+        return all_t[len(all_t) // 2] if all_t else 0.0
+
+    def observe_step(self, host_times: Dict[str, float]) -> Dict[str, str]:
+        """Feed per-host step durations; returns {host: action}."""
+        actions: Dict[str, str] = {}
+        for h, t in host_times.items():
+            if h not in self._times:
+                continue
+            self._times[h].append(t)
+        med = self._median()
+        for h, t in host_times.items():
+            if h not in self._times:
+                continue
+            if med > 0 and t > self.cfg.slow_factor * med:
+                self._strikes[h] += 1
+            else:
+                self._strikes[h] = 0
+            if self._strikes[h] >= self.cfg.evict_after:
+                actions[h] = "replace"
+            elif self._strikes[h] >= self.cfg.tolerate:
+                actions[h] = "rebalance"
+            else:
+                actions[h] = "none"
+        return actions
+
+    def replace(self, host: str) -> Optional[str]:
+        """Evict ``host``; return the promoted spare (or None -> shrink)."""
+        if host not in self.hosts:
+            return None
+        self.hosts.remove(host)
+        self.evicted.append(host)
+        self._times.pop(host, None)
+        self._strikes.pop(host, None)
+        if self.spares:
+            spare = self.spares.pop(0)
+            self.hosts.append(spare)
+            self._times[spare] = deque(maxlen=self.cfg.window)
+            self._strikes[spare] = 0
+            return spare
+        return None

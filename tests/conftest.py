@@ -1,0 +1,15 @@
+import os
+import sys
+
+# Tests run on the single real CPU device (the dry-run alone forces 512
+# placeholder devices). Distributed tests spawn subprocesses with their own
+# XLA_FLAGS.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.key(0)

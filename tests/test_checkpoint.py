@@ -1,0 +1,80 @@
+"""Checkpointer: atomic writes, integrity hashes, GC, restore-into-structure."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step, restore, save, save_async
+
+
+def tree(seed=0):
+    k = jax.random.key(seed)
+    return {
+        "params": {"w": jax.random.normal(k, (8, 16)),
+                   "b": jnp.zeros((16,))},
+        "opt": {"m": jnp.ones((8, 16)), "step": jnp.asarray(7, jnp.int32)},
+        "data_step": np.asarray(123, np.int64),
+    }
+
+
+def test_save_restore_roundtrip(tmp_path):
+    t = tree()
+    save(str(tmp_path), 10, t)
+    assert latest_step(str(tmp_path)) == 10
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(
+        np.shape(x), np.asarray(x).dtype), t)
+    got, step, _ = restore(str(tmp_path), like)
+    assert step == 10
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_latest_and_gc(tmp_path):
+    t = tree()
+    for s in (1, 2, 3, 4, 5):
+        save(str(tmp_path), s, t, keep_last=2)
+    assert latest_step(str(tmp_path)) == 5
+    kept = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert kept == ["step_00000004", "step_00000005"]
+
+
+def test_corruption_detected(tmp_path):
+    t = tree()
+    path = save(str(tmp_path), 1, t)
+    # corrupt one array, keep manifest
+    data = dict(np.load(os.path.join(path, "arrays.npz")))
+    key = next(iter(data))
+    data[key] = data[key] + 1.0
+    np.savez(os.path.join(path, "arrays.npz"), **data)
+    with pytest.raises(IOError, match="checksum"):
+        restore(str(tmp_path), t)
+
+
+def test_partial_write_ignored(tmp_path):
+    """A crashed mid-write tmp dir must not be visible as a checkpoint."""
+    t = tree()
+    save(str(tmp_path), 1, t)
+    os.makedirs(os.path.join(tmp_path, "step_00000002.tmp-9999"))
+    assert latest_step(str(tmp_path)) == 1
+    got, step, _ = restore(str(tmp_path), t)
+    assert step == 1
+
+
+def test_async_save(tmp_path):
+    t = tree()
+    th = save_async(str(tmp_path), 3, t)
+    th.join(10)
+    assert latest_step(str(tmp_path)) == 3
+
+
+def test_restore_missing_leaf_fails(tmp_path):
+    t = tree()
+    save(str(tmp_path), 1, t)
+    t2 = dict(t)
+    t2["extra"] = jnp.zeros((3,))
+    with pytest.raises(KeyError):
+        restore(str(tmp_path), t2)

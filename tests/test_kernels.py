@@ -1,0 +1,160 @@
+"""Per-kernel validation: shape/dtype sweeps against the pure-jnp oracles
+(interpret mode). Every ff_* kernel must match its ref for all pipe depths,
+stream counts, and the baseline (depth=1) mode."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ff_attention import attention, attention_ref
+from repro.kernels.ff_chunk_scan import chunk_scan
+from repro.kernels.ff_decode_attention import decode_attention
+from repro.kernels.ff_gather import gather, gather_ref
+from repro.kernels.ff_matmul import matmul, matmul_ref
+
+KEY = jax.random.key(42)
+
+
+def k(i):
+    return jax.random.fold_in(KEY, i)
+
+
+# ---------------------------------------------------------------------------
+# ff_matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(128, 128, 128), (256, 384, 128),
+                                   (200, 120, 72), (64, 640, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("mode,depth,streams", [
+    ("ff", 2, 1), ("ff", 3, 2), ("ff", 4, 4), ("baseline", 1, 1)])
+def test_matmul(shape, dtype, mode, depth, streams):
+    m, kk, n = shape
+    a = jax.random.normal(k(0), (m, kk), jnp.float32).astype(dtype)
+    b = jax.random.normal(k(1), (kk, n), jnp.float32).astype(dtype)
+    ref = matmul_ref(a, b)
+    out = matmul(a, b, mode=mode, depth=depth, streams=streams)
+    # f32 tolerance covers k-dim accumulation-order differences vs jnp.dot
+    tol = (1e-5, 5e-4) if dtype == jnp.float32 else (2e-2, 2e-1)
+    np.testing.assert_allclose(np.float32(out), np.float32(ref),
+                               rtol=tol[0], atol=tol[1])
+
+
+# ---------------------------------------------------------------------------
+# ff_attention (prefill)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bh,kvg,s,d", [(4, 2, 256, 128), (2, 1, 200, 64),
+                                        (6, 3, 128, 128)])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("mode,depth", [("ff", 2), ("ff", 4), ("baseline", 1)])
+def test_attention(bh, kvg, s, d, causal, mode, depth):
+    if not causal and s % 128 != 0:
+        pytest.skip("non-causal requires block-multiple skv")
+    q = jax.random.normal(k(2), (bh, s, d), jnp.float32)
+    kk = jax.random.normal(k(3), (bh // kvg, s, d), jnp.float32)
+    vv = jax.random.normal(k(4), (bh // kvg, s, d), jnp.float32)
+    ref = attention_ref(q, kk, vv, kv_groups=kvg, causal=causal)
+    out = attention(q, kk, vv, kv_groups=kvg, causal=causal, mode=mode,
+                    depth=depth, block_q=64)
+    np.testing.assert_allclose(np.float32(out), np.float32(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_attention_bf16():
+    q = jax.random.normal(k(5), (2, 128, 128), jnp.bfloat16)
+    kv = jax.random.normal(k(6), (2, 128, 128), jnp.bfloat16)
+    ref = attention_ref(q, kv, kv, causal=True)
+    out = attention(q, kv, kv, causal=True, mode="ff")
+    np.testing.assert_allclose(np.float32(out), np.float32(ref),
+                               rtol=3e-2, atol=3e-2)
+
+
+# ---------------------------------------------------------------------------
+# ff_decode_attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,h,kvh,s,d", [(2, 8, 2, 256, 128), (3, 4, 4, 384, 64),
+                                         (1, 16, 2, 128, 128)])
+@pytest.mark.parametrize("mode,depth,streams", [("ff", 2, 1), ("ff", 3, 2),
+                                                ("baseline", 1, 1)])
+def test_decode_attention(b, h, kvh, s, d, mode, depth, streams):
+    q = jax.random.normal(k(7), (b, h, d), jnp.float32)
+    kk = jax.random.normal(k(8), (b, kvh, s, d), jnp.float32)
+    vv = jax.random.normal(k(9), (b, kvh, s, d), jnp.float32)
+    lens = jax.random.randint(k(10), (b,), 1, s + 1)
+    ref = decode_attention(q, kk, vv, lens, mode="ref")
+    out = decode_attention(q, kk, vv, lens, mode=mode, depth=depth,
+                           streams=streams)
+    np.testing.assert_allclose(np.float32(out), np.float32(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# ff_chunk_scan (Mamba2 inclusive / RWKV6 exclusive+bonus)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bh,s,n,p", [(2, 128, 32, 64), (3, 200, 64, 64),
+                                      (1, 64, 16, 32)])
+@pytest.mark.parametrize("inclusive", [True, False])
+@pytest.mark.parametrize("mode", ["xla", "xla_tiled", "ff", "baseline"])
+def test_chunk_scan(bh, s, n, p, inclusive, mode):
+    q = 0.5 * jax.random.normal(k(11), (bh, s, n), jnp.float32)
+    kk = 0.5 * jax.random.normal(k(12), (bh, s, n), jnp.float32)
+    vv = jax.random.normal(k(13), (bh, s, p), jnp.float32)
+    lw = -0.5 * jnp.exp(jax.random.normal(k(14), (bh, s, n)))
+    u = None if inclusive else 0.3 * jax.random.normal(k(15), (bh, n))
+    ref = chunk_scan(q, kk, vv, lw, u, inclusive=inclusive, mode="ref")
+    out = chunk_scan(q, kk, vv, lw, u, inclusive=inclusive, mode=mode,
+                     depth=2, streams=1)
+    scale = np.max(np.abs(np.float32(ref))) + 1e-6
+    assert np.max(np.abs(np.float32(out) - np.float32(ref))) / scale < 3e-5
+
+
+def test_chunk_scan_strong_decay_stability():
+    """Strong decay (w ~ 1e-30 per chunk) must not overflow/NaN — the
+    decay-to-boundary factorization keeps all exponents <= 0."""
+    bh, s, n, p = 1, 128, 16, 16
+    q = jnp.ones((bh, s, n))
+    kk = jnp.ones((bh, s, n))
+    vv = jnp.ones((bh, s, p))
+    lw = jnp.full((bh, s, n), -3.0)     # total chunk decay e^-192
+    for mode in ("xla", "ff"):
+        out = chunk_scan(q, kk, vv, lw, inclusive=True, mode=mode)
+        assert np.isfinite(np.float32(out)).all(), mode
+    ref = chunk_scan(q, kk, vv, lw, inclusive=True, mode="ref")
+    np.testing.assert_allclose(
+        np.float32(chunk_scan(q, kk, vv, lw, inclusive=True, mode="ff")),
+        np.float32(ref), rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# ff_gather
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rows,cols,n", [(64, 128, 40), (100, 256, 64),
+                                         (16, 128, 7)])
+@pytest.mark.parametrize("mode,depth", [("ff", 4), ("ff", 2), ("baseline", 1)])
+def test_gather(rows, cols, n, mode, depth):
+    tab = jax.random.normal(k(16), (rows, cols), jnp.float32)
+    idx = jax.random.randint(k(17), (n,), 0, rows)
+    ref = gather_ref(tab, idx)
+    out = gather(tab, idx, mode=mode, depth=depth)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+# ---------------------------------------------------------------------------
+# cost models sanity
+# ---------------------------------------------------------------------------
+
+def test_cost_models_positive():
+    from repro.kernels.ff_attention import attention_cost
+    from repro.kernels.ff_chunk_scan import chunk_scan_cost
+    from repro.kernels.ff_decode_attention import decode_attention_cost
+    from repro.kernels.ff_gather import gather_cost
+    from repro.kernels.ff_matmul import matmul_cost
+    for c in (matmul_cost(512, 512, 512), attention_cost(8, 1024, 128),
+              decode_attention_cost(8, 16, 4, 2048, 128),
+              chunk_scan_cost(8, 1024, 64, 64), gather_cost(1024, 512)):
+        assert c.hbm_bytes > 0 and c.vmem_bytes > 0

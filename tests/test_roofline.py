@@ -1,0 +1,82 @@
+"""Roofline machinery: HLO collective parsing and the layer-diff
+extrapolation math (the §Roofline pipeline is itself code — test it)."""
+
+import numpy as np
+import pytest
+
+from repro.launch.hlo_stats import collective_stats
+from repro.launch.roofline import analyze_cell, model_flops
+
+HLO = """
+ENTRY %main {
+  %ar = f32[1024,512]{1,0} all-reduce(f32[1024,512]{1,0} %x), replica_groups={{0,1,2,3}}, to_apply=%add
+  %ag = bf16[64,2048]{1,0} all-gather(bf16[8,2048]{1,0} %y), replica_groups=[2,8]<=[16], dimensions={0}
+  %rs = f32[128]{0} reduce-scatter(f32[1024]{0} %z), replica_groups={{0,1,2,3,4,5,6,7}}, to_apply=%add
+  %cp = bf16[32,128]{1,0} collective-permute(bf16[32,128]{1,0} %w), source_target_pairs={{0,1}}
+  %ard = f32[4]{0} all-reduce-done(f32[4]{0} %h)
+  %nothing = f32[16]{0} add(f32[16]{0} %a, f32[16]{0} %b)
+}
+"""
+
+
+def test_collective_stats_parsing():
+    s = collective_stats(HLO, link_bw=50e9)
+    assert s["all-reduce"]["count"] == 1
+    assert s["all-reduce"]["bytes"] == 1024 * 512 * 4
+    # ring model: 2*(g-1)/g * bytes / bw with g=4
+    np.testing.assert_allclose(
+        s["all-reduce"]["seconds"],
+        2 * 3 / 4 * 1024 * 512 * 4 / 50e9, rtol=1e-6)
+    assert s["all-gather"]["count"] == 1
+    assert s["all-gather"]["bytes"] == 64 * 2048 * 2
+    # iota groups [2,8] -> group size 8
+    np.testing.assert_allclose(
+        s["all-gather"]["seconds"], 7 / 8 * 64 * 2048 * 2 / 50e9, rtol=1e-6)
+    assert s["reduce-scatter"]["count"] == 1
+    assert s["collective-permute"]["count"] == 1
+    np.testing.assert_allclose(
+        s["collective-permute"]["seconds"], 32 * 128 * 2 / 50e9, rtol=1e-6)
+    assert s["total_count"] == 4          # -done line ignored
+
+
+def _fake_cell(l1_flops, l2_flops, units):
+    coll = {"total_bytes": 0.0, "total_seconds": 0.0, "total_count": 0}
+    return {
+        "cell": "qwen1_5_0p5b__train_4k__pod16x16",
+        "arch": "qwen1_5_0p5b", "shape": "train_4k", "mesh": "pod16x16",
+        "ok": True, "n_layer_units": units,
+        "n_params": 620_000_000, "n_active_params": 620_000_000,
+        "memory": {"peak_bytes_est": 1 << 30, "argument_bytes": 1 << 28,
+                   "output_bytes": 0, "temp_bytes": 0, "alias_bytes": 0,
+                   "code_bytes": 0},
+        "variants": {
+            "L1": {"flops": l1_flops, "bytes": 1e9, "collectives": coll},
+            "L2": {"flops": l2_flops, "bytes": 1.5e9, "collectives": coll},
+        },
+    }
+
+
+def test_layer_diff_extrapolation():
+    """total = f(1) + (units-1) * (f(2) - f(1)) — the scan-undercount fix."""
+    a = analyze_cell(_fake_cell(l1_flops=10e12, l2_flops=13e12, units=24))
+    expect_flops = 10e12 + 23 * 3e12
+    np.testing.assert_allclose(a["hlo_flops_per_dev"], expect_flops)
+    np.testing.assert_allclose(a["t_compute_s"], expect_flops / 197e12)
+    expect_bytes = 1e9 + 23 * 0.5e9
+    np.testing.assert_allclose(a["hlo_bytes_per_dev"], expect_bytes)
+    assert a["bottleneck"] in ("compute", "memory", "collective")
+
+
+def test_model_flops_sane():
+    """6*N*D-scale sanity for train; decode ~ 2*N*B + attention term."""
+    n = 620_000_000
+    f_train = model_flops("qwen1_5_0p5b", "train_4k", n)
+    d_tokens = 256 * 4096
+    assert 0.5 * 6 * n * d_tokens < f_train < 3 * 6 * n * d_tokens
+    f_dec = model_flops("qwen1_5_0p5b", "decode_32k", n)
+    assert f_dec < f_train / 1000
+
+
+def test_skipped_and_failed_cells_return_none():
+    assert analyze_cell({"skipped": True, "ok": True}) is None
+    assert analyze_cell({"ok": False}) is None

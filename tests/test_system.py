@@ -1,0 +1,78 @@
+"""End-to-end behaviour tests for the framework: a tiny LM trains to lower
+loss through the full driver stack (data pipe -> jit train step -> optimizer
+-> checkpoints), and the serve driver generates greedily."""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def test_train_driver_loss_decreases(tmp_path):
+    from repro.launch import train as train_mod
+    state = train_mod.main([
+        "--arch", "llama3_2_1b", "--smoke", "--steps", "60", "--batch", "4",
+        "--seq", "64", "--lr", "3e-3", "--ckpt-dir", str(tmp_path / "ck"),
+        "--ckpt-every", "30", "--log-every", "50"])
+    assert state is not None
+    # checkpoint written at final step
+    from repro.checkpoint import latest_step
+    assert latest_step(str(tmp_path / "ck")) == 60
+
+
+def test_train_driver_learns(tmp_path, capsys):
+    """Loss at the end must be below loss at the start (synthetic Markov
+    stream is learnable)."""
+    from repro.launch import train as train_mod
+    train_mod.main([
+        "--arch", "qwen1_5_0p5b", "--smoke", "--steps", "200", "--batch", "4",
+        "--seq", "64", "--lr", "1e-2", "--ckpt-dir", str(tmp_path / "ck"),
+        "--ckpt-every", "500", "--log-every", "10"])
+    out = capsys.readouterr().out
+    losses = [float(line.split("loss=")[1].split()[0])
+              for line in out.splitlines() if "loss=" in line]
+    assert len(losses) >= 5
+    assert np.mean(losses[-2:]) < np.mean(losses[:2]) - 0.2, losses
+
+
+def test_serve_driver_generates():
+    from repro.launch import serve as serve_mod
+    out = serve_mod.main(["--arch", "qwen1_5_0p5b", "--smoke", "--requests",
+                          "3", "--prompt-len", "12", "--max-new", "4"])
+    assert len(out) == 3
+    for o in out:
+        assert len(o) >= 4
+
+
+def test_grad_accum_equivalence():
+    """accum_steps=2 must match accum_steps=1 on the same global batch
+    (up to fp32 accumulation order)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.base import smoke_config
+    from repro.launch import steps as steps_lib
+    from repro.models import build_model
+    from repro.optim import adamw
+
+    cfg = smoke_config("llama3_2_1b")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    opt_cfg = adamw.AdamWConfig(lr_peak=1e-3, warmup_steps=1, total_steps=10)
+    batch = {
+        "tokens": jax.random.randint(jax.random.key(1), (4, 32), 0, cfg.vocab),
+        "labels": jax.random.randint(jax.random.key(2), (4, 32), 0, cfg.vocab),
+    }
+    s1 = jax.jit(steps_lib.make_train_step(model, opt_cfg=opt_cfg))
+    s2 = jax.jit(steps_lib.make_train_step(model, opt_cfg=opt_cfg,
+                                           accum_steps=2))
+    p1, _, m1 = s1(params, adamw.init(params), batch)
+    p2, _, m2 = s2(params, adamw.init(params), batch)
+    # microbatch mean-of-means == full mean here (equal microbatch sizes)
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 2e-3
+    d = max(float(jnp.max(jnp.abs(a - b)))
+            for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)))
+    assert d < 5e-3, d
