@@ -1,44 +1,34 @@
 """Kernel-level benchmark: modeled TPU-v5e time per ff_* kernel call from
 each kernel's exact tile-schedule cost model (the CPU container cannot
-time real TPU kernels), plus modeled FF-vs-baseline and M2C2 deltas."""
+time real TPU kernels), plus modeled FF-vs-baseline and M2C2 deltas.
+
+Cases are enumerated from the kernel registry — each registered kernel's
+``workload`` builder supplies the stream program at its ``bench_kwargs``
+shape point, and the roofline planner reports the (depth, streams) it would
+auto-pick there. Adding a kernel to the registry adds its row here."""
 
 from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core import TPU_V5E, Pipe, Workload, estimate_baseline, \
-    estimate_feedforward
-from repro.kernels.ff_attention import attention_cost
-from repro.kernels.ff_chunk_scan import chunk_scan_cost
-from repro.kernels.ff_decode_attention import decode_attention_cost
-from repro.kernels.ff_gather import gather_cost
-from repro.kernels.ff_matmul import matmul_cost
-
-CASES = [
-    ("ff_matmul/4096", matmul_cost(4096, 4096, 4096, dtype=jnp.bfloat16),
-     True, 128 * 128 * 2 * 2),
-    ("ff_attention/prefill8k", attention_cost(32, 8192, 128), True,
-     128 * 128 * 2 * 2),
-    ("ff_decode_attention/32k", decode_attention_cost(8, 64, 8, 32768, 128),
-     True, 128 * 128 * 2 * 2),
-    ("ff_chunk_scan/mamba4k", chunk_scan_cost(64, 4096, 64, 64), True,
-     64 * (3 * 64 + 64) * 2),
-    ("ff_gather/1M", gather_cost(1 << 20, 512), False, 8 * 512 * 4),
-]
+from repro.core import TPU_V5E, estimate_baseline, estimate_feedforward, \
+    planned_pipe
+from repro.kernels.registry import all_kernels
 
 
 def rows():
     out = []
-    for name, cost, regular, word_bytes in CASES:
-        n_words = max(int(cost.hbm_bytes / word_bytes), 1)
-        w = Workload(n_words=n_words, word_bytes=word_bytes,
-                     flops_per_word=cost.flops / n_words, regular=regular)
+    for spec in all_kernels():
+        kw = dict(spec.bench_kwargs)
+        dtype = kw.get("dtype", jnp.float32)
+        cost = spec.cost(**kw)
+        w, tile = spec.workload(**kw)
+        plan = planned_pipe(spec.name, w, tile, dtype, TPU_V5E)
         base = estimate_baseline(w, TPU_V5E)
-        ff = estimate_feedforward(w, TPU_V5E, Pipe(tile=(8, 128), depth=4))
-        m2c2 = estimate_feedforward(w, TPU_V5E,
-                                    Pipe(tile=(8, 128), depth=4, streams=2))
+        ff = estimate_feedforward(w, TPU_V5E, plan.pipe.with_streams(1))
+        m2c2 = estimate_feedforward(w, TPU_V5E, plan.pipe.with_streams(2))
         out.append({
-            "name": name,
+            "name": spec.name,
             "us_per_call": ff.total_s * 1e6,
             "ff_speedup": base.total_s / ff.total_s,
             "m2c2_extra": ff.total_s / m2c2.total_s,
@@ -46,17 +36,19 @@ def rows():
             "gflops": cost.flops / 1e9,
             "bottleneck": ff.bottleneck,
             "vmem_kib": cost.vmem_bytes / 1024,
+            "plan": f"d{plan.pipe.depth}s{plan.pipe.streams}",
         })
     return out
 
 
 def main():
-    print("# Kernel suite: modeled v5e time per call (tile-schedule costs)")
+    print("# Kernel suite: modeled v5e time per call (tile-schedule costs,")
+    print("# registry-enumerated; plan = planner's auto (depth, streams))")
     print("name,us_per_call,derived")
     for r in rows():
         print(f"kernels/{r['name']},{r['us_per_call']:.1f},"
               f"ff={r['ff_speedup']:.2f}x_m2c2+{(r['m2c2_extra']-1)*100:.0f}%"
-              f"_{r['bottleneck']}")
+              f"_{r['bottleneck']}_plan={r['plan']}")
         print(f"#  {r['name']:28s} {r['gflops']:9.1f} GF "
               f"{r['hbm_gb']:7.2f} GB  vmem {r['vmem_kib']:6.0f} KiB")
 

@@ -1,14 +1,47 @@
 """Benchmark harness: one module per paper table/figure + the roofline
 report. Prints ``name,us_per_call,derived`` CSV lines (detail lines are
-'#'-prefixed)."""
+'#'-prefixed).
+
+``--smoke`` skips the modeled tables and instead exercises every kernel in
+the registry at tiny shapes with planner-sized pipes (interpret mode), so
+the perf plumbing — registry enumeration, auto planning, emitter DMA
+schedules — cannot silently rot even where full benches are too slow."""
 
 from __future__ import annotations
 
+import argparse
 import sys
+import time
 import traceback
 
 
-def main() -> None:
+def smoke() -> None:
+    from repro.core import plan_cache_info
+    from repro.kernels.registry import all_kernels, run_smoke
+
+    failures = []
+    print("# smoke: every registered kernel, tiny shapes, depth/streams=auto")
+    for spec in all_kernels():
+        t0 = time.time()
+        try:
+            _, _, err = run_smoke(spec)
+            ok = err <= spec.tol
+        except Exception:   # noqa: BLE001 — report all kernels
+            traceback.print_exc()
+            ok, err = False, float("nan")
+        dt = (time.time() - t0) * 1e3
+        status = "ok" if ok else "FAIL"
+        print(f"smoke/{spec.name},{dt:.0f},err={err:.1e}_{status}")
+        if not ok:
+            failures.append(spec.name)
+    print(f"# plan cache: {plan_cache_info()}")
+    if failures:
+        print(f"\nFAILED smoke kernels: {failures}", file=sys.stderr)
+        raise SystemExit(1)
+    print("smoke ok")
+
+
+def full() -> None:
     from benchmarks import (fig4_m2c2, kernel_bench, roofline_report,
                             table2_feedforward, table3_microbench)
     failures = []
@@ -24,6 +57,15 @@ def main() -> None:
         print(f"\nFAILED benches: {failures}", file=sys.stderr)
         raise SystemExit(1)
     print("\nall benches ok")
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--smoke", action="store_true",
+                        help="run every registered kernel at tiny shapes "
+                             "instead of the modeled benches")
+    args = parser.parse_args()
+    smoke() if args.smoke else full()
 
 
 if __name__ == "__main__":

@@ -1,15 +1,11 @@
 """Paper Table 3: auto-generated microbenchmarks — access-pattern
 (regular/irregular) x divergence/DLCD — M2C2 vs single work-item baseline,
-plus an interpret-mode correctness pass of the actual generated kernels
-(ff_matmul for regular, ff_gather for irregular) against their oracles."""
+plus an interpret-mode correctness pass of every registry-enumerated kernel
+(regular and irregular exemplars) against its oracle."""
 
 from __future__ import annotations
 
 import time
-
-import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.core import ARRIA_CX, Pipe, estimate_baseline, estimate_feedforward
 from benchmarks.workloads import MICRO
@@ -32,23 +28,18 @@ def model_rows():
 
 
 def kernel_validation():
-    """Generated-kernel correctness (interpret mode) + wall time."""
-    from repro.kernels.ff_matmul import matmul, matmul_ref
-    from repro.kernels.ff_gather import gather, gather_ref
-    k = jax.random.key(0)
-    a = jax.random.normal(k, (256, 256))
-    b = jax.random.normal(jax.random.fold_in(k, 1), (256, 256))
-    t0 = time.time()
-    out = matmul(a, b, mode="ff", depth=2, streams=2)
-    t_reg = time.time() - t0
-    ok_reg = bool(np.allclose(out, matmul_ref(a, b), atol=1e-4))
-    tab = jax.random.normal(jax.random.fold_in(k, 2), (512, 128))
-    idx = jax.random.randint(jax.random.fold_in(k, 3), (256,), 0, 512)
-    t0 = time.time()
-    g = gather(tab, idx, mode="ff", depth=4)
-    t_irr = time.time() - t0
-    ok_irr = bool(np.array_equal(np.asarray(g), np.asarray(gather_ref(tab, idx))))
-    return ok_reg, ok_irr, t_reg, t_irr
+    """Registry-enumerated kernel correctness (interpret mode) + wall time.
+    Every registered kernel runs its smoke shapes with planner-sized pipes
+    (depth/streams "auto") against its oracle."""
+    from repro.kernels.registry import all_kernels, run_smoke
+    results = []
+    for spec in all_kernels():
+        t0 = time.time()
+        _, _, err = run_smoke(spec)
+        dt = time.time() - t0
+        ok = err <= spec.tol
+        results.append((spec.name, spec.regular, ok, err, dt))
+    return results
 
 
 def main():
@@ -62,11 +53,14 @@ def main():
         "regular must gain more than irregular (paper Table 3)"
     assert rs["M_AI6_forif_R"]["speedup"] > rs["M_AI10_R"]["speedup"], \
         "divergent/DLCD kernels must gain more (paper Table 3)"
-    ok_reg, ok_irr, t_reg, t_irr = kernel_validation()
-    print(f"# generated-kernel validation: regular(ff_matmul)={ok_reg} "
-          f"({t_reg*1e3:.0f} ms interp), irregular(ff_gather)={ok_irr} "
-          f"({t_irr*1e3:.0f} ms interp)")
-    assert ok_reg and ok_irr
+    results = kernel_validation()
+    for name, regular, ok, err, dt in results:
+        pat = "regular" if regular else "irregular"
+        print(f"# generated-kernel validation: {name}({pat})={ok} "
+              f"err={err:.1e} ({dt*1e3:.0f} ms interp)")
+    assert all(ok for _, _, ok, _, _ in results), results
+    pats = {regular for _, regular, _, _, _ in results}
+    assert pats == {True, False}, "need both R and IR exemplars (Table 3)"
 
 
 if __name__ == "__main__":

@@ -2,13 +2,23 @@
 
 Public API:
   Pipe                      on-chip FIFO spec (depth, streams, tile)
+  RingPipe / GatherRingPipe the shared ring-pipe emitter runtime
   StreamSpec / run_reference  the producer/consumer stream-program contract
   check_no_mlcd             legality (true-MLCD) checker
   Workload / HardwareModel  analytic DAE pipeline model
   estimate_baseline / estimate_feedforward / speedup
   plan_pipe                 roofline-driven (depth, streams) auto-tuner
+  planned_pipe / resolve_auto  cached per-call-site plan + "auto" resolution
 """
 
+from repro.core.emitter import (
+    GatherRingPipe,
+    RingPipe,
+    acquire,
+    cdiv,
+    pad_to,
+    release,
+)
 from repro.core.pipe import Pipe, required_depth, vmem_budget_ok
 from repro.core.feedforward import (
     Footprint,
@@ -29,24 +39,41 @@ from repro.core.pipeline_model import (
     estimate_feedforward,
     speedup,
 )
-from repro.core.planner import Plan, plan_pipe
+from repro.core.planner import (
+    Plan,
+    plan_cache_clear,
+    plan_cache_info,
+    plan_pipe,
+    planned_pipe,
+    resolve_auto,
+)
 
 __all__ = [
     "ARRIA_CX",
     "Footprint",
+    "GatherRingPipe",
     "HardwareModel",
     "Pipe",
     "PipelineEstimate",
     "Plan",
+    "RingPipe",
     "StreamSpec",
     "TPU_V5E",
     "Workload",
+    "acquire",
+    "cdiv",
     "check_no_mlcd",
     "estimate_baseline",
     "estimate_feedforward",
+    "pad_to",
+    "plan_cache_clear",
+    "plan_cache_info",
     "plan_pipe",
+    "planned_pipe",
     "reduction_stream",
+    "release",
     "required_depth",
+    "resolve_auto",
     "run_multistream_reference",
     "run_reference",
     "speedup",

@@ -10,7 +10,10 @@ framework can size pipes automatically per kernel call site.
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence, Tuple
+import functools
+from typing import Sequence, Tuple, Union
+
+import jax.numpy as jnp
 
 from repro.core.pipe import Pipe, required_depth, vmem_budget_ok
 from repro.core.pipeline_model import (
@@ -73,3 +76,78 @@ def plan_pipe(
             best = cand
     assert best is not None, "no feasible pipe under VMEM budget"
     return best
+
+
+# -- call-site auto-sizing (depth="auto" / streams="auto") --------------------
+#
+# Every kernel's public op wrapper routes through here: the op builds its
+# Workload from the call-site shapes and the planner returns the (depth,
+# streams) the analytic model picks. Plans are memoized: the key is
+# (op, workload, tile, dtype, hw, knobs) — workload and tile are pure
+# functions of (op, shape, dtype), so this is the per-(op, shape, dtype, hw)
+# plan cache with no risk of shape aliasing.
+
+
+@functools.lru_cache(maxsize=1024)
+def _plan_cached(op: str, w: Workload, tile: Tuple[int, ...],
+                 dtype_name: str, hw: HardwareModel,
+                 stream_options: Tuple[int, ...], depth_cap: int,
+                 vmem_budget_bytes: int) -> Plan:
+    return plan_pipe(w, tile, jnp.dtype(dtype_name), hw,
+                     stream_options=stream_options, depth_cap=depth_cap,
+                     vmem_budget_bytes=vmem_budget_bytes)
+
+
+def planned_pipe(
+    op: str,
+    w: Workload,
+    tile: Tuple[int, ...],
+    dtype,
+    hw: HardwareModel = TPU_V5E,
+    stream_options: Sequence[int] = (1, 2, 4),
+    depth_cap: int = 17,
+    vmem_budget_bytes: int = 96 * 1024 * 1024,
+) -> Plan:
+    """Memoized :func:`plan_pipe` for one kernel call site."""
+    return _plan_cached(op, w, tuple(tile), jnp.dtype(dtype).name, hw,
+                        tuple(stream_options), depth_cap, vmem_budget_bytes)
+
+
+def resolve_auto(
+    op: str,
+    depth: Union[int, str],
+    streams: Union[int, str],
+    *,
+    workload: Workload,
+    tile: Tuple[int, ...],
+    dtype,
+    hw: HardwareModel = TPU_V5E,
+    stream_options: Sequence[int] = (1, 2, 4),
+) -> Tuple[int, int]:
+    """Resolve ``depth="auto"`` / ``streams="auto"`` to planned integers.
+
+    Explicit integers pass through untouched (the paper's programmer-chosen
+    sizing stays available); the planner only runs when at least one of the
+    two is ``"auto"``, and its Plan is served from the per-(op, shape,
+    dtype, hw) cache on repeat call sites.
+    """
+    for label, val in (("depth", depth), ("streams", streams)):
+        if isinstance(val, str) and val != "auto":
+            raise ValueError(
+                f"{label} must be an int or the string 'auto', got {val!r}")
+    if depth != "auto" and streams != "auto":
+        return int(depth), int(streams)
+    plan = planned_pipe(op, workload, tile, dtype, hw,
+                        stream_options=stream_options)
+    d = plan.pipe.depth if depth == "auto" else int(depth)
+    s = plan.pipe.streams if streams == "auto" else int(streams)
+    return d, s
+
+
+def plan_cache_info():
+    """Hit/miss stats of the planner's plan cache (functools CacheInfo)."""
+    return _plan_cached.cache_info()
+
+
+def plan_cache_clear() -> None:
+    _plan_cached.cache_clear()

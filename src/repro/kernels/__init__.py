@@ -7,12 +7,67 @@ design model, one subpackage per hot spot:
   ff_chunk_scan        gated linear-attention scan (Mamba2 / RWKV6)
   ff_gather            irregular row gather (embedding / MoE dispatch)
 
-Each subpackage: kernel.py (pl.pallas_call + BlockSpec + explicit ring-pipe
-DMAs), ops.py (jit wrapper + exact tile-schedule cost model), ref.py
-(pure-jnp oracle). Kernels validate under interpret=True on CPU; real-TPU
-lowering is the target.
+Each subpackage: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit
+wrapper + exact tile-schedule cost model + registration), ref.py (pure-jnp
+oracle). Kernels validate under interpret=True on CPU; real-TPU lowering is
+the target.
+
+The emitter/registry contract — what a *new* kernel must provide
+----------------------------------------------------------------
+
+1. **Emit pipelines through the shared ring-pipe emitter**
+   (:mod:`repro.core.emitter`), never hand-rolled DMA loops. In kernel.py:
+
+   * build one :class:`~repro.core.emitter.RingPipe` per operand stream
+     from its :class:`~repro.core.pipe.Pipe` spec (regular block copies),
+     or a :class:`~repro.core.emitter.GatherRingPipe` for irregular
+     per-row gathers;
+   * splat each ring's ``scratch_shapes`` into the pallas_call scratch
+     list — the emitter owns the VMEM ring buffer and DMA semaphores;
+   * inside the kernel, ``bind(buf, sems, slicer)`` each ring to its
+     scratch refs and HBM address stream (the slicer may depend only on
+     the word index — the feed-forward restriction), then use the
+     primitives: ``acquire(g, n_words, pipes)`` / ``slot(g)`` /
+     ``release(g, n_words, pipes)``. ``depth == 1`` automatically
+     degenerates to the synchronous copy-then-compute baseline.
+
+2. **Register with the kernel registry**
+   (:mod:`repro.kernels.registry`). In ops.py, call
+   :func:`~repro.kernels.registry.register_kernel` with the public op
+   wrapper (modes "ff"/"baseline"/"ref"), the pure-jnp oracle, the
+   KernelCost model, a Workload builder (shapes -> (core.Workload, tile)),
+   tiny smoke inputs, and a benchmark shape point. The benchmark harness
+   (benchmarks/kernel_bench.py, ``benchmarks/run.py --smoke``) and the
+   registry tests enumerate the registry — a new kernel is its subpackage
+   plus the one ``register_kernel`` call, then add the ops module path to
+   ``registry._BUILTIN``.
+
+3. **Support planner auto-sizing.** The op wrapper must accept
+   ``depth="auto"`` / ``streams="auto"`` and resolve them through
+   :func:`repro.core.planner.resolve_auto` with the op's Workload — the
+   roofline model then picks (depth, streams) per call-site shape, cached
+   on (op, shape, dtype, hw).
 """
 
-from repro.kernels.dae import cdiv, pad_to
+from repro.core.emitter import cdiv, pad_to
+from repro.kernels.registry import (
+    KernelCost,
+    KernelSpec,
+    all_kernels,
+    get_kernel,
+    kernel_names,
+    register_kernel,
+    run_smoke,
+)
 
-__all__ = ["cdiv", "pad_to"]
+__all__ = [
+    "KernelCost",
+    "KernelSpec",
+    "all_kernels",
+    "cdiv",
+    "get_kernel",
+    "kernel_names",
+    "pad_to",
+    "register_kernel",
+    "run_smoke",
+]

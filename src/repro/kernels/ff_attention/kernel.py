@@ -23,8 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.emitter import RingPipe, acquire, release
 from repro.core.pipe import Pipe
-from repro.kernels.dae import RingPipe, dae_acquire, dae_release
 
 _NEG_INF = -1e30
 
@@ -32,27 +32,23 @@ _NEG_INF = -1e30
 def _kernel(q_ref, k_hbm, v_hbm, o_ref, m_sc, l_sc, acc,
             k_buf, k_sems, v_buf, v_sems,
             *, nq: int, nkv: int, kv_groups: int, bq: int, bkv: int, d: int,
-            causal: bool, scale: float, k_pipe: Pipe, v_pipe: Pipe, out_dtype):
+            causal: bool, scale: float, k_ring: RingPipe, v_ring: RingPipe,
+            out_dtype):
     g = pl.program_id(0)
     n_words = pl.num_programs(0)
     kj = g % nkv
     qi = (g // nkv) % nq
-    bh = g // (nkv * nq)
-    kv_bh = bh // kv_groups
 
-    def k_slice(word):
-        w_kj = word % nkv
-        w_bh = (word // (nkv * nq)) // kv_groups
-        return k_hbm.at[w_bh, pl.ds(w_kj * bkv, bkv), :]
+    def kv_slice(hbm):
+        def f(word):
+            w_kj = word % nkv
+            w_bh = (word // (nkv * nq)) // kv_groups
+            return hbm.at[w_bh, pl.ds(w_kj * bkv, bkv), :]
+        return f
 
-    def v_slice(word):
-        w_kj = word % nkv
-        w_bh = (word // (nkv * nq)) // kv_groups
-        return v_hbm.at[w_bh, pl.ds(w_kj * bkv, bkv), :]
-
-    pipes = [RingPipe(k_buf, k_sems, k_pipe, k_slice),
-             RingPipe(v_buf, v_sems, v_pipe, v_slice)]
-    dae_acquire(g, n_words, pipes, k_pipe.depth)
+    pipes = [k_ring.bind(k_buf, k_sems, kv_slice(k_hbm)),
+             v_ring.bind(v_buf, v_sems, kv_slice(v_hbm))]
+    acquire(g, n_words, pipes)
 
     @pl.when(kj == 0)
     def _():
@@ -67,8 +63,8 @@ def _kernel(q_ref, k_hbm, v_hbm, o_ref, m_sc, l_sc, acc,
     @pl.when(live)
     def _():
         q = q_ref[0]                                  # [bq, d]
-        k = pipes[0].word_ref(g)[...]                 # [bkv, d]
-        v = pipes[1].word_ref(g)[...]                 # [bkv, d]
+        k = k_ring.slot(g)[...]                       # [bkv, d]
+        v = v_ring.slot(g)[...]                       # [bkv, d]
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32) * scale   # [bq, bkv]
@@ -92,7 +88,7 @@ def _kernel(q_ref, k_hbm, v_hbm, o_ref, m_sc, l_sc, acc,
         l = jnp.where(l == 0.0, 1.0, l)               # fully-masked rows -> 0
         o_ref[0] = (acc[...] / l).astype(out_dtype)
 
-    dae_release(g, n_words, pipes, k_pipe.depth)
+    release(g, n_words, pipes)
 
 
 @functools.partial(
@@ -119,13 +115,15 @@ def flash_attention_ff(
     nq, nkv = s // block_q, skv // block_kv
     scale = 1.0 / (d ** 0.5)
 
-    k_pipe = Pipe(tile=(block_kv, d), dtype=k.dtype, depth=depth, streams=streams)
-    v_pipe = Pipe(tile=(block_kv, d), dtype=v.dtype, depth=depth, streams=streams)
+    k_ring = RingPipe(Pipe(tile=(block_kv, d), dtype=k.dtype, depth=depth,
+                           streams=streams))
+    v_ring = RingPipe(Pipe(tile=(block_kv, d), dtype=v.dtype, depth=depth,
+                           streams=streams))
 
     kernel = functools.partial(
         _kernel, nq=nq, nkv=nkv, kv_groups=kv_groups, bq=block_q,
         bkv=block_kv, d=d, causal=causal, scale=scale,
-        k_pipe=k_pipe, v_pipe=v_pipe, out_dtype=q.dtype)
+        k_ring=k_ring, v_ring=v_ring, out_dtype=q.dtype)
     return pl.pallas_call(
         kernel,
         grid=(bh * nq * nkv,),
@@ -142,9 +140,8 @@ def flash_attention_ff(
             pltpu.VMEM((block_q, 128), jnp.float32),
             pltpu.VMEM((block_q, 128), jnp.float32),
             pltpu.VMEM((block_q, d), jnp.float32),
-            *[x for p in (k_pipe, v_pipe) for x in
-              (pltpu.VMEM(p.buffer_shape, p.dtype),
-               pltpu.SemaphoreType.DMA((p.depth, p.streams)))],
+            *k_ring.scratch_shapes,
+            *v_ring.scratch_shapes,
         ],
         interpret=interpret,
     )(q, k, v)

@@ -2,12 +2,17 @@
 
 from __future__ import annotations
 
+from typing import Tuple, Union
+
+import jax
 import jax.numpy as jnp
 
-from repro.kernels.dae import cdiv, pad_to
+from repro.core.emitter import cdiv, pad_to
+from repro.core.pipeline_model import Workload
+from repro.core.planner import resolve_auto
 from repro.kernels.ff_attention.kernel import flash_attention_ff
 from repro.kernels.ff_attention.ref import attention_ref
-from repro.kernels.ff_matmul.ops import KernelCost
+from repro.kernels.registry import KernelCost, register_kernel
 
 
 def attention_cost(bh: int, s: int, d: int, *, causal: bool = True,
@@ -26,17 +31,41 @@ def attention_cost(bh: int, s: int, d: int, *, causal: bool = True,
     return KernelCost(flops=flops, hbm_bytes=float(hbm), vmem_bytes=vmem)
 
 
+def attention_workload(bh: int, s: int, d: int, *, causal: bool = True,
+                       block_q: int = 128, block_kv: int = 128,
+                       dtype=jnp.bfloat16) -> Tuple[Workload, Tuple[int, int]]:
+    """One pipe word per (bh, qi, kj) grid step: a K and a V tile. Causal
+    predication idles the consumer on dead blocks, not the stream."""
+    itemsize = jnp.dtype(dtype).itemsize
+    nq, nkv = cdiv(s, block_q), cdiv(s, block_kv)
+    frac = 0.5 if causal else 1.0
+    w = Workload(
+        n_words=bh * nq * nkv,
+        word_bytes=float(2 * block_kv * d * itemsize),
+        flops_per_word=4.0 * block_q * block_kv * d * frac,
+        regular=True,
+        store_bytes_per_word=float(block_q * d * itemsize) / nkv,
+    )
+    return w, (block_kv, d)
+
+
 def attention(q, k, v, *, kv_groups: int = 1, causal: bool = True,
-              block_q: int = 128, block_kv: int = 128, depth: int = 2,
-              streams: int = 1, mode: str = "ff", interpret: bool = True):
+              block_q: int = 128, block_kv: int = 128,
+              depth: Union[int, str] = 2, streams: Union[int, str] = 1,
+              mode: str = "ff", interpret: bool = True):
     """Flash attention over [BH, S, D] tensors (wrapper pads S to blocks).
 
-    mode="ff"|"baseline"(depth=1)|"ref".
+    mode="ff"|"baseline"(depth=1)|"ref"; depth/streams accept "auto"
+    (planner-sized per call-site shape).
     """
     if mode == "ref":
         return attention_ref(q, k, v, kv_groups=kv_groups, causal=causal)
     bh, s, d = q.shape
     skv = k.shape[1]
+    w, tile = attention_workload(bh, s, d, causal=causal, block_q=block_q,
+                                 block_kv=block_kv, dtype=q.dtype)
+    depth, streams = resolve_auto("ff_attention", depth, streams,
+                                  workload=w, tile=tile, dtype=q.dtype)
     qp = pad_to(q, block_q, 1)
     kp = pad_to(k, block_kv, 1)
     vp = pad_to(v, block_kv, 1)
@@ -50,3 +79,25 @@ def attention(q, k, v, *, kv_groups: int = 1, causal: bool = True,
         qp, kp, vp, kv_groups=kv_groups, block_q=block_q, block_kv=block_kv,
         depth=depth, streams=streams, causal=causal, interpret=interpret)
     return out[:, :s, :]
+
+
+def _make_inputs(key):
+    q = jax.random.normal(key, (2, 192, 64), jnp.float32)
+    kv = jax.random.normal(jax.random.fold_in(key, 1), (1, 192, 64),
+                           jnp.float32)
+    return (q, kv, kv), {"kv_groups": 2, "causal": True, "block_q": 64,
+                         "block_kv": 64}
+
+
+register_kernel(
+    name="ff_attention",
+    op=attention,
+    ref=attention_ref,
+    cost=attention_cost,
+    workload=attention_workload,
+    make_inputs=_make_inputs,
+    bench_kwargs={"bh": 32, "s": 8192, "d": 128, "dtype": jnp.bfloat16},
+    regular=True,
+    tol=2e-4,
+    doc="flash attention prefill, GQA, KV ring pipes",
+)

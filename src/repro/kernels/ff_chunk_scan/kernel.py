@@ -32,8 +32,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.emitter import RingPipe, acquire, release
 from repro.core.pipe import Pipe
-from repro.kernels.dae import RingPipe, dae_acquire, dae_release
 
 
 def _chunk_body(q, k, v, lw, u, h_prev, *, subtile: int, inclusive: bool):
@@ -97,7 +97,7 @@ def _chunk_body(q, k, v, lw, u, h_prev, *, subtile: int, inclusive: bool):
 def _kernel(q_hbm, k_hbm, v_hbm, w_hbm, u_ref, o_ref, h_sc,
             q_buf, q_sems, k_buf, k_sems, v_buf, v_sems, w_buf, w_sems,
             *, nc: int, chunk: int, subtile: int, inclusive: bool,
-            has_u: bool, qn_pipe: Pipe, v_pipe: Pipe, out_dtype):
+            has_u: bool, rings, out_dtype):
     g = pl.program_id(0)
     n_words = pl.num_programs(0)
     c = g % nc
@@ -109,20 +109,21 @@ def _kernel(q_hbm, k_hbm, v_hbm, w_hbm, u_ref, o_ref, h_sc,
             return hbm.at[w_bh, pl.ds(w_c * chunk, chunk), :]
         return f
 
-    pipes = [RingPipe(q_buf, q_sems, qn_pipe, slicer(q_hbm)),
-             RingPipe(k_buf, k_sems, qn_pipe, slicer(k_hbm)),
-             RingPipe(v_buf, v_sems, v_pipe, slicer(v_hbm)),
-             RingPipe(w_buf, w_sems, qn_pipe, slicer(w_hbm))]
-    dae_acquire(g, n_words, pipes, qn_pipe.depth)
+    q_ring, k_ring, v_ring, w_ring = rings
+    pipes = [q_ring.bind(q_buf, q_sems, slicer(q_hbm)),
+             k_ring.bind(k_buf, k_sems, slicer(k_hbm)),
+             v_ring.bind(v_buf, v_sems, slicer(v_hbm)),
+             w_ring.bind(w_buf, w_sems, slicer(w_hbm))]
+    acquire(g, n_words, pipes)
 
     @pl.when(c == 0)
     def _():
         h_sc[...] = jnp.zeros_like(h_sc)
 
-    q = pipes[0].word_ref(g)[...].astype(jnp.float32)
-    k = pipes[1].word_ref(g)[...].astype(jnp.float32)
-    v = pipes[2].word_ref(g)[...].astype(jnp.float32)
-    lw = jnp.minimum(pipes[3].word_ref(g)[...].astype(jnp.float32), 0.0)
+    q = q_ring.slot(g)[...].astype(jnp.float32)
+    k = k_ring.slot(g)[...].astype(jnp.float32)
+    v = v_ring.slot(g)[...].astype(jnp.float32)
+    lw = jnp.minimum(w_ring.slot(g)[...].astype(jnp.float32), 0.0)
     u = u_ref[0].astype(jnp.float32) if has_u else None
 
     y, h_new = _chunk_body(q, k, v, lw, u, h_sc[...],
@@ -130,7 +131,7 @@ def _kernel(q_hbm, k_hbm, v_hbm, w_hbm, u_ref, o_ref, h_sc,
     h_sc[...] = h_new
     o_ref[0] = y.astype(out_dtype)
 
-    dae_release(g, n_words, pipes, qn_pipe.depth)
+    release(g, n_words, pipes)
 
 
 @functools.partial(
@@ -159,10 +160,11 @@ def chunk_scan_ff(
 
     qn_pipe = Pipe(tile=(chunk, n), dtype=q.dtype, depth=depth, streams=streams)
     v_pipe = Pipe(tile=(chunk, p), dtype=v.dtype, depth=depth, streams=streams)
+    rings = tuple(RingPipe(s) for s in (qn_pipe, qn_pipe, v_pipe, qn_pipe))
 
     kernel = functools.partial(
         _kernel, nc=nc, chunk=chunk, subtile=subtile, inclusive=inclusive,
-        has_u=has_u, qn_pipe=qn_pipe, v_pipe=v_pipe, out_dtype=q.dtype)
+        has_u=has_u, rings=rings, out_dtype=q.dtype)
     in_specs = [
         pl.BlockSpec(memory_space=pl.ANY),
         pl.BlockSpec(memory_space=pl.ANY),
@@ -179,9 +181,7 @@ def chunk_scan_ff(
         out_shape=jax.ShapeDtypeStruct((bh, s, p), q.dtype),
         scratch_shapes=[
             pltpu.VMEM((n, p), jnp.float32),
-            *[x for pp in (qn_pipe, qn_pipe, v_pipe, qn_pipe) for x in
-              (pltpu.VMEM(pp.buffer_shape, pp.dtype),
-               pltpu.SemaphoreType.DMA((pp.depth, pp.streams)))],
+            *[s for r in rings for s in r.scratch_shapes],
         ],
         interpret=interpret,
     )(*args)

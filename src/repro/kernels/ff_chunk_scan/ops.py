@@ -2,12 +2,17 @@
 
 from __future__ import annotations
 
+from typing import Tuple, Union
+
+import jax
 import jax.numpy as jnp
 
-from repro.kernels.dae import pad_to
+from repro.core.emitter import cdiv, pad_to
+from repro.core.pipeline_model import Workload
+from repro.core.planner import resolve_auto
 from repro.kernels.ff_chunk_scan.kernel import chunk_scan_ff
 from repro.kernels.ff_chunk_scan.ref import chunk_scan_ref, chunk_scan_xla
-from repro.kernels.ff_matmul.ops import KernelCost
+from repro.kernels.registry import KernelCost, register_kernel
 
 
 def chunk_scan_cost(bh: int, s: int, n: int, p: int, *, chunk: int = 64,
@@ -22,14 +27,35 @@ def chunk_scan_cost(bh: int, s: int, n: int, p: int, *, chunk: int = 64,
                       vmem_bytes=vmem)
 
 
+def chunk_scan_workload(bh: int, s: int, n: int, p: int, *, chunk: int = 64,
+                        dtype=jnp.bfloat16) -> Tuple[Workload, Tuple[int, int]]:
+    """One word per (bh, chunk): q/k/w [L,N] and v [L,P] tiles. The chunk-
+    boundary state is the DLCD — carried in the consumer, so the streams
+    pipeline at full depth regardless (the paper's Fig. 3 move)."""
+    itemsize = jnp.dtype(dtype).itemsize
+    nc = max(cdiv(s, chunk), 1)
+    per_chunk = 2.0 * chunk * n * p * 2 + chunk * chunk * (n + p)
+    w = Workload(
+        n_words=bh * nc,
+        word_bytes=float(chunk * (3 * n + p) * itemsize),
+        flops_per_word=per_chunk,
+        regular=True,
+        dlcd_cycles=2.0 * n,      # h update chain per chunk, consumer-side
+        store_bytes_per_word=float(chunk * p * itemsize),
+    )
+    return w, (chunk, n)
+
+
 def chunk_scan(q, k, v, log_w, u=None, *, chunk: int = 64, subtile: int = 16,
-               inclusive: bool = True, depth: int = 2, streams: int = 1,
+               inclusive: bool = True, depth: Union[int, str] = 2,
+               streams: Union[int, str] = 1,
                mode: str = "ff", interpret: bool = True):
     """Gated linear-attention scan over [BH, S, *] streams.
 
     mode="ff"|"baseline"(depth=1)|"ref"(naive scan)|"xla"|"xla_tiled"
     (chunked, HLO-visible; _tiled = tile-pair factorized intra-chunk).
     Pads S up to a chunk multiple (decay 1, zero k/v contribute nothing).
+    depth/streams accept "auto" (planner-sized).
     """
     if mode == "ref":
         return chunk_scan_ref(q, k, v, log_w, u, inclusive=inclusive)
@@ -40,7 +66,11 @@ def chunk_scan(q, k, v, log_w, u=None, *, chunk: int = 64, subtile: int = 16,
         return chunk_scan_xla(qp, kp, vp, lwp, u, chunk=chunk,
                               inclusive=inclusive,
                               tiled=mode == "xla_tiled")[:, :s]
-    s = q.shape[1]
+    bh, s, n = q.shape
+    p = v.shape[2]
+    w, tile = chunk_scan_workload(bh, s, n, p, chunk=chunk, dtype=q.dtype)
+    depth, streams = resolve_auto("ff_chunk_scan", depth, streams,
+                                  workload=w, tile=tile, dtype=q.dtype)
     qp, kp, vp = (pad_to(x, chunk, 1) for x in (q, k, v))
     lwp = pad_to(log_w, chunk, 1)
     if mode == "baseline":
@@ -49,3 +79,29 @@ def chunk_scan(q, k, v, log_w, u=None, *, chunk: int = 64, subtile: int = 16,
                         inclusive=inclusive, depth=depth, streams=streams,
                         interpret=interpret)
     return out[:, :s]
+
+
+def _make_inputs(key):
+    bh, s, n, p = 2, 128, 16, 32
+    q = 0.5 * jax.random.normal(key, (bh, s, n), jnp.float32)
+    k = 0.5 * jax.random.normal(jax.random.fold_in(key, 1), (bh, s, n),
+                                jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (bh, s, p), jnp.float32)
+    lw = -0.5 * jnp.exp(jax.random.normal(jax.random.fold_in(key, 3),
+                                          (bh, s, n)))
+    return (q, k, v, lw), {"chunk": 64, "subtile": 16, "inclusive": True}
+
+
+register_kernel(
+    name="ff_chunk_scan",
+    op=chunk_scan,
+    ref=chunk_scan_ref,
+    cost=chunk_scan_cost,
+    workload=chunk_scan_workload,
+    make_inputs=_make_inputs,
+    bench_kwargs={"bh": 64, "s": 4096, "n": 64, "p": 64,
+                  "dtype": jnp.bfloat16},
+    regular=True,
+    tol=1e-3,
+    doc="gated linear-attention scan (Mamba2 / RWKV6)",
+)

@@ -2,12 +2,17 @@
 
 from __future__ import annotations
 
+from typing import Tuple, Union
+
+import jax
 import jax.numpy as jnp
 
-from repro.kernels.dae import cdiv
+from repro.core.emitter import cdiv
+from repro.core.pipeline_model import Workload
+from repro.core.planner import resolve_auto
 from repro.kernels.ff_decode_attention.kernel import decode_attention_ff
 from repro.kernels.ff_decode_attention.ref import decode_attention_ref
-from repro.kernels.ff_matmul.ops import KernelCost
+from repro.kernels.registry import KernelCost, register_kernel
 
 
 def decode_attention_cost(b: int, h: int, kvh: int, s: int, d: int,
@@ -21,14 +26,32 @@ def decode_attention_cost(b: int, h: int, kvh: int, s: int, d: int,
     return KernelCost(flops=flops, hbm_bytes=float(hbm), vmem_bytes=vmem)
 
 
+def decode_attention_workload(b: int, h: int, kvh: int, s: int, d: int,
+                              *, block_kv: int = 128, dtype=jnp.bfloat16
+                              ) -> Tuple[Workload, Tuple[int, int]]:
+    """One word per (b, kvh, kj): a K and a V cache tile. The whole KV
+    cache streams once — the paper's regular, DLCD-free favourable case."""
+    itemsize = jnp.dtype(dtype).itemsize
+    nkv = cdiv(s, block_kv)
+    group = max(h // kvh, 1)
+    w = Workload(
+        n_words=b * kvh * nkv,
+        word_bytes=float(2 * block_kv * d * itemsize),
+        flops_per_word=4.0 * group * block_kv * d,
+        regular=True,
+    )
+    return w, (block_kv, d)
+
+
 def decode_attention(q, k, v, lengths=None, *, kv_heads: int = None,
-                     block_kv: int = 128, depth: int = 2, streams: int = 1,
+                     block_kv: int = 128, depth: Union[int, str] = 2,
+                     streams: Union[int, str] = 1,
                      mode: str = "ff", interpret: bool = True):
     """Decode attention for one new token.
 
     q: [B, H, D]; k, v: [B, KVH, S, D]; lengths: [B] int32 (defaults to S).
     Returns [B, H, D]. The wrapper regroups q heads per KV head and pads the
-    group to the 8-sublane granule.
+    group to the 8-sublane granule. depth/streams accept "auto".
     """
     b, h, d = q.shape
     _, kvh, s, _ = k.shape
@@ -39,6 +62,10 @@ def decode_attention(q, k, v, lengths=None, *, kv_heads: int = None,
     if mode == "ref":
         qg = q.reshape(b, kvh, group, d)
         return decode_attention_ref(qg, k, v, lengths).reshape(b, h, d)
+    w, tile = decode_attention_workload(b, h, kvh, s, d, block_kv=block_kv,
+                                        dtype=k.dtype)
+    depth, streams = resolve_auto("ff_decode_attention", depth, streams,
+                                  workload=w, tile=tile, dtype=k.dtype)
     g_pad = -(-group // 8) * 8
     qg = q.reshape(b, kvh, group, d)
     qg = jnp.pad(qg, ((0, 0), (0, 0), (0, g_pad - group), (0, 0)))
@@ -48,3 +75,28 @@ def decode_attention(q, k, v, lengths=None, *, kv_heads: int = None,
         qg, k, v, lengths.astype(jnp.int32), block_kv=block_kv, depth=depth,
         streams=streams, interpret=interpret)
     return out[:, :, :group, :].reshape(b, h, d)
+
+
+def _make_inputs(key):
+    q = jax.random.normal(key, (2, 4, 64), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (2, 2, 128, 64),
+                          jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (2, 2, 128, 64),
+                          jnp.float32)
+    lens = jnp.array([70, 128], jnp.int32)
+    return (q, k, v, lens), {"block_kv": 64}
+
+
+register_kernel(
+    name="ff_decode_attention",
+    op=decode_attention,
+    ref=decode_attention_ref,
+    cost=decode_attention_cost,
+    workload=decode_attention_workload,
+    make_inputs=_make_inputs,
+    bench_kwargs={"b": 8, "h": 64, "kvh": 8, "s": 32768, "d": 128,
+                  "dtype": jnp.bfloat16},
+    regular=True,
+    tol=2e-4,
+    doc="flash-decode vs. long KV caches",
+)

@@ -5,7 +5,9 @@ dispatch / embedding lookup in our models). The index stream is scalar-
 prefetched (TPU analogue of the FPGA burst-coalesced LSU's request buffer),
 and each pipe word is a bundle of ``rows_per_word`` single-row DMAs issued
 ``depth-1`` words ahead — memory-level parallelism for a pattern the MXU
-pipeline cannot prefetch on its own.
+pipeline cannot prefetch on its own. The per-row bundle is emitted through
+the shared :class:`~repro.core.emitter.GatherRingPipe`: the rows *are* the
+stream decomposition (depth-1 words x rows outstanding requests).
 
 A true-MLCD variant of this op (gather from a table the same kernel is
 scattering into) is *rejected* by core.check_no_mlcd and deliberately has no
@@ -21,52 +23,24 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.emitter import GatherRingPipe, acquire, release
+from repro.core.pipe import Pipe
+
 _ROWS = 8   # rows per pipe word (one f32 sublane granule)
 
 
-def _kernel(idx_ref, tab_hbm, o_ref, buf, sems, *, depth: int, cols: int):
+def _kernel(idx_ref, tab_hbm, o_ref, buf, sems, *, ring: GatherRingPipe):
     g = pl.program_id(0)
     n_words = pl.num_programs(0)
 
-    def start(word):
-        slot = word % depth
-        for r in range(_ROWS):
-            row = idx_ref[word * _ROWS + r]
-            pltpu.make_async_copy(
-                tab_hbm.at[pl.ds(row, 1), :],
-                buf.at[slot, pl.ds(r, 1), :],
-                sems.at[slot, r],
-            ).start()
+    def row_slice(word, r):
+        row = idx_ref[word * _ROWS + r]
+        return tab_hbm.at[pl.ds(row, 1), :]
 
-    def wait(word):
-        slot = word % depth
-        for r in range(_ROWS):
-            row = idx_ref[word * _ROWS + r]
-            pltpu.make_async_copy(
-                tab_hbm.at[pl.ds(row, 1), :],
-                buf.at[slot, pl.ds(r, 1), :],
-                sems.at[slot, r],
-            ).wait()
-
-    if depth == 1:
-        start(g)
-        wait(g)
-    else:
-        @pl.when(g == 0)
-        def _():
-            for d in range(depth):
-                @pl.when(d < n_words)
-                def _(d=d):
-                    start(d)
-
-        wait(g)
-
-    o_ref[...] = buf[g % depth]
-
-    if depth > 1:
-        @pl.when(g + depth < n_words)
-        def _():
-            start(g + depth)
+    pipe = ring.bind(buf, sems, row_slice)
+    acquire(g, n_words, [pipe])
+    o_ref[...] = pipe.slot(g)[...]
+    release(g, n_words, [pipe])
 
 
 @functools.partial(jax.jit, static_argnames=("depth", "interpret"))
@@ -76,7 +50,9 @@ def gather_ff(table: jnp.ndarray, idx: jnp.ndarray, *, depth: int = 4,
     r, c = table.shape
     n = idx.shape[0]
     assert n % _ROWS == 0, n
-    kernel = functools.partial(_kernel, depth=depth, cols=c)
+    ring = GatherRingPipe(Pipe(tile=(_ROWS, c), dtype=table.dtype,
+                               depth=depth))
+    kernel = functools.partial(_kernel, ring=ring)
     return pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
@@ -84,10 +60,7 @@ def gather_ff(table: jnp.ndarray, idx: jnp.ndarray, *, depth: int = 4,
             grid=(n // _ROWS,),
             in_specs=[pl.BlockSpec(memory_space=pl.ANY)],
             out_specs=pl.BlockSpec((_ROWS, c), lambda g, idx: (g, 0)),
-            scratch_shapes=[
-                pltpu.VMEM((depth, _ROWS, c), table.dtype),
-                pltpu.SemaphoreType.DMA((depth, _ROWS)),
-            ],
+            scratch_shapes=[*ring.scratch_shapes],
         ),
         out_shape=jax.ShapeDtypeStruct((n, c), table.dtype),
         interpret=interpret,

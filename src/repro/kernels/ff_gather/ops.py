@@ -2,11 +2,17 @@
 
 from __future__ import annotations
 
+from typing import Tuple, Union
+
+import jax
 import jax.numpy as jnp
 
-from repro.kernels.ff_gather.kernel import gather_ff
+from repro.core.emitter import cdiv
+from repro.core.pipeline_model import Workload
+from repro.core.planner import resolve_auto
+from repro.kernels.ff_gather.kernel import _ROWS, gather_ff
 from repro.kernels.ff_gather.ref import gather_ref
-from repro.kernels.ff_matmul.ops import KernelCost
+from repro.kernels.registry import KernelCost, register_kernel
 
 
 def gather_cost(n: int, cols: int, *, depth: int = 4,
@@ -15,19 +21,66 @@ def gather_cost(n: int, cols: int, *, depth: int = 4,
     return KernelCost(
         flops=0.0,
         hbm_bytes=float(2 * n * cols * itemsize + n * 4),
-        vmem_bytes=depth * 8 * cols * itemsize,
+        vmem_bytes=depth * _ROWS * cols * itemsize,
     )
 
 
-def gather(table, idx, *, depth: int = 4, mode: str = "ff",
+def gather_workload(n: int, cols: int, *,
+                    dtype=jnp.float32) -> Tuple[Workload, Tuple[int, int]]:
+    """One word per 8-row bundle of irregular single-row loads — the
+    paper's IR access pattern: latency per word, hidden by (depth-1) x rows
+    outstanding row DMAs."""
+    itemsize = jnp.dtype(dtype).itemsize
+    w = Workload(
+        n_words=max(cdiv(n, _ROWS), 1),
+        word_bytes=float(_ROWS * cols * itemsize),
+        flops_per_word=0.0,
+        regular=False,
+        store_bytes_per_word=float(_ROWS * cols * itemsize),
+    )
+    return w, (_ROWS, cols)
+
+
+def gather(table, idx, *, depth: Union[int, str] = 4,
+           streams: Union[int, str] = 1, mode: str = "ff",
            interpret: bool = True):
-    """rows = table[idx]; mode="ff"|"baseline"(depth=1)|"ref"."""
+    """rows = table[idx]; mode="ff"|"baseline"(depth=1)|"ref".
+
+    depth accepts "auto" (planner-sized for the irregular stream). streams
+    is accepted for API uniformity but the row bundle *is* the stream
+    decomposition here (8 concurrent row DMAs per word), so the planned
+    value only affects the model, not emission.
+    """
     if mode == "ref":
         return gather_ref(table, idx)
     n = idx.shape[0]
-    pad = (-n) % 8
+    cols = table.shape[1]
+    w, tile = gather_workload(n, cols, dtype=table.dtype)
+    depth, _streams = resolve_auto("ff_gather", depth, streams,
+                                   workload=w, tile=tile, dtype=table.dtype)
+    pad = (-n) % _ROWS
     idx_p = jnp.pad(idx.astype(jnp.int32), (0, pad))
     if mode == "baseline":
         depth = 1
     out = gather_ff(table, idx_p, depth=depth, interpret=interpret)
     return out[:n]
+
+
+def _make_inputs(key):
+    tab = jax.random.normal(key, (96, 128), jnp.float32)
+    idx = jax.random.randint(jax.random.fold_in(key, 1), (52,), 0, 96)
+    return (tab, idx), {}
+
+
+register_kernel(
+    name="ff_gather",
+    op=gather,
+    ref=gather_ref,
+    cost=gather_cost,
+    workload=gather_workload,
+    make_inputs=_make_inputs,
+    bench_kwargs={"n": 1 << 20, "cols": 512, "dtype": jnp.float32},
+    regular=False,
+    tol=0.0,
+    doc="irregular row gather (embedding / MoE dispatch)",
+)

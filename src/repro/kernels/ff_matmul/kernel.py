@@ -25,20 +25,18 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.emitter import RingPipe, acquire, release
 from repro.core.pipe import Pipe
-from repro.kernels.dae import RingPipe, dae_acquire, dae_release, ring_scratch
 
 
 def _kernel(a_hbm, b_hbm, o_ref, acc, a_buf, a_sems, b_buf, b_sems,
-            *, nm: int, nn: int, nk: int, a_pipe: Pipe, b_pipe: Pipe,
+            *, nm: int, nn: int, nk: int, a_ring: RingPipe, b_ring: RingPipe,
             out_dtype):
     g = pl.program_id(0)
     n_words = nm * nn * nk
     ki = g % nk
-    ni = (g // nk) % nn
-    mi = g // (nk * nn)
-    bm, bk = a_pipe.tile
-    _, bn = b_pipe.tile
+    bm, bk = a_ring.spec.tile
+    _, bn = b_ring.spec.tile
 
     def a_slice(word):
         w_ki = word % nk
@@ -51,24 +49,24 @@ def _kernel(a_hbm, b_hbm, o_ref, acc, a_buf, a_sems, b_buf, b_sems,
         return b_hbm.at[pl.ds(w_ki * bk, bk), pl.ds(w_ni * bn, bn)]
 
     pipes = [
-        RingPipe(a_buf, a_sems, a_pipe, a_slice),
-        RingPipe(b_buf, b_sems, b_pipe, b_slice),
+        a_ring.bind(a_buf, a_sems, a_slice),
+        b_ring.bind(b_buf, b_sems, b_slice),
     ]
-    dae_acquire(g, n_words, pipes, a_pipe.depth)
+    acquire(g, n_words, pipes)
 
     @pl.when(ki == 0)
     def _():
         acc[...] = jnp.zeros_like(acc)
 
-    a_tile = pipes[0].word_ref(g)[...]
-    b_tile = pipes[1].word_ref(g)[...]
+    a_tile = a_ring.slot(g)[...]
+    b_tile = b_ring.slot(g)[...]
     acc[...] += jnp.dot(a_tile, b_tile, preferred_element_type=jnp.float32)
 
     @pl.when(ki == nk - 1)
     def _():
         o_ref[...] = acc[...].astype(out_dtype)
 
-    dae_release(g, n_words, pipes, a_pipe.depth)
+    release(g, n_words, pipes)
 
 
 @functools.partial(
@@ -93,11 +91,13 @@ def matmul_ff(
     nm, nn, nk = m // bm, n // bn, k // bk
     out_dtype = out_dtype or a.dtype
 
-    a_pipe = Pipe(tile=(bm, bk), dtype=a.dtype, depth=depth, streams=streams)
-    b_pipe = Pipe(tile=(bk, bn), dtype=b.dtype, depth=depth, streams=streams)
+    a_ring = RingPipe(Pipe(tile=(bm, bk), dtype=a.dtype, depth=depth,
+                           streams=streams))
+    b_ring = RingPipe(Pipe(tile=(bk, bn), dtype=b.dtype, depth=depth,
+                           streams=streams))
 
     kernel = functools.partial(
-        _kernel, nm=nm, nn=nn, nk=nk, a_pipe=a_pipe, b_pipe=b_pipe,
+        _kernel, nm=nm, nn=nn, nk=nk, a_ring=a_ring, b_ring=b_ring,
         out_dtype=out_dtype)
     return pl.pallas_call(
         kernel,
@@ -111,8 +111,8 @@ def matmul_ff(
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
         scratch_shapes=[
             pltpu.VMEM((bm, bn), jnp.float32),
-            *ring_scratch(a_pipe),
-            *ring_scratch(b_pipe),
+            *a_ring.scratch_shapes,
+            *b_ring.scratch_shapes,
         ],
         interpret=interpret,
     )(a, b)

@@ -2,27 +2,18 @@
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Tuple
+from typing import Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.emitter import cdiv, pad_to
 from repro.core.pipe import Pipe
-from repro.kernels.dae import cdiv, pad_to
+from repro.core.pipeline_model import Workload
+from repro.core.planner import resolve_auto
 from repro.kernels.ff_matmul.kernel import matmul_ff
 from repro.kernels.ff_matmul.ref import matmul_ref
-
-
-@dataclasses.dataclass(frozen=True)
-class KernelCost:
-    """Exact tile-schedule cost of one kernel call (used by the roofline:
-    Pallas custom calls are opaque to XLA cost analysis, so each op reports
-    its own deterministic FLOP/byte counts)."""
-
-    flops: float
-    hbm_bytes: float
-    vmem_bytes: int
+from repro.kernels.registry import KernelCost, register_kernel
 
 
 def matmul_cost(m: int, n: int, k: int,
@@ -44,20 +35,40 @@ def matmul_cost(m: int, n: int, k: int,
     )
 
 
+def matmul_workload(m: int, n: int, k: int,
+                    block: Tuple[int, int, int] = (128, 128, 128),
+                    dtype=jnp.float32) -> Tuple[Workload, Tuple[int, int]]:
+    """The kernel's stream program in pipe words: one word per (mi, ni, ki)
+    grid step, loading one A and one B tile. Planning tile = the A tile."""
+    bm, bn, bk = block
+    nm, nn, nk = cdiv(m, bm), cdiv(n, bn), cdiv(k, bk)
+    itemsize = jnp.dtype(dtype).itemsize
+    n_words = nm * nn * nk
+    w = Workload(
+        n_words=n_words,
+        word_bytes=float((bm * bk + bk * bn) * itemsize),
+        flops_per_word=2.0 * bm * bn * bk,
+        regular=True,
+        store_bytes_per_word=float(bm * bn * itemsize) / nk,
+    )
+    return w, (bm, bk)
+
+
 def matmul(
     a: jnp.ndarray,
     b: jnp.ndarray,
     *,
     block: Tuple[int, int, int] = (128, 128, 128),
-    depth: int = 2,
-    streams: int = 1,
+    depth: Union[int, str] = 2,
+    streams: Union[int, str] = 1,
     mode: str = "ff",
     out_dtype=None,
     interpret: bool = True,
 ) -> jnp.ndarray:
     """C = A @ B with auto-padding to the block grid.
 
-    mode="ff": DAE pipeline with the given pipe depth/streams.
+    mode="ff": DAE pipeline with the given pipe depth/streams; depth="auto"
+      / streams="auto" size the pipes via the roofline planner.
     mode="baseline": synchronous copy-then-compute (depth=1) — the paper's
       single work-item strawman.
     mode="ref": pure-jnp oracle (XLA-visible; used in model graphs and as
@@ -67,6 +78,9 @@ def matmul(
         return matmul_ref(a, b, out_dtype)
     m, k = a.shape
     _, n = b.shape
+    w, tile = matmul_workload(m, n, k, block, a.dtype)
+    depth, streams = resolve_auto("ff_matmul", depth, streams,
+                                  workload=w, tile=tile, dtype=a.dtype)
     bm, bn, bk = block
     ap = pad_to(pad_to(a, bm, 0), bk, 1)
     bp = pad_to(pad_to(b, bk, 0), bn, 1)
@@ -75,3 +89,23 @@ def matmul(
     out = matmul_ff(ap, bp, block=block, depth=depth, streams=streams,
                     out_dtype=out_dtype, interpret=interpret)
     return out[:m, :n]
+
+
+def _make_inputs(key):
+    a = jax.random.normal(key, (192, 136), jnp.float32)
+    b = jax.random.normal(jax.random.fold_in(key, 1), (136, 160), jnp.float32)
+    return (a, b), {"block": (128, 128, 128)}
+
+
+register_kernel(
+    name="ff_matmul",
+    op=matmul,
+    ref=matmul_ref,
+    cost=matmul_cost,
+    workload=matmul_workload,
+    make_inputs=_make_inputs,
+    bench_kwargs={"m": 4096, "n": 4096, "k": 4096, "dtype": jnp.bfloat16},
+    regular=True,
+    tol=5e-4,
+    doc="DAE blocked matmul (regular streams)",
+)

@@ -1,0 +1,119 @@
+"""Kernel registry: one KernelSpec per ff_* op, a single interface for the
+benchmarks, the planner, and the tests (style: models/registry.py).
+
+Each kernel subpackage registers itself at import time with
+:func:`register_kernel`, declaring:
+
+  op          public wrapper (accepts mode="ff"|"baseline"|"ref",
+              depth=int|"auto", streams=int|"auto", interpret=...)
+  ref         pure-jnp oracle
+  cost        exact tile-schedule cost model -> KernelCost
+  workload    Workload builder: call-site shapes -> (core.Workload, tile),
+              the planner's input for depth/streams auto-sizing
+  make_inputs tiny-input builder for smoke/equivalence runs
+
+so adding a sixth kernel is its subpackage plus one ``register_kernel``
+call — the benchmark harness, the ``--smoke`` mode, and the registry tests
+all pick it up by enumeration, nothing else changes.
+
+Registration is lazy: the five built-in subpackages are imported on first
+lookup, so ``import repro.kernels.registry`` alone stays cheap and the
+subpackages can import this module without a cycle.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Callable, Dict, Mapping, Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelCost:
+    """Exact tile-schedule cost of one kernel call (used by the roofline:
+    Pallas custom calls are opaque to XLA cost analysis, so each op reports
+    its own deterministic FLOP/byte counts)."""
+
+    flops: float
+    hbm_bytes: float
+    vmem_bytes: int
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelSpec:
+    """One registered kernel. ``bench_kwargs`` is the shape point used by
+    benchmarks/kernel_bench.py and must be accepted by both ``cost`` and
+    ``workload``."""
+
+    name: str
+    op: Callable[..., Any]
+    ref: Callable[..., Any]
+    cost: Callable[..., KernelCost]
+    workload: Callable[..., Tuple[Any, Tuple[int, ...]]]
+    make_inputs: Callable[..., Tuple[tuple, dict]]
+    bench_kwargs: Mapping[str, Any]
+    regular: bool = True
+    tol: float = 1e-4
+    doc: str = ""
+
+
+_REGISTRY: Dict[str, KernelSpec] = {}
+
+# the five built-in subpackages; their ops.py modules self-register on import
+_BUILTIN = (
+    "repro.kernels.ff_matmul.ops",
+    "repro.kernels.ff_attention.ops",
+    "repro.kernels.ff_decode_attention.ops",
+    "repro.kernels.ff_chunk_scan.ops",
+    "repro.kernels.ff_gather.ops",
+)
+
+
+def register_kernel(**fields) -> KernelSpec:
+    """Register one kernel (keyword form of KernelSpec). Re-registration
+    under the same name replaces the entry (supports module reloads)."""
+    spec = KernelSpec(**fields)
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def _ensure_loaded() -> None:
+    for mod in _BUILTIN:
+        importlib.import_module(mod)
+
+
+def kernel_names() -> Tuple[str, ...]:
+    _ensure_loaded()
+    return tuple(sorted(_REGISTRY))
+
+
+def all_kernels() -> Tuple[KernelSpec, ...]:
+    _ensure_loaded()
+    return tuple(_REGISTRY[n] for n in sorted(_REGISTRY))
+
+
+def get_kernel(name: str) -> KernelSpec:
+    _ensure_loaded()
+    if name not in _REGISTRY:
+        raise KeyError(
+            f"unknown kernel {name!r}; registered: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def run_smoke(spec: KernelSpec, *, depth="auto", streams="auto", seed: int = 0,
+              interpret: bool = True) -> Tuple[np.ndarray, np.ndarray, float]:
+    """Run ``spec`` at its tiny smoke shapes against its oracle.
+
+    Exercises the full planned path by default (depth/streams "auto" go
+    through plan_pipe). Returns (out, ref, max_abs_err).
+    """
+    import jax
+
+    args, kw = spec.make_inputs(jax.random.key(seed))
+    out = np.float32(spec.op(*args, **kw, mode="ff", depth=depth,
+                             streams=streams, interpret=interpret))
+    ref = np.float32(spec.op(*args, **kw, mode="ref"))
+    err = float(np.max(np.abs(out - ref))) if out.size else 0.0
+    return out, ref, err

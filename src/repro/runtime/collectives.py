@@ -17,10 +17,18 @@ import jax
 import jax.numpy as jnp
 
 
+def axis_size(axis_name: str) -> int:
+    """Static size of a mapped axis. jax >= 0.5 has jax.lax.axis_size;
+    older versions constant-fold psum(1, axis) to the same int."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
 def ring_allgather(x: jnp.ndarray, axis_name: str) -> jnp.ndarray:
     """All-gather along ``axis_name`` via a ppermute ring (shard_map body).
     Returns the concatenation over devices along dim 0."""
-    n = jax.lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     idx = jax.lax.axis_index(axis_name)
     perm = [(i, (i + 1) % n) for i in range(n)]
     chunks = [x]
@@ -48,7 +56,7 @@ def allgather_matmul(x_shard: jnp.ndarray, w: jnp.ndarray,
     replicated. Returns [m_shard * n_dev, n] — each hop's chunk multiplies
     while the next hop's ppermute is in flight.
     """
-    n_dev = jax.lax.axis_size(axis_name)
+    n_dev = axis_size(axis_name)
     idx = jax.lax.axis_index(axis_name)
     perm = [(i, (i + 1) % n_dev) for i in range(n_dev)]
     m = x_shard.shape[0]
@@ -73,7 +81,7 @@ def matmul_reducescatter(x: jnp.ndarray, w_shard: jnp.ndarray,
     x: [m, k_shard] (k sharded); w_shard: [k_shard, n]. Output: [m, n]
     reduced over the axis, scattered by rows: returns [m // n_dev, n].
     """
-    n_dev = jax.lax.axis_size(axis_name)
+    n_dev = axis_size(axis_name)
     idx = jax.lax.axis_index(axis_name)
     perm = [(i, (i - 1) % n_dev) for i in range(n_dev)]
     m = x.shape[0]

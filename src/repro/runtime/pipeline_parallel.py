@@ -18,6 +18,8 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
+from repro.runtime.collectives import axis_size
+
 
 def pipeline_apply(stage_fn: Callable[[Any, jnp.ndarray], jnp.ndarray],
                    stage_params: Any,
@@ -32,7 +34,7 @@ def pipeline_apply(stage_fn: Callable[[Any, jnp.ndarray], jnp.ndarray],
     Returns [M, mb, ...] final-stage outputs (valid on the last stage;
     replicated back by the caller if needed).
     """
-    n_stage = jax.lax.axis_size(axis_name)
+    n_stage = axis_size(axis_name)
     stage = jax.lax.axis_index(axis_name)
     m = microbatches.shape[0]
     ticks = m + n_stage - 1

@@ -5,8 +5,7 @@ import time
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-import hypothesis.strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.data import HostPipeline, SyntheticSpec, batch_at
 

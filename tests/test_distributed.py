@@ -21,7 +21,15 @@ def run_sub(body: str, n_dev: int = 8, timeout: int = 560) -> str:
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={n_dev}"
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-        shard_map = jax.shard_map
+        if hasattr(jax, "shard_map"):
+            shard_map = jax.shard_map
+        else:
+            # jax < 0.5: shard_map lives in jax.experimental and the
+            # replication-check kwarg is named check_rep, not check_vma
+            from jax.experimental.shard_map import shard_map as _shard_map
+            def shard_map(f, mesh, in_specs, out_specs, check_vma=True):
+                return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                                  out_specs=out_specs, check_rep=check_vma)
     """) + textwrap.dedent(body)
     env = {**os.environ, "PYTHONPATH": SRC, "JAX_PLATFORMS": "cpu"}
     r = subprocess.run([sys.executable, "-c", prog], env=env,

@@ -1,9 +1,8 @@
 """Property tests (hypothesis) for the analytic DAE pipeline model — the
 paper's qualitative findings must hold as *theorems* of the model."""
 
-import hypothesis.strategies as st
 import pytest
-from hypothesis import given, settings
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (
     ARRIA_CX,

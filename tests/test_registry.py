@@ -1,0 +1,94 @@
+"""Kernel registry + planner auto-sizing tests: the five built-in kernels
+are enumerable with sane cost/workload models, "auto" resolves to plans
+inside the VMEM budget, and repeat call sites hit the plan cache."""
+
+import math
+
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    TPU_V5E,
+    Workload,
+    plan_cache_clear,
+    plan_cache_info,
+    planned_pipe,
+    resolve_auto,
+    vmem_budget_ok,
+)
+from repro.kernels.registry import all_kernels, get_kernel, kernel_names
+
+EXPECTED = {"ff_matmul", "ff_attention", "ff_decode_attention",
+            "ff_chunk_scan", "ff_gather"}
+
+
+def test_all_five_kernels_enumerable():
+    assert set(kernel_names()) == EXPECTED
+    for spec in all_kernels():
+        assert callable(spec.op) and callable(spec.ref)
+        assert callable(spec.cost) and callable(spec.workload)
+
+
+def test_get_kernel_unknown_raises():
+    with pytest.raises(KeyError, match="ff_nonexistent"):
+        get_kernel("ff_nonexistent")
+
+
+def test_cost_models_finite_positive():
+    for spec in all_kernels():
+        c = spec.cost(**spec.bench_kwargs)
+        assert math.isfinite(c.flops) and c.flops >= 0, spec.name
+        assert math.isfinite(c.hbm_bytes) and c.hbm_bytes > 0, spec.name
+        assert c.vmem_bytes > 0, spec.name
+
+
+def test_workload_builders():
+    for spec in all_kernels():
+        w, tile = spec.workload(**spec.bench_kwargs)
+        assert isinstance(w, Workload), spec.name
+        assert w.n_words > 0 and w.word_bytes > 0, spec.name
+        assert w.regular == spec.regular, spec.name
+        assert len(tile) >= 2 and all(t > 0 for t in tile), spec.name
+
+
+def test_auto_plans_satisfy_vmem_budget():
+    for spec in all_kernels():
+        kw = dict(spec.bench_kwargs)
+        dtype = kw.get("dtype", jnp.float32)
+        w, tile = spec.workload(**kw)
+        plan = planned_pipe(spec.name, w, tile, dtype, TPU_V5E)
+        assert vmem_budget_ok([plan.pipe]), (spec.name, plan)
+        assert plan.pipe.depth >= 1 and plan.pipe.streams >= 1
+        assert plan.predicted_s > 0 and plan.predicted_bw > 0
+
+
+def test_resolve_auto_passthrough_and_planning():
+    spec = get_kernel("ff_matmul")
+    w, tile = spec.workload(512, 512, 512)
+    # explicit ints pass through without consulting the planner
+    assert resolve_auto("ff_matmul", 3, 2, workload=w, tile=tile,
+                        dtype=jnp.float32) == (3, 2)
+    d, s = resolve_auto("ff_matmul", "auto", "auto", workload=w, tile=tile,
+                        dtype=jnp.float32)
+    assert d >= 2 and s >= 1
+    # mixed: only the "auto" side comes from the plan
+    d2, s2 = resolve_auto("ff_matmul", 5, "auto", workload=w, tile=tile,
+                          dtype=jnp.float32)
+    assert d2 == 5 and s2 == s
+
+
+def test_plan_cache_hits_on_repeat_call_sites():
+    plan_cache_clear()
+    spec = get_kernel("ff_attention")
+    w, tile = spec.workload(8, 1024, 128)
+    p1 = planned_pipe(spec.name, w, tile, jnp.bfloat16)
+    before = plan_cache_info()
+    p2 = planned_pipe(spec.name, w, tile, jnp.bfloat16)
+    after = plan_cache_info()
+    assert p1 is p2
+    assert after.hits == before.hits + 1
+    assert after.misses == before.misses
+    # a different shape is a different call site -> miss
+    w3, tile3 = spec.workload(8, 2048, 128)
+    planned_pipe(spec.name, w3, tile3, jnp.bfloat16)
+    assert plan_cache_info().misses == after.misses + 1
