@@ -4,21 +4,31 @@ report. Prints ``name,us_per_call,derived`` CSV lines (detail lines are
 
 ``--smoke`` skips the modeled tables and instead exercises every kernel in
 the registry at tiny shapes with planner-sized pipes (interpret mode), so
-the perf plumbing — registry enumeration, auto planning, emitter DMA
-schedules — cannot silently rot even where full benches are too slow."""
+the perf plumbing — registry enumeration, auto planning, the StreamProgram
+compile path — cannot silently rot even where full benches are too slow.
+It also writes ``BENCH_smoke.json`` (override with ``--json``): per-kernel
+wall time, max error, and the modeled FF-vs-baseline speedup + planned
+(depth, streams) at the registry bench shape point, so CI tracks the perf
+trajectory run over run."""
 
 from __future__ import annotations
 
 import argparse
+import json
+import math
 import sys
 import time
 import traceback
 
 
-def smoke() -> None:
-    from repro.core import plan_cache_info
+def smoke(json_path: str = "BENCH_smoke.json") -> None:
+    import jax.numpy as jnp
+
+    from repro.core import (TPU_V5E, estimate_baseline, estimate_feedforward,
+                            plan_cache_info, planned_pipe)
     from repro.kernels.registry import all_kernels, run_smoke
 
+    results = []
     failures = []
     print("# smoke: every registered kernel, tiny shapes, depth/streams=auto")
     for spec in all_kernels():
@@ -29,12 +39,54 @@ def smoke() -> None:
         except Exception:   # noqa: BLE001 — report all kernels
             traceback.print_exc()
             ok, err = False, float("nan")
-        dt = (time.time() - t0) * 1e3
+        dt_ms = (time.time() - t0) * 1e3
+        row = {
+            "kernel": spec.name,
+            "alias": spec.alias,
+            "ok": bool(ok),
+            # None (JSON null), not NaN: bare NaN tokens break RFC-8259
+            # parsers of the CI-uploaded artifact
+            "max_abs_err": float(err) if math.isfinite(err) else None,
+            "tol": spec.tol,
+            "smoke_wall_ms": round(dt_ms, 1),
+            "model_ok": True,
+        }
+        try:
+            # modeled trajectory numbers at the bench shape point
+            kw = dict(spec.bench_kwargs)
+            dtype = kw.get("dtype", jnp.float32)
+            w, tile = spec.workload(**kw)
+            plan = planned_pipe(spec.name, w, tile, dtype, TPU_V5E)
+            base = estimate_baseline(w, TPU_V5E)
+            ff = estimate_feedforward(w, TPU_V5E, plan.pipe)
+            row.update({
+                "est_speedup": round(base.total_s / ff.total_s, 3),
+                "est_us_per_call": round(ff.total_s * 1e6, 1),
+                "plan": {"depth": plan.pipe.depth,
+                         "streams": plan.pipe.streams},
+                "bottleneck": ff.bottleneck,
+            })
+        except Exception:   # noqa: BLE001 — still report the other kernels
+            traceback.print_exc()
+            row["model_ok"] = False    # modeling bug, not a kernel failure
+            failures.append(f"{spec.name} (modeled metrics)")
+        results.append(row)
         status = "ok" if ok else "FAIL"
-        print(f"smoke/{spec.name},{dt:.0f},err={err:.1e}_{status}")
+        print(f"smoke/{spec.name},{dt_ms:.0f},err={err:.1e}_{status}")
         if not ok:
             failures.append(spec.name)
-    print(f"# plan cache: {plan_cache_info()}")
+    cache = plan_cache_info()
+    print(f"# plan cache: {cache}")
+    if json_path:
+        payload = {
+            "suite": "smoke",
+            "kernels": results,
+            "plan_cache": {"hits": cache.hits, "misses": cache.misses},
+        }
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"# wrote {json_path}")
     if failures:
         print(f"\nFAILED smoke kernels: {failures}", file=sys.stderr)
         raise SystemExit(1)
@@ -64,8 +116,11 @@ def main() -> None:
     parser.add_argument("--smoke", action="store_true",
                         help="run every registered kernel at tiny shapes "
                              "instead of the modeled benches")
+    parser.add_argument("--json", default="BENCH_smoke.json",
+                        help="path for the smoke-mode JSON report "
+                             "('' disables; default %(default)s)")
     args = parser.parse_args()
-    smoke() if args.smoke else full()
+    smoke(args.json) if args.smoke else full()
 
 
 if __name__ == "__main__":

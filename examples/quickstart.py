@@ -32,13 +32,21 @@ def pipe_planning():
 
 def kernel_demo():
     print("== 2. DAE kernel vs oracle (interpret mode) ==")
+    import repro
+
     k = jax.random.key(0)
     a = jax.random.normal(k, (256, 256), jnp.float32)
     b = jax.random.normal(jax.random.fold_in(k, 1), (256, 256), jnp.float32)
-    out = matmul(a, b, mode="ff", depth=3, streams=2)
     ref = matmul_ref(a, b)
-    print(f" ff_matmul(depth=3, streams=2) max|err| = "
+    # explicit per-call policy (the paper's programmer-chosen sizing)
+    out = repro.ops.matmul(a, b, policy=repro.PipePolicy(depth=3, streams=2))
+    print(f" ops.matmul(depth=3, streams=2) max|err| = "
           f"{float(jnp.max(jnp.abs(out - ref))):.2e}")
+    # session defaults: planner-sized ff vs the synchronous baseline
+    with repro.policy(mode="baseline"):
+        base = matmul(a, b)
+    print(f" baseline (depth=1 via repro.policy) max|err| = "
+          f"{float(jnp.max(jnp.abs(base - ref))):.2e}")
 
 
 def model_demo():

@@ -3,6 +3,37 @@
 Reproduction + extension of "Enabling The Feed-Forward Design Model in
 OpenCL Using Pipes" (Eghbali Zarch & Becchi, PACT'22) as a production-grade
 multi-pod training/serving framework. See DESIGN.md.
+
+Public API surface (lazily imported, so ``import repro`` stays cheap):
+
+  repro.ops.<name>(...)       registry-generated kernel entrypoints
+                              (matmul, attention, decode_attention,
+                              chunk_scan, gather, ...)
+  repro.PipePolicy            the unified pipe policy dataclass
+  repro.policy(...)           session-default policy context manager
+  repro.current_policy()      the active policy
 """
 
 __version__ = "0.1.0"
+
+_LAZY = {
+    "PipePolicy": ("repro.core.program", "PipePolicy"),
+    "policy": ("repro.core.program", "policy"),
+    "current_policy": ("repro.core.program", "current_policy"),
+    "ops": ("repro.ops", None),
+}
+
+
+def __getattr__(name):
+    try:
+        mod_name, attr = _LAZY[name]
+    except KeyError:
+        raise AttributeError(f"module 'repro' has no attribute {name!r}")
+    import importlib
+
+    mod = importlib.import_module(mod_name)
+    return mod if attr is None else getattr(mod, attr)
+
+
+def __dir__():
+    return sorted(list(globals()) + list(_LAZY))

@@ -9,6 +9,9 @@ Public API:
   estimate_baseline / estimate_feedforward / speedup
   plan_pipe                 roofline-driven (depth, streams) auto-tuner
   planned_pipe / resolve_auto  cached per-call-site plan + "auto" resolution
+  PipePolicy / policy       unified pipe policy + session-default context
+  StreamProgram / compile_program  declarative producer→pipe→consumer graphs
+                            lowered through the emitter into one pallas_call
 """
 
 from repro.core.emitter import (
@@ -46,34 +49,62 @@ from repro.core.planner import (
     plan_pipe,
     planned_pipe,
     resolve_auto,
+    resolve_policy,
+)
+from repro.core.program import (
+    BlockIn,
+    PipePolicy,
+    ProgramCtx,
+    ScalarIn,
+    ScratchSpec,
+    Stream,
+    StreamProgram,
+    compile_program,
+    current_policy,
+    make_entrypoint,
+    policy,
+    resolve_call_policy,
 )
 
 __all__ = [
     "ARRIA_CX",
+    "BlockIn",
     "Footprint",
     "GatherRingPipe",
     "HardwareModel",
     "Pipe",
+    "PipePolicy",
     "PipelineEstimate",
     "Plan",
+    "ProgramCtx",
     "RingPipe",
+    "ScalarIn",
+    "ScratchSpec",
+    "Stream",
+    "StreamProgram",
     "StreamSpec",
     "TPU_V5E",
     "Workload",
     "acquire",
     "cdiv",
     "check_no_mlcd",
+    "compile_program",
+    "current_policy",
     "estimate_baseline",
     "estimate_feedforward",
+    "make_entrypoint",
     "pad_to",
     "plan_cache_clear",
     "plan_cache_info",
     "plan_pipe",
     "planned_pipe",
+    "policy",
     "reduction_stream",
     "release",
     "required_depth",
     "resolve_auto",
+    "resolve_call_policy",
+    "resolve_policy",
     "run_multistream_reference",
     "run_reference",
     "speedup",

@@ -144,6 +144,31 @@ def resolve_auto(
     return d, s
 
 
+def resolve_policy(
+    op: str,
+    policy,
+    *,
+    workload: Workload,
+    tile: Tuple[int, ...],
+    dtype,
+) -> Tuple[int, int]:
+    """Planner entry for :class:`repro.core.program.PipePolicy` call sites.
+
+    Duck-typed over anything exposing ``mode`` / ``depth`` / ``streams`` /
+    ``hw`` / ``stream_options``: resolves "auto" fields against the policy's
+    hardware model (so plans are cache-keyed by policy, not just shape) and
+    applies the mode semantics — ``baseline`` forces the synchronous
+    depth=1 pipe after planning, exactly like the legacy per-kernel
+    keyword plumbing did.
+    """
+    depth, streams = resolve_auto(
+        op, policy.depth, policy.streams, workload=workload, tile=tile,
+        dtype=dtype, hw=policy.hw, stream_options=tuple(policy.stream_options))
+    if policy.mode == "baseline":
+        depth = 1
+    return depth, streams
+
+
 def plan_cache_info():
     """Hit/miss stats of the planner's plan cache (functools CacheInfo)."""
     return _plan_cached.cache_info()

@@ -1,0 +1,456 @@
+"""Declarative stream programs: kernels as producer→pipe→consumer graphs.
+
+The paper restructures a monolithic kernel into a *memory kernel* and a
+*compute kernel* joined by a pipe; MKPipe (arXiv 2002.01614) argues the
+decomposition pays off most when the multi-kernel program is a first-class
+object the compiler can schedule. This module is that surface for the repo:
+a kernel is *declared* as
+
+  * producer stages — :class:`Stream` edges (regular block copies or
+    irregular per-row gathers), each naming its HBM operand, pipe word
+    shape, and address stream (``slicer``);
+  * passive operands — :class:`BlockIn` (Pallas-blocked inputs such as the
+    q tile) and :class:`ScalarIn` (scalar-prefetched index/length vectors);
+  * a consumer compute body — ``consumer(ctx)`` reading landed pipe words
+    via ``ctx.word(name)`` and folding them into scratch carries / the
+    output block;
+
+and :func:`compile_program` lowers the graph through the shared
+:class:`~repro.core.emitter.RingPipe` / ``GatherRingPipe`` emitter into one
+``pallas_call``: it owns the ring scratch, binds slicers, and emits the
+acquire → consume → release word schedule. No kernel hand-rolls ring-buffer
+plumbing; a new workload is a ~50-line declaration.
+
+Sizing and mode selection are carried by one frozen :class:`PipePolicy`
+(``mode`` / ``depth`` / ``streams`` / ``interpret`` / ``hw``), threaded
+through the roofline planner (:func:`repro.core.planner.resolve_policy`)
+instead of five copies of keyword plumbing. Session defaults are set with
+the :func:`policy` context manager::
+
+    with repro.policy(mode="baseline"):      # A/B the paper's strawman
+        y = repro.ops.attention(q, k, v)
+    with repro.policy(hw=ARRIA_CX):          # plan pipes for the paper's board
+        y = repro.ops.matmul(a, b)
+
+Old per-kernel keyword signatures (``mode=``/``depth=``/``streams=``/
+``interpret=``) keep working through :func:`resolve_call_policy`, which
+folds them into a PipePolicy and warns once per op.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import functools
+import threading
+import warnings
+from typing import Any, Callable, Dict, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import planner
+from repro.core.emitter import GatherRingPipe, RingPipe, acquire, release
+from repro.core.pipe import Pipe
+from repro.core.pipeline_model import TPU_V5E, HardwareModel
+
+# ---------------------------------------------------------------------------
+# PipePolicy: one frozen knob bundle for every kernel call site
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PipePolicy:
+    """How to size and run the pipes of one kernel call.
+
+    Attributes:
+      mode: "ff" (DAE pipeline), "baseline" (synchronous depth=1 strawman),
+        "ref" (pure-jnp oracle), or a kernel-specific extra mode.
+      depth: ring slots, int or "auto" (roofline-planned per call site).
+      streams: producer DMAs per word, int or "auto".
+      interpret: run the Pallas kernel in interpret mode (CPU container).
+      hw: hardware model the planner sizes against (TPU_V5E / ARRIA_CX).
+      stream_options: candidate stream counts the planner may pick from.
+    """
+
+    mode: str = "ff"
+    depth: Union[int, str] = "auto"
+    streams: Union[int, str] = "auto"
+    interpret: bool = True
+    hw: HardwareModel = TPU_V5E
+    stream_options: Tuple[int, ...] = (1, 2, 4)
+
+    def __post_init__(self):
+        if not isinstance(self.mode, str):
+            raise TypeError(f"mode must be a str, got {self.mode!r}")
+        for label, val in (("depth", self.depth), ("streams", self.streams)):
+            if isinstance(val, str):
+                if val != "auto":
+                    raise ValueError(
+                        f"{label} must be an int or 'auto', got {val!r}")
+            elif int(val) < 1:
+                raise ValueError(f"{label} must be >= 1, got {val!r}")
+
+    def replace(self, **fields) -> "PipePolicy":
+        return dataclasses.replace(self, **fields)
+
+    def resolve(self, op: str, *, workload, tile, dtype) -> Tuple[int, int]:
+        """Resolve this policy's (depth, streams) for one call site."""
+        return planner.resolve_policy(op, self, workload=workload, tile=tile,
+                                      dtype=dtype)
+
+
+class _PolicyStack(threading.local):
+    def __init__(self):
+        self.stack = [PipePolicy()]
+
+
+_policies = _PolicyStack()
+
+
+def current_policy() -> PipePolicy:
+    """The session's active policy (innermost :func:`policy` context)."""
+    return _policies.stack[-1]
+
+
+@contextlib.contextmanager
+def policy(base: Optional[PipePolicy] = None, **fields):
+    """Set session pipe-policy defaults without touching call sites.
+
+    ``policy(mode="baseline")`` overrides just that field of the current
+    policy; ``policy(some_policy)`` installs it wholesale (plus any field
+    overrides). Nests and restores on exit; thread-local.
+
+    Trace-time semantics: ops read the session policy when they are
+    *traced*. The built-in kernel entrypoints re-resolve it on every call,
+    but if you wrap an op in your own ``jax.jit``, a cached trace will NOT
+    see a later policy change (the policy is not part of the jit cache
+    key). Inside user jits, pass ``policy=PipePolicy(...)`` explicitly —
+    it is hashable and works as a static argument — or enter the context
+    before the first traced call.
+    """
+    pol = current_policy() if base is None else base
+    if fields:
+        pol = dataclasses.replace(pol, **fields)
+    _policies.stack.append(pol)
+    try:
+        yield pol
+    finally:
+        _policies.stack.pop()
+
+
+# -- deprecation shim: legacy keyword plumbing -> PipePolicy -----------------
+
+_LEGACY_KWARGS = ("mode", "depth", "streams", "interpret")
+_warned_ops = set()
+
+
+def resolve_call_policy(op: str, call_policy: Optional[PipePolicy] = None,
+                        **legacy) -> PipePolicy:
+    """Fold one call's (policy=, legacy kwargs) into the effective policy.
+
+    ``policy=`` overrides the session :func:`policy` context wholesale;
+    legacy kwargs override individual fields of the session policy and warn
+    once per op (the pre-StreamProgram keyword plumbing is deprecated).
+    Mixing ``policy=`` with legacy kwargs in one call is ambiguous and
+    raises TypeError.
+    """
+    given = {k: v for k, v in legacy.items() if v is not None}
+    unknown = set(given) - set(_LEGACY_KWARGS)
+    if unknown:
+        raise TypeError(f"{op}: unknown policy kwargs {sorted(unknown)}")
+    base = current_policy() if call_policy is None else call_policy
+    if not given:
+        return base
+    if call_policy is not None:
+        raise TypeError(
+            f"{op}: pass either policy= or the deprecated "
+            f"{sorted(given)} keywords, not both")
+    if op not in _warned_ops:
+        _warned_ops.add(op)
+        warnings.warn(
+            f"{op}: the {sorted(given)} keywords are deprecated; pass "
+            f"policy=PipePolicy(...) or set session defaults with "
+            f"`with repro.policy(...)`", DeprecationWarning, stacklevel=3)
+    return dataclasses.replace(base, **given)
+
+
+def make_entrypoint(op: str, apply_fn: Callable[..., Any],
+                    modes: Tuple[str, ...] = ("ff", "baseline", "ref"),
+                    ) -> Callable[..., Any]:
+    """Generate the public op wrapper from a policy-driven apply function.
+
+    ``apply_fn(*arrays, policy: PipePolicy, **statics)`` implements the op;
+    the generated entrypoint accepts the new ``policy=`` argument, the
+    session policy context, and the deprecated per-kernel keywords
+    (``mode``/``depth``/``streams``/``interpret``), all funneled through
+    :func:`resolve_call_policy`. ``modes`` is the op's supported mode set —
+    validated here, once, so apply functions never hand-roll the check.
+    """
+
+    @functools.wraps(apply_fn)
+    def entrypoint(*args, policy=None, mode=None, depth=None, streams=None,
+                   interpret=None, **kwargs):
+        pol = resolve_call_policy(op, policy, mode=mode, depth=depth,
+                                  streams=streams, interpret=interpret)
+        if pol.mode not in modes:
+            raise ValueError(
+                f"{op}: unknown mode {pol.mode!r}; supported: {modes}")
+        return apply_fn(*args, policy=pol, **kwargs)
+
+    entrypoint.op_name = op
+    entrypoint.__name__ = op
+    entrypoint.__qualname__ = apply_fn.__qualname__.replace("_apply", op)
+    return entrypoint
+
+
+# ---------------------------------------------------------------------------
+# The StreamProgram IR
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Stream:
+    """A producer stage + pipe edge: operand ``name`` streams HBM→VMEM.
+
+    ``slicer(ctx, word) -> hbm-ref-slice`` is the memory kernel's address
+    stream (regular block copy); for ``gather=True`` it is a row slicer
+    ``slicer(ctx, word, row)`` (irregular per-row gather — the row bundle is
+    the stream decomposition). Slicers may depend only on the word index and
+    input operands (typically scalar-prefetched indices), never on consumer
+    state — the feed-forward restriction, enforced structurally: slicers
+    receive a :class:`ProducerCtx` that exposes ``ref()`` only, no scratch
+    or output.
+    """
+
+    name: str
+    spec: Pipe
+    slicer: Callable[..., Any]
+    gather: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockIn:
+    """A Pallas-blocked (non-streamed) input operand."""
+
+    name: str
+    block: Tuple[int, ...]
+    index_map: Callable[..., Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class ScalarIn:
+    """A scalar-prefetched input (index/length vectors the slicers read)."""
+
+    name: str
+
+
+@dataclasses.dataclass(frozen=True)
+class ScratchSpec:
+    """One VMEM scratch carry owned by the consumer (accumulators etc.)."""
+
+    name: str
+    shape: Tuple[int, ...]
+    dtype: Any = jnp.float32
+
+
+InputSpec = Union[Stream, BlockIn, ScalarIn]
+
+
+class ProducerCtx:
+    """What a Stream slicer sees: the input refs, nothing else.
+
+    The producer has no access to scratch carries or the output block, so
+    a slicer *cannot* depend on consumer state — the paper's feed-forward
+    restriction falls out of the type.
+    """
+
+    __slots__ = ("_refs",)
+
+    def __init__(self, refs):
+        self._refs = refs
+
+    def ref(self, name: str):
+        """Raw ref of input ``name`` (HBM for streams, block/scalar else)."""
+        return self._refs[name]
+
+
+class ProgramCtx(ProducerCtx):
+    """What the consumer body (and slicers) see inside the kernel.
+
+    Attributes:
+      g: current word index (grid step).
+      n_words: total pipe words.
+      out: output block ref.
+    """
+
+    __slots__ = ("g", "n_words", "out", "_pipes", "_scratch")
+
+    def __init__(self, g, n_words, refs, pipes, out, scratch):
+        super().__init__(refs)
+        self.g = g
+        self.n_words = n_words
+        self.out = out
+        self._pipes = pipes
+        self._scratch = scratch
+
+    def word(self, name: str):
+        """VMEM ref of stream ``name``'s landed word ``g`` (pipe read end)."""
+        return self._pipes[name].slot(self.g)
+
+    def scratch(self, name: str):
+        return self._scratch[name]
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamProgram:
+    """A kernel declared as producer stages → pipes → consumer body.
+
+    Attributes:
+      name: op name (planner / registry key).
+      n_words: trip count of the word schedule (the 1-D grid).
+      inputs: call-ordered operand specs; ScalarIn entries must lead (the
+        Pallas scalar-prefetch convention). Block/out index maps receive
+        ``(g, *scalar_refs)`` when ScalarIn operands exist, else ``(g,)``.
+      consumer: ``f(ctx: ProgramCtx) -> None`` — the compute kernel. All
+        arithmetic, DLCD carries, and output stores live here.
+      out_shape / out_dtype / out_block / out_index_map: the output block
+        mapping.
+      scratch: consumer-owned VMEM carries (ring scratch is implicit —
+        compile_program appends each stage's buffer + semaphores).
+    """
+
+    name: str
+    n_words: int
+    inputs: Tuple[InputSpec, ...]
+    consumer: Callable[[ProgramCtx], None]
+    out_shape: Tuple[int, ...]
+    out_dtype: Any
+    out_block: Tuple[int, ...]
+    out_index_map: Callable[..., Any]
+    scratch: Tuple[ScratchSpec, ...] = ()
+
+    def __post_init__(self):
+        names = [i.name for i in self.inputs] + [s.name for s in self.scratch]
+        if len(set(names)) != len(names):
+            raise ValueError(f"{self.name}: duplicate operand/scratch names "
+                             f"in {names}")
+        seen_tensor = False
+        for i in self.inputs:
+            if isinstance(i, ScalarIn):
+                if seen_tensor:
+                    raise ValueError(
+                        f"{self.name}: ScalarIn operands must precede tensor "
+                        f"operands (Pallas scalar-prefetch convention)")
+            else:
+                seen_tensor = True
+        if not self.streams:
+            raise ValueError(f"{self.name}: a StreamProgram needs at least "
+                             f"one Stream edge")
+        if self.n_words < 1:
+            raise ValueError(f"{self.name}: n_words must be >= 1")
+
+    @property
+    def streams(self) -> Tuple[Stream, ...]:
+        return tuple(i for i in self.inputs if isinstance(i, Stream))
+
+    @property
+    def num_scalar_prefetch(self) -> int:
+        return sum(isinstance(i, ScalarIn) for i in self.inputs)
+
+    @property
+    def vmem_bytes(self) -> int:
+        """Ring-buffer VMEM of all pipe edges (the BRAM analogue)."""
+        return sum(s.spec.vmem_bytes for s in self.streams)
+
+
+# ---------------------------------------------------------------------------
+# Lowering: StreamProgram -> one pallas_call
+# ---------------------------------------------------------------------------
+
+
+def compile_program(program: StreamProgram, *, interpret: bool = True):
+    """Lower a :class:`StreamProgram` into one ``pallas_call``.
+
+    Returns a callable taking the program's operands in ``inputs`` order.
+    The lowering instantiates one :class:`RingPipe` (or ``GatherRingPipe``)
+    per Stream edge, appends the ring scratch it owns after the consumer's
+    scratch, and wraps the consumer body in the emitter's word schedule::
+
+        acquire(g, n_words, pipes)   # prologue fill + block on word g
+        consumer(ctx)                # compute kernel
+        release(g, n_words, pipes)   # refill consumed slots
+
+    ``depth == 1`` pipes degenerate to the synchronous copy-then-compute
+    baseline, so mode="baseline" reuses this exact path.
+    """
+    scalar_ins = [i for i in program.inputs if isinstance(i, ScalarIn)]
+    tensor_ins = [i for i in program.inputs if not isinstance(i, ScalarIn)]
+    rings: Dict[str, RingPipe] = {
+        s.name: (GatherRingPipe if s.gather else RingPipe)(s.spec)
+        for s in program.streams
+    }
+
+    def kernel(*refs):
+        it = iter(refs)
+        named = {i.name: next(it) for i in scalar_ins}
+        named.update({i.name: next(it) for i in tensor_ins})
+        out = next(it)
+        scratch = {s.name: next(it) for s in program.scratch}
+
+        g = pl.program_id(0)
+        ctx = ProgramCtx(g, program.n_words, named, {}, out, scratch)
+        pctx = ProducerCtx(named)    # slicers never see scratch/out
+        pipes = []
+        for i in tensor_ins:
+            if not isinstance(i, Stream):
+                continue
+            buf, sems = next(it), next(it)
+            if i.gather:
+                bound = rings[i.name].bind(
+                    buf, sems, lambda word, r, s=i: s.slicer(pctx, word, r))
+            else:
+                bound = rings[i.name].bind(
+                    buf, sems, lambda word, s=i: s.slicer(pctx, word))
+            ctx._pipes[i.name] = bound
+            pipes.append(bound)
+
+        acquire(g, program.n_words, pipes)
+        program.consumer(ctx)
+        release(g, program.n_words, pipes)
+
+    in_specs = [
+        pl.BlockSpec(memory_space=pl.ANY) if isinstance(i, Stream)
+        else pl.BlockSpec(i.block, i.index_map)
+        for i in tensor_ins
+    ]
+    scratch_shapes = [pltpu.VMEM(s.shape, s.dtype) for s in program.scratch]
+    for i in tensor_ins:
+        if isinstance(i, Stream):
+            scratch_shapes.extend(rings[i.name].scratch_shapes)
+    out_spec = pl.BlockSpec(program.out_block, program.out_index_map)
+    out_shape = jax.ShapeDtypeStruct(program.out_shape, program.out_dtype)
+
+    if scalar_ins:
+        return pl.pallas_call(
+            kernel,
+            grid_spec=pltpu.PrefetchScalarGridSpec(
+                num_scalar_prefetch=len(scalar_ins),
+                grid=(program.n_words,),
+                in_specs=in_specs,
+                out_specs=out_spec,
+                scratch_shapes=scratch_shapes,
+            ),
+            out_shape=out_shape,
+            interpret=interpret,
+        )
+    return pl.pallas_call(
+        kernel,
+        grid=(program.n_words,),
+        in_specs=in_specs,
+        out_specs=out_spec,
+        out_shape=out_shape,
+        scratch_shapes=scratch_shapes,
+        interpret=interpret,
+    )

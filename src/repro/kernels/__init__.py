@@ -12,41 +12,54 @@ wrapper + exact tile-schedule cost model + registration), ref.py (pure-jnp
 oracle). Kernels validate under interpret=True on CPU; real-TPU lowering is
 the target.
 
-The emitter/registry contract — what a *new* kernel must provide
-----------------------------------------------------------------
+The StreamProgram/registry contract — what a *new* kernel must provide
+----------------------------------------------------------------------
 
-1. **Emit pipelines through the shared ring-pipe emitter**
-   (:mod:`repro.core.emitter`), never hand-rolled DMA loops. In kernel.py:
+1. **Declare the kernel as a StreamProgram**
+   (:mod:`repro.core.program`), never hand-rolled DMA loops. In kernel.py,
+   a ``build_program(shapes..., depth, streams) -> StreamProgram`` that
+   states:
 
-   * build one :class:`~repro.core.emitter.RingPipe` per operand stream
-     from its :class:`~repro.core.pipe.Pipe` spec (regular block copies),
-     or a :class:`~repro.core.emitter.GatherRingPipe` for irregular
-     per-row gathers;
-   * splat each ring's ``scratch_shapes`` into the pallas_call scratch
-     list — the emitter owns the VMEM ring buffer and DMA semaphores;
-   * inside the kernel, ``bind(buf, sems, slicer)`` each ring to its
-     scratch refs and HBM address stream (the slicer may depend only on
-     the word index — the feed-forward restriction), then use the
-     primitives: ``acquire(g, n_words, pipes)`` / ``slot(g)`` /
-     ``release(g, n_words, pipes)``. ``depth == 1`` automatically
-     degenerates to the synchronous copy-then-compute baseline.
+   * producer stages — one :class:`~repro.core.program.Stream` edge per
+     streamed operand, carrying its :class:`~repro.core.pipe.Pipe` spec
+     and a ``slicer(ctx, word)`` address stream (``gather=True`` +
+     ``slicer(ctx, word, row)`` for irregular per-row gathers). Slicers
+     may depend only on the word index and scalar-prefetched inputs —
+     the feed-forward restriction, enforced structurally;
+   * passive operands — :class:`~repro.core.program.BlockIn` blocked
+     inputs and :class:`~repro.core.program.ScalarIn` prefetched scalars;
+   * the consumer compute body — ``consumer(ctx)`` reading landed words
+     via ``ctx.word(name)`` and carrying state in declared
+     :class:`~repro.core.program.ScratchSpec` VMEM.
 
-2. **Register with the kernel registry**
-   (:mod:`repro.kernels.registry`). In ops.py, call
-   :func:`~repro.kernels.registry.register_kernel` with the public op
-   wrapper (modes "ff"/"baseline"/"ref"), the pure-jnp oracle, the
+   :func:`~repro.core.program.compile_program` lowers the graph through
+   the shared ring-pipe emitter (:mod:`repro.core.emitter`) into one
+   ``pallas_call`` — ring scratch, binding, and the acquire/consume/
+   release word schedule are owned there. ``depth == 1`` automatically
+   degenerates to the synchronous copy-then-compute baseline.
+
+2. **Expose a policy-driven op and register it**
+   (:mod:`repro.kernels.registry`). In ops.py, implement
+   ``_apply(*arrays, policy: PipePolicy, **statics)`` (ref-mode dispatch,
+   padding, planner resolution via ``policy.resolve``), wrap it with
+   :func:`repro.core.program.make_entrypoint` (which adds the ``policy=``
+   argument, the session ``repro.policy`` context, and the deprecated
+   keyword shims), and call
+   :func:`~repro.kernels.registry.register_kernel` with the op, a short
+   ``alias`` (becomes ``repro.ops.<alias>``), the pure-jnp oracle, the
    KernelCost model, a Workload builder (shapes -> (core.Workload, tile)),
-   tiny smoke inputs, and a benchmark shape point. The benchmark harness
-   (benchmarks/kernel_bench.py, ``benchmarks/run.py --smoke``) and the
-   registry tests enumerate the registry — a new kernel is its subpackage
-   plus the one ``register_kernel`` call, then add the ops module path to
-   ``registry._BUILTIN``.
+   the ``program`` builder at the smoke shape point, tiny smoke inputs,
+   and a benchmark shape point. The benchmark harness
+   (benchmarks/kernel_bench.py, ``benchmarks/run.py --smoke``),
+   ``repro.ops``, and the registry tests enumerate the registry — a new
+   kernel is its subpackage plus the one ``register_kernel`` call, then
+   add the ops module path to ``registry._BUILTIN``.
 
-3. **Support planner auto-sizing.** The op wrapper must accept
-   ``depth="auto"`` / ``streams="auto"`` and resolve them through
-   :func:`repro.core.planner.resolve_auto` with the op's Workload — the
-   roofline model then picks (depth, streams) per call-site shape, cached
-   on (op, shape, dtype, hw).
+3. **Support planner auto-sizing.** ``_apply`` must resolve the policy's
+   ``depth="auto"`` / ``streams="auto"`` through
+   :meth:`repro.core.program.PipePolicy.resolve` with the op's Workload —
+   the roofline model then picks (depth, streams) per call-site shape
+   against the policy's hardware model, cached on (op, shape, dtype, hw).
 """
 
 from repro.core.emitter import cdiv, pad_to

@@ -2,15 +2,16 @@
 
 from __future__ import annotations
 
-from typing import Tuple, Union
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.emitter import cdiv, pad_to
 from repro.core.pipeline_model import Workload
-from repro.core.planner import resolve_auto
-from repro.kernels.ff_attention.kernel import flash_attention_ff
+from repro.core.program import PipePolicy, make_entrypoint
+from repro.kernels.ff_attention.kernel import build_program, \
+    flash_attention_ff
 from repro.kernels.ff_attention.ref import attention_ref
 from repro.kernels.registry import KernelCost, register_kernel
 
@@ -49,23 +50,22 @@ def attention_workload(bh: int, s: int, d: int, *, causal: bool = True,
     return w, (block_kv, d)
 
 
-def attention(q, k, v, *, kv_groups: int = 1, causal: bool = True,
-              block_q: int = 128, block_kv: int = 128,
-              depth: Union[int, str] = 2, streams: Union[int, str] = 1,
-              mode: str = "ff", interpret: bool = True):
+def _apply(q, k, v, *, kv_groups: int = 1, causal: bool = True,
+           block_q: int = 128, block_kv: int = 128,
+           policy: PipePolicy):
     """Flash attention over [BH, S, D] tensors (wrapper pads S to blocks).
 
-    mode="ff"|"baseline"(depth=1)|"ref"; depth/streams accept "auto"
-    (planner-sized per call-site shape).
+    policy.mode="ff"|"baseline"(depth=1)|"ref"; the policy's depth/streams
+    "auto" are planner-sized per call-site shape against policy.hw.
     """
-    if mode == "ref":
+    if policy.mode == "ref":
         return attention_ref(q, k, v, kv_groups=kv_groups, causal=causal)
     bh, s, d = q.shape
     skv = k.shape[1]
     w, tile = attention_workload(bh, s, d, causal=causal, block_q=block_q,
                                  block_kv=block_kv, dtype=q.dtype)
-    depth, streams = resolve_auto("ff_attention", depth, streams,
-                                  workload=w, tile=tile, dtype=q.dtype)
+    depth, streams = policy.resolve("ff_attention", workload=w, tile=tile,
+                                    dtype=q.dtype)
     qp = pad_to(q, block_q, 1)
     kp = pad_to(k, block_kv, 1)
     vp = pad_to(v, block_kv, 1)
@@ -73,12 +73,14 @@ def attention(q, k, v, *, kv_groups: int = 1, causal: bool = True,
         raise ValueError(
             "non-causal attention requires Skv to be a block multiple "
             "(padded keys would receive softmax mass)")
-    if mode == "baseline":
-        depth = 1
     out = flash_attention_ff(
         qp, kp, vp, kv_groups=kv_groups, block_q=block_q, block_kv=block_kv,
-        depth=depth, streams=streams, causal=causal, interpret=interpret)
+        depth=depth, streams=streams, causal=causal,
+        interpret=policy.interpret)
     return out[:, :s, :]
+
+
+attention = make_entrypoint("ff_attention", _apply)
 
 
 def _make_inputs(key):
@@ -89,12 +91,21 @@ def _make_inputs(key):
                          "block_kv": 64}
 
 
+def _smoke_program(*, depth: int = 2, streams: int = 1):
+    # the smoke shape point of _make_inputs (already block-aligned)
+    return build_program(2, 192, 192, 64, kv_groups=2, block_q=64,
+                         block_kv=64, causal=True, dtype=jnp.float32,
+                         depth=depth, streams=streams)
+
+
 register_kernel(
     name="ff_attention",
+    alias="attention",
     op=attention,
     ref=attention_ref,
     cost=attention_cost,
     workload=attention_workload,
+    program=_smoke_program,
     make_inputs=_make_inputs,
     bench_kwargs={"bh": 32, "s": 8192, "d": 128, "dtype": jnp.bfloat16},
     regular=True,

@@ -1,4 +1,5 @@
-"""Feed-forward chunked gated-linear-attention scan (Mamba2 / RWKV6 family).
+"""Feed-forward chunked gated-linear-attention scan (Mamba2 / RWKV6
+family), as a StreamProgram.
 
 This kernel is the paper's Figure-3 move (DLCD -> compute kernel) made
 literal. The recurrence
@@ -8,9 +9,9 @@ literal. The recurrence
     y_t = q_t . (h_{t-1} + diag(u) k_t (x) v_t)      (exclusive+bonus; RWKV6)
 
 serializes a naive implementation at II = chain length. The feed-forward
-split streams the *LCD-free* operands (q,k,v,w chunks) through ring pipes at
-full depth, while the consumer carries the only true dependency — the O(N*P)
-chunk-boundary state — in VMEM across grid steps.
+split streams the *LCD-free* operands (q,k,v,w chunks) through four ring-
+pipe edges at full depth, while the consumer carries the only true
+dependency — the O(N*P) chunk-boundary state — in VMEM across grid steps.
 
 Numerics: all decay exponents are arranged to be <= 0 ("decay-to-boundary"
 factorization), so every exp() is in (0,1] and f32-stable:
@@ -30,10 +31,10 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.emitter import RingPipe, acquire, release
 from repro.core.pipe import Pipe
+from repro.core.program import BlockIn, ScratchSpec, Stream, StreamProgram, \
+    compile_program
 
 
 def _chunk_body(q, k, v, lw, u, h_prev, *, subtile: int, inclusive: bool):
@@ -94,44 +95,68 @@ def _chunk_body(q, k, v, lw, u, h_prev, *, subtile: int, inclusive: bool):
     return y, h_new
 
 
-def _kernel(q_hbm, k_hbm, v_hbm, w_hbm, u_ref, o_ref, h_sc,
-            q_buf, q_sems, k_buf, k_sems, v_buf, v_sems, w_buf, w_sems,
-            *, nc: int, chunk: int, subtile: int, inclusive: bool,
-            has_u: bool, rings, out_dtype):
-    g = pl.program_id(0)
-    n_words = pl.num_programs(0)
-    c = g % nc
+def build_program(bh: int, s: int, n: int, p: int, *,
+                  chunk: int = 64, subtile: int = 16, inclusive: bool = True,
+                  has_u: bool = False, dtype=jnp.float32, k_dtype=None,
+                  v_dtype=None, w_dtype=None, out_dtype=None,
+                  depth: int = 2, streams: int = 1) -> StreamProgram:
+    """Declare the chunked-scan stream program at one shape point.
+    ``dtype`` is the q/out element type; ``k_dtype``/``v_dtype``/``w_dtype``
+    (default ``dtype``) size their own pipe edges."""
+    assert s % chunk == 0 and chunk % subtile == 0, (s, chunk, subtile)
+    nc = s // chunk
+    out_dtype = out_dtype or dtype
+    q_spec = Pipe(tile=(chunk, n), dtype=dtype, depth=depth, streams=streams)
+    k_spec = Pipe(tile=(chunk, n), dtype=k_dtype or dtype, depth=depth,
+                  streams=streams)
+    w_spec = Pipe(tile=(chunk, n), dtype=w_dtype or dtype, depth=depth,
+                  streams=streams)
+    v_spec = Pipe(tile=(chunk, p), dtype=v_dtype or dtype, depth=depth,
+                  streams=streams)
 
-    def slicer(hbm):
-        def f(word):
+    def slicer(name):
+        def f(ctx, word):
             w_c = word % nc
             w_bh = word // nc
-            return hbm.at[w_bh, pl.ds(w_c * chunk, chunk), :]
+            return ctx.ref(name).at[w_bh, pl.ds(w_c * chunk, chunk), :]
         return f
 
-    q_ring, k_ring, v_ring, w_ring = rings
-    pipes = [q_ring.bind(q_buf, q_sems, slicer(q_hbm)),
-             k_ring.bind(k_buf, k_sems, slicer(k_hbm)),
-             v_ring.bind(v_buf, v_sems, slicer(v_hbm)),
-             w_ring.bind(w_buf, w_sems, slicer(w_hbm))]
-    acquire(g, n_words, pipes)
+    def consumer(ctx):
+        c = ctx.g % nc
+        h_sc = ctx.scratch("h")
 
-    @pl.when(c == 0)
-    def _():
-        h_sc[...] = jnp.zeros_like(h_sc)
+        @pl.when(c == 0)
+        def _():
+            h_sc[...] = jnp.zeros_like(h_sc)
 
-    q = q_ring.slot(g)[...].astype(jnp.float32)
-    k = k_ring.slot(g)[...].astype(jnp.float32)
-    v = v_ring.slot(g)[...].astype(jnp.float32)
-    lw = jnp.minimum(w_ring.slot(g)[...].astype(jnp.float32), 0.0)
-    u = u_ref[0].astype(jnp.float32) if has_u else None
+        q = ctx.word("q")[...].astype(jnp.float32)
+        k = ctx.word("k")[...].astype(jnp.float32)
+        v = ctx.word("v")[...].astype(jnp.float32)
+        lw = jnp.minimum(ctx.word("w")[...].astype(jnp.float32), 0.0)
+        u = ctx.ref("u")[0].astype(jnp.float32) if has_u else None
 
-    y, h_new = _chunk_body(q, k, v, lw, u, h_sc[...],
-                           subtile=subtile, inclusive=inclusive)
-    h_sc[...] = h_new
-    o_ref[0] = y.astype(out_dtype)
+        y, h_new = _chunk_body(q, k, v, lw, u, h_sc[...],
+                               subtile=subtile, inclusive=inclusive)
+        h_sc[...] = h_new
+        ctx.out[0] = y.astype(out_dtype)
 
-    release(g, n_words, pipes)
+    return StreamProgram(
+        name="ff_chunk_scan",
+        n_words=bh * nc,
+        inputs=(
+            Stream("q", q_spec, slicer("q")),
+            Stream("k", k_spec, slicer("k")),
+            Stream("v", v_spec, slicer("v")),
+            Stream("w", w_spec, slicer("w")),
+            BlockIn("u", (1, n), lambda g: (g // nc, 0)),
+        ),
+        consumer=consumer,
+        out_shape=(bh, s, p),
+        out_dtype=out_dtype,
+        out_block=(1, chunk, p),
+        out_index_map=lambda g: (g // nc, g % nc, 0),
+        scratch=(ScratchSpec("h", (n, p), jnp.float32),),
+    )
 
 
 @functools.partial(
@@ -154,34 +179,11 @@ def chunk_scan_ff(
 ) -> jnp.ndarray:
     bh, s, n = q.shape
     p = v.shape[2]
-    assert s % chunk == 0 and chunk % subtile == 0, (s, chunk, subtile)
-    nc = s // chunk
     has_u = u is not None
-
-    qn_pipe = Pipe(tile=(chunk, n), dtype=q.dtype, depth=depth, streams=streams)
-    v_pipe = Pipe(tile=(chunk, p), dtype=v.dtype, depth=depth, streams=streams)
-    rings = tuple(RingPipe(s) for s in (qn_pipe, qn_pipe, v_pipe, qn_pipe))
-
-    kernel = functools.partial(
-        _kernel, nc=nc, chunk=chunk, subtile=subtile, inclusive=inclusive,
-        has_u=has_u, rings=rings, out_dtype=q.dtype)
-    in_specs = [
-        pl.BlockSpec(memory_space=pl.ANY),
-        pl.BlockSpec(memory_space=pl.ANY),
-        pl.BlockSpec(memory_space=pl.ANY),
-        pl.BlockSpec(memory_space=pl.ANY),
-        pl.BlockSpec((1, n), lambda g: (g // nc, 0)),
-    ]
-    args = [q, k, v, log_w, u if has_u else jnp.zeros((bh, n), q.dtype)]
-    return pl.pallas_call(
-        kernel,
-        grid=(bh * nc,),
-        in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, chunk, p), lambda g: (g // nc, g % nc, 0)),
-        out_shape=jax.ShapeDtypeStruct((bh, s, p), q.dtype),
-        scratch_shapes=[
-            pltpu.VMEM((n, p), jnp.float32),
-            *[s for r in rings for s in r.scratch_shapes],
-        ],
-        interpret=interpret,
-    )(*args)
+    program = build_program(bh, s, n, p, chunk=chunk, subtile=subtile,
+                            inclusive=inclusive, has_u=has_u, dtype=q.dtype,
+                            k_dtype=k.dtype, v_dtype=v.dtype,
+                            w_dtype=log_w.dtype, depth=depth, streams=streams)
+    u_arg = u if has_u else jnp.zeros((bh, n), q.dtype)
+    return compile_program(program, interpret=interpret)(
+        q, k, v, log_w, u_arg)

@@ -2,15 +2,15 @@
 
 from __future__ import annotations
 
-from typing import Tuple, Union
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.emitter import cdiv, pad_to
 from repro.core.pipeline_model import Workload
-from repro.core.planner import resolve_auto
-from repro.kernels.ff_chunk_scan.kernel import chunk_scan_ff
+from repro.core.program import PipePolicy, make_entrypoint
+from repro.kernels.ff_chunk_scan.kernel import build_program, chunk_scan_ff
 from repro.kernels.ff_chunk_scan.ref import chunk_scan_ref, chunk_scan_xla
 from repro.kernels.registry import KernelCost, register_kernel
 
@@ -46,39 +46,39 @@ def chunk_scan_workload(bh: int, s: int, n: int, p: int, *, chunk: int = 64,
     return w, (chunk, n)
 
 
-def chunk_scan(q, k, v, log_w, u=None, *, chunk: int = 64, subtile: int = 16,
-               inclusive: bool = True, depth: Union[int, str] = 2,
-               streams: Union[int, str] = 1,
-               mode: str = "ff", interpret: bool = True):
+def _apply(q, k, v, log_w, u=None, *, chunk: int = 64, subtile: int = 16,
+           inclusive: bool = True, policy: PipePolicy):
     """Gated linear-attention scan over [BH, S, *] streams.
 
-    mode="ff"|"baseline"(depth=1)|"ref"(naive scan)|"xla"|"xla_tiled"
+    policy.mode="ff"|"baseline"(depth=1)|"ref"(naive scan)|"xla"|"xla_tiled"
     (chunked, HLO-visible; _tiled = tile-pair factorized intra-chunk).
     Pads S up to a chunk multiple (decay 1, zero k/v contribute nothing).
-    depth/streams accept "auto" (planner-sized).
     """
-    if mode == "ref":
+    if policy.mode == "ref":
         return chunk_scan_ref(q, k, v, log_w, u, inclusive=inclusive)
-    if mode in ("xla", "xla_tiled"):
+    if policy.mode in ("xla", "xla_tiled"):
         s = q.shape[1]
         qp, kp, vp = (pad_to(x, chunk, 1) for x in (q, k, v))
         lwp = pad_to(log_w, chunk, 1)
         return chunk_scan_xla(qp, kp, vp, lwp, u, chunk=chunk,
                               inclusive=inclusive,
-                              tiled=mode == "xla_tiled")[:, :s]
+                              tiled=policy.mode == "xla_tiled")[:, :s]
     bh, s, n = q.shape
     p = v.shape[2]
     w, tile = chunk_scan_workload(bh, s, n, p, chunk=chunk, dtype=q.dtype)
-    depth, streams = resolve_auto("ff_chunk_scan", depth, streams,
-                                  workload=w, tile=tile, dtype=q.dtype)
+    depth, streams = policy.resolve("ff_chunk_scan", workload=w, tile=tile,
+                                    dtype=q.dtype)
     qp, kp, vp = (pad_to(x, chunk, 1) for x in (q, k, v))
     lwp = pad_to(log_w, chunk, 1)
-    if mode == "baseline":
-        depth = 1
     out = chunk_scan_ff(qp, kp, vp, lwp, u, chunk=chunk, subtile=subtile,
                         inclusive=inclusive, depth=depth, streams=streams,
-                        interpret=interpret)
+                        interpret=policy.interpret)
     return out[:, :s]
+
+
+chunk_scan = make_entrypoint(
+    "ff_chunk_scan", _apply,
+    modes=("ff", "baseline", "ref", "xla", "xla_tiled"))
 
 
 def _make_inputs(key):
@@ -92,12 +92,21 @@ def _make_inputs(key):
     return (q, k, v, lw), {"chunk": 64, "subtile": 16, "inclusive": True}
 
 
+def _smoke_program(*, depth: int = 2, streams: int = 1):
+    # the smoke shape point of _make_inputs
+    return build_program(2, 128, 16, 32, chunk=64, subtile=16,
+                         inclusive=True, has_u=False, dtype=jnp.float32,
+                         depth=depth, streams=streams)
+
+
 register_kernel(
     name="ff_chunk_scan",
+    alias="chunk_scan",
     op=chunk_scan,
     ref=chunk_scan_ref,
     cost=chunk_scan_cost,
     workload=chunk_scan_workload,
+    program=_smoke_program,
     make_inputs=_make_inputs,
     bench_kwargs={"bh": 64, "s": 4096, "n": 64, "p": 64,
                   "dtype": jnp.bfloat16},

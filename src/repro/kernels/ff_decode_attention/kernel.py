@@ -1,4 +1,5 @@
-"""Feed-forward decode attention: one new token vs. a long KV cache.
+"""Feed-forward decode attention as a StreamProgram: one new token vs. a
+long KV cache.
 
 The decode step is the paper's favourable case par excellence: a huge,
 perfectly *regular* stream (the KV cache) consumed by a tiny reduction with
@@ -8,8 +9,8 @@ online softmax — the whole kernel runs at HBM bandwidth (roofline-memory
 bound), which is exactly what the roofline table shows for decode cells.
 
 Layout: q is [B, KVH, G, D] (G = padded query-head group per KV head, GQA),
-cache k/v are [B, KVH, S, D], ``lengths[B]`` gives the live cache prefix.
-Grid: 1-D over (b*kvh, kv_block), kv innermost.
+cache k/v are [B, KVH, S, D], ``lengths[B]`` is scalar-prefetched and gives
+the live cache prefix. Grid: 1-D over (b*kvh, kv_block), kv innermost.
 """
 
 from __future__ import annotations
@@ -19,71 +20,102 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.emitter import RingPipe, acquire, release
 from repro.core.pipe import Pipe
+from repro.core.program import BlockIn, ScalarIn, ScratchSpec, Stream, \
+    StreamProgram, compile_program
 
 _NEG_INF = -1e30
 
 
-def _kernel(len_ref, q_ref, k_hbm, v_hbm, o_ref, m_sc, l_sc, acc,
-            k_buf, k_sems, v_buf, v_sems,
-            *, nkv: int, kvh: int, g_pad: int, bkv: int, d: int,
-            scale: float, k_ring: RingPipe, v_ring: RingPipe, out_dtype):
-    g = pl.program_id(0)
-    n_words = pl.num_programs(0)
-    kj = g % nkv
-    bh = g // nkv
-    b = bh // kvh
-    length = len_ref[b]
+def build_program(b: int, kvh: int, g_pad: int, s: int, d: int, *,
+                  block_kv: int = 128, dtype=jnp.float32, k_dtype=None,
+                  v_dtype=None, out_dtype=None,
+                  depth: int = 2, streams: int = 1) -> StreamProgram:
+    """Declare the decode-attention stream program at one shape point.
+    ``dtype`` is the q/out element type; ``k_dtype``/``v_dtype`` (default
+    ``dtype``) size their own cache pipe edges."""
+    assert s % block_kv == 0, (s, block_kv)
+    nkv = s // block_kv
+    scale = 1.0 / (d ** 0.5)
+    out_dtype = out_dtype or dtype
+    k_spec = Pipe(tile=(block_kv, d), dtype=k_dtype or dtype, depth=depth,
+                  streams=streams)
+    v_spec = Pipe(tile=(block_kv, d), dtype=v_dtype or dtype, depth=depth,
+                  streams=streams)
 
-    def kv_slice(hbm):
-        def f(word):
+    def kv_slicer(name):
+        def f(ctx, word):
             w_kj = word % nkv
             w_bh = word // nkv
-            return hbm.at[w_bh // kvh, w_bh % kvh, pl.ds(w_kj * bkv, bkv), :]
+            return ctx.ref(name).at[w_bh // kvh, w_bh % kvh,
+                                    pl.ds(w_kj * block_kv, block_kv), :]
         return f
 
-    pipes = [k_ring.bind(k_buf, k_sems, kv_slice(k_hbm)),
-             v_ring.bind(v_buf, v_sems, kv_slice(v_hbm))]
-    acquire(g, n_words, pipes)
+    def consumer(ctx):
+        kj = ctx.g % nkv
+        b_idx = (ctx.g // nkv) // kvh
+        length = ctx.ref("lengths")[b_idx]
+        m_sc, l_sc = ctx.scratch("m"), ctx.scratch("l")
+        acc = ctx.scratch("acc")
 
-    @pl.when(kj == 0)
-    def _():
-        m_sc[...] = jnp.full_like(m_sc, _NEG_INF)
-        l_sc[...] = jnp.zeros_like(l_sc)
-        acc[...] = jnp.zeros_like(acc)
+        @pl.when(kj == 0)
+        def _():
+            m_sc[...] = jnp.full_like(m_sc, _NEG_INF)
+            l_sc[...] = jnp.zeros_like(l_sc)
+            acc[...] = jnp.zeros_like(acc)
 
-    kv_start = kj * bkv
+        kv_start = kj * block_kv
 
-    @pl.when(kv_start < length)
-    def _():
-        q = q_ref[0, 0]                                # [g_pad, d]
-        k = k_ring.slot(g)[...]                        # [bkv, d]
-        v = v_ring.slot(g)[...]                        # [bkv, d]
-        s = jax.lax.dot_general(
-            q, k, (((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.float32) * scale    # [g_pad, bkv]
-        cols = kv_start + jax.lax.broadcasted_iota(jnp.int32, (g_pad, bkv), 1)
-        s = jnp.where(cols < length, s, _NEG_INF)
-        m_prev = m_sc[:, :1]
-        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
-        p = jnp.exp(s - m_new)
-        alpha = jnp.exp(m_prev - m_new)
-        l_sc[...] = jnp.broadcast_to(
-            l_sc[:, :1] * alpha + jnp.sum(p, axis=1, keepdims=True), l_sc.shape)
-        acc[...] = acc[...] * alpha + jnp.dot(
-            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
-        m_sc[...] = jnp.broadcast_to(m_new, m_sc.shape)
+        @pl.when(kv_start < length)
+        def _():
+            q = ctx.ref("q")[0, 0]                     # [g_pad, d]
+            k = ctx.word("k")[...]                     # [bkv, d]
+            v = ctx.word("v")[...]                     # [bkv, d]
+            s_ = jax.lax.dot_general(
+                q, k, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32) * scale   # [g_pad, bkv]
+            cols = kv_start + jax.lax.broadcasted_iota(
+                jnp.int32, (g_pad, block_kv), 1)
+            s_ = jnp.where(cols < length, s_, _NEG_INF)
+            m_prev = m_sc[:, :1]
+            m_new = jnp.maximum(m_prev, jnp.max(s_, axis=1, keepdims=True))
+            p = jnp.exp(s_ - m_new)
+            alpha = jnp.exp(m_prev - m_new)
+            l_sc[...] = jnp.broadcast_to(
+                l_sc[:, :1] * alpha + jnp.sum(p, axis=1, keepdims=True),
+                l_sc.shape)
+            acc[...] = acc[...] * alpha + jnp.dot(
+                p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+            m_sc[...] = jnp.broadcast_to(m_new, m_sc.shape)
 
-    @pl.when(kj == nkv - 1)
-    def _():
-        l = l_sc[:, :1]
-        l = jnp.where(l == 0.0, 1.0, l)
-        o_ref[0, 0] = (acc[...] / l).astype(out_dtype)
+        @pl.when(kj == nkv - 1)
+        def _():
+            l = l_sc[:, :1]
+            l = jnp.where(l == 0.0, 1.0, l)
+            ctx.out[0, 0] = (acc[...] / l).astype(out_dtype)
 
-    release(g, n_words, pipes)
+    q_index_map = lambda g, lens: ((g // nkv) // kvh, (g // nkv) % kvh, 0, 0)
+    return StreamProgram(
+        name="ff_decode_attention",
+        n_words=b * kvh * nkv,
+        inputs=(
+            ScalarIn("lengths"),
+            BlockIn("q", (1, 1, g_pad, d), q_index_map),
+            Stream("k", k_spec, kv_slicer("k")),
+            Stream("v", v_spec, kv_slicer("v")),
+        ),
+        consumer=consumer,
+        out_shape=(b, kvh, g_pad, d),
+        out_dtype=out_dtype,
+        out_block=(1, 1, g_pad, d),
+        out_index_map=q_index_map,
+        scratch=(
+            ScratchSpec("m", (g_pad, 128), jnp.float32),
+            ScratchSpec("l", (g_pad, 128), jnp.float32),
+            ScratchSpec("acc", (g_pad, d), jnp.float32),
+        ),
+    )
 
 
 @functools.partial(
@@ -102,41 +134,7 @@ def decode_attention_ff(
 ) -> jnp.ndarray:
     b, kvh, g_pad, d = q.shape
     _, _, s, _ = k.shape
-    assert s % block_kv == 0, (s, block_kv)
-    nkv = s // block_kv
-    scale = 1.0 / (d ** 0.5)
-
-    k_ring = RingPipe(Pipe(tile=(block_kv, d), dtype=k.dtype, depth=depth,
-                           streams=streams))
-    v_ring = RingPipe(Pipe(tile=(block_kv, d), dtype=v.dtype, depth=depth,
-                           streams=streams))
-
-    kernel = functools.partial(
-        _kernel, nkv=nkv, kvh=kvh, g_pad=g_pad, bkv=block_kv, d=d,
-        scale=scale, k_ring=k_ring, v_ring=v_ring, out_dtype=q.dtype)
-    return pl.pallas_call(
-        kernel,
-        grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
-            grid=(b * kvh * nkv,),
-            in_specs=[
-                pl.BlockSpec((1, 1, g_pad, d),
-                             lambda g, lens: ((g // nkv) // kvh,
-                                              (g // nkv) % kvh, 0, 0)),
-                pl.BlockSpec(memory_space=pl.ANY),
-                pl.BlockSpec(memory_space=pl.ANY),
-            ],
-            out_specs=pl.BlockSpec(
-                (1, 1, g_pad, d),
-                lambda g, lens: ((g // nkv) // kvh, (g // nkv) % kvh, 0, 0)),
-            scratch_shapes=[
-                pltpu.VMEM((g_pad, 128), jnp.float32),
-                pltpu.VMEM((g_pad, 128), jnp.float32),
-                pltpu.VMEM((g_pad, d), jnp.float32),
-                *k_ring.scratch_shapes,
-                *v_ring.scratch_shapes,
-            ],
-        ),
-        out_shape=jax.ShapeDtypeStruct((b, kvh, g_pad, d), q.dtype),
-        interpret=interpret,
-    )(lengths, q, k, v)
+    program = build_program(b, kvh, g_pad, s, d, block_kv=block_kv,
+                            dtype=q.dtype, k_dtype=k.dtype, v_dtype=v.dtype,
+                            depth=depth, streams=streams)
+    return compile_program(program, interpret=interpret)(lengths, q, k, v)

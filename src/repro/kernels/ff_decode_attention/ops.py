@@ -2,15 +2,16 @@
 
 from __future__ import annotations
 
-from typing import Tuple, Union
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.emitter import cdiv
 from repro.core.pipeline_model import Workload
-from repro.core.planner import resolve_auto
-from repro.kernels.ff_decode_attention.kernel import decode_attention_ff
+from repro.core.program import PipePolicy, make_entrypoint
+from repro.kernels.ff_decode_attention.kernel import build_program, \
+    decode_attention_ff
 from repro.kernels.ff_decode_attention.ref import decode_attention_ref
 from repro.kernels.registry import KernelCost, register_kernel
 
@@ -43,38 +44,38 @@ def decode_attention_workload(b: int, h: int, kvh: int, s: int, d: int,
     return w, (block_kv, d)
 
 
-def decode_attention(q, k, v, lengths=None, *, kv_heads: int = None,
-                     block_kv: int = 128, depth: Union[int, str] = 2,
-                     streams: Union[int, str] = 1,
-                     mode: str = "ff", interpret: bool = True):
+def _apply(q, k, v, lengths=None, *, kv_heads: int = None,
+           block_kv: int = 128, policy: PipePolicy):
     """Decode attention for one new token.
 
     q: [B, H, D]; k, v: [B, KVH, S, D]; lengths: [B] int32 (defaults to S).
     Returns [B, H, D]. The wrapper regroups q heads per KV head and pads the
-    group to the 8-sublane granule. depth/streams accept "auto".
+    group to the 8-sublane granule. policy.mode="ff"|"baseline"|"ref".
     """
+    del kv_heads    # accepted for legacy signature compatibility
     b, h, d = q.shape
     _, kvh, s, _ = k.shape
     assert h % kvh == 0
     group = h // kvh
     if lengths is None:
         lengths = jnp.full((b,), s, jnp.int32)
-    if mode == "ref":
+    if policy.mode == "ref":
         qg = q.reshape(b, kvh, group, d)
         return decode_attention_ref(qg, k, v, lengths).reshape(b, h, d)
     w, tile = decode_attention_workload(b, h, kvh, s, d, block_kv=block_kv,
                                         dtype=k.dtype)
-    depth, streams = resolve_auto("ff_decode_attention", depth, streams,
-                                  workload=w, tile=tile, dtype=k.dtype)
+    depth, streams = policy.resolve("ff_decode_attention", workload=w,
+                                    tile=tile, dtype=k.dtype)
     g_pad = -(-group // 8) * 8
     qg = q.reshape(b, kvh, group, d)
     qg = jnp.pad(qg, ((0, 0), (0, 0), (0, g_pad - group), (0, 0)))
-    if mode == "baseline":
-        depth = 1
     out = decode_attention_ff(
         qg, k, v, lengths.astype(jnp.int32), block_kv=block_kv, depth=depth,
-        streams=streams, interpret=interpret)
+        streams=streams, interpret=policy.interpret)
     return out[:, :, :group, :].reshape(b, h, d)
+
+
+decode_attention = make_entrypoint("ff_decode_attention", _apply)
 
 
 def _make_inputs(key):
@@ -87,12 +88,20 @@ def _make_inputs(key):
     return (q, k, v, lens), {"block_kv": 64}
 
 
+def _smoke_program(*, depth: int = 2, streams: int = 1):
+    # the smoke shape point of _make_inputs (group 2 -> g_pad 8)
+    return build_program(2, 2, 8, 128, 64, block_kv=64, dtype=jnp.float32,
+                         depth=depth, streams=streams)
+
+
 register_kernel(
     name="ff_decode_attention",
+    alias="decode_attention",
     op=decode_attention,
     ref=decode_attention_ref,
     cost=decode_attention_cost,
     workload=decode_attention_workload,
+    program=_smoke_program,
     make_inputs=_make_inputs,
     bench_kwargs={"b": 8, "h": 64, "kvh": 8, "s": 32768, "d": 128,
                   "dtype": jnp.bfloat16},

@@ -1,13 +1,15 @@
-"""Feed-forward irregular gather: rows = table[idx].
+"""Feed-forward irregular gather as a StreamProgram: rows = table[idx].
 
 The paper's *irregular memory access* case (Table 3, M-AI10-IR; MoE
 dispatch / embedding lookup in our models). The index stream is scalar-
 prefetched (TPU analogue of the FPGA burst-coalesced LSU's request buffer),
-and each pipe word is a bundle of ``rows_per_word`` single-row DMAs issued
-``depth-1`` words ahead — memory-level parallelism for a pattern the MXU
-pipeline cannot prefetch on its own. The per-row bundle is emitted through
-the shared :class:`~repro.core.emitter.GatherRingPipe`: the rows *are* the
-stream decomposition (depth-1 words x rows outstanding requests).
+and each pipe word is a bundle of single-row DMAs issued ``depth-1`` words
+ahead — memory-level parallelism for a pattern the MXU pipeline cannot
+prefetch on its own. The per-row bundle is emitted through the shared
+:class:`~repro.core.emitter.GatherRingPipe`: the rows *are* the stream
+decomposition, so the planned ``streams`` value widens the bundle
+(``rows_per_word = 8 * streams`` concurrent row DMAs, the multi-producer
+analogue for irregular access) instead of being dropped.
 
 A true-MLCD variant of this op (gather from a table the same kernel is
 scattering into) is *rejected* by core.check_no_mlcd and deliberately has no
@@ -21,47 +23,52 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.emitter import GatherRingPipe, acquire, release
 from repro.core.pipe import Pipe
+from repro.core.program import ScalarIn, Stream, StreamProgram, \
+    compile_program
 
-_ROWS = 8   # rows per pipe word (one f32 sublane granule)
-
-
-def _kernel(idx_ref, tab_hbm, o_ref, buf, sems, *, ring: GatherRingPipe):
-    g = pl.program_id(0)
-    n_words = pl.num_programs(0)
-
-    def row_slice(word, r):
-        row = idx_ref[word * _ROWS + r]
-        return tab_hbm.at[pl.ds(row, 1), :]
-
-    pipe = ring.bind(buf, sems, row_slice)
-    acquire(g, n_words, [pipe])
-    o_ref[...] = pipe.slot(g)[...]
-    release(g, n_words, [pipe])
+_ROWS = 8   # base rows per pipe word (one f32 sublane granule)
 
 
-@functools.partial(jax.jit, static_argnames=("depth", "interpret"))
+def build_program(n: int, cols: int, *, dtype=jnp.float32,
+                  depth: int = 4, streams: int = 1) -> StreamProgram:
+    """Declare the gather stream program: ``n`` output rows (a multiple of
+    the ``8 * streams`` row bundle) pulled from a [R, cols] table."""
+    rows_per_word = _ROWS * streams
+    assert n % rows_per_word == 0, (n, rows_per_word)
+
+    def row_slicer(ctx, word, r):
+        row = ctx.ref("idx")[word * rows_per_word + r]
+        return ctx.ref("table").at[pl.ds(row, 1), :]
+
+    def consumer(ctx):
+        ctx.out[...] = ctx.word("table")[...]
+
+    return StreamProgram(
+        name="ff_gather",
+        n_words=n // rows_per_word,
+        inputs=(
+            ScalarIn("idx"),
+            Stream("table",
+                   Pipe(tile=(rows_per_word, cols), dtype=dtype, depth=depth),
+                   row_slicer, gather=True),
+        ),
+        consumer=consumer,
+        out_shape=(n, cols),
+        out_dtype=dtype,
+        out_block=(rows_per_word, cols),
+        out_index_map=lambda g, idx: (g, 0),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("depth", "streams", "interpret"))
 def gather_ff(table: jnp.ndarray, idx: jnp.ndarray, *, depth: int = 4,
-              interpret: bool = True) -> jnp.ndarray:
-    """table: [R, C]; idx: [n] int32 with n % 8 == 0. Returns [n, C]."""
+              streams: int = 1, interpret: bool = True) -> jnp.ndarray:
+    """table: [R, C]; idx: [n] int32 with n % (8 * streams) == 0.
+    Returns [n, C]."""
     r, c = table.shape
     n = idx.shape[0]
-    assert n % _ROWS == 0, n
-    ring = GatherRingPipe(Pipe(tile=(_ROWS, c), dtype=table.dtype,
-                               depth=depth))
-    kernel = functools.partial(_kernel, ring=ring)
-    return pl.pallas_call(
-        kernel,
-        grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
-            grid=(n // _ROWS,),
-            in_specs=[pl.BlockSpec(memory_space=pl.ANY)],
-            out_specs=pl.BlockSpec((_ROWS, c), lambda g, idx: (g, 0)),
-            scratch_shapes=[*ring.scratch_shapes],
-        ),
-        out_shape=jax.ShapeDtypeStruct((n, c), table.dtype),
-        interpret=interpret,
-    )(idx, table)
+    program = build_program(n, c, dtype=table.dtype, depth=depth,
+                            streams=streams)
+    return compile_program(program, interpret=interpret)(idx, table)

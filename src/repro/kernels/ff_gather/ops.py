@@ -2,15 +2,16 @@
 
 from __future__ import annotations
 
-from typing import Tuple, Union
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.emitter import cdiv
+from repro.core.pipe import Pipe, vmem_budget_ok
 from repro.core.pipeline_model import Workload
-from repro.core.planner import resolve_auto
-from repro.kernels.ff_gather.kernel import _ROWS, gather_ff
+from repro.core.program import PipePolicy, make_entrypoint
+from repro.kernels.ff_gather.kernel import _ROWS, build_program, gather_ff
 from repro.kernels.ff_gather.ref import gather_ref
 from repro.kernels.registry import KernelCost, register_kernel
 
@@ -29,7 +30,9 @@ def gather_workload(n: int, cols: int, *,
                     dtype=jnp.float32) -> Tuple[Workload, Tuple[int, int]]:
     """One word per 8-row bundle of irregular single-row loads — the
     paper's IR access pattern: latency per word, hidden by (depth-1) x rows
-    outstanding row DMAs."""
+    outstanding row DMAs. The planner's ``streams`` choice is modeled as
+    concurrent 8-row producers; emission realizes it by widening the bundle
+    to ``8 * streams`` rows per word (budget re-checked in ``_apply``)."""
     itemsize = jnp.dtype(dtype).itemsize
     w = Workload(
         n_words=max(cdiv(n, _ROWS), 1),
@@ -41,29 +44,41 @@ def gather_workload(n: int, cols: int, *,
     return w, (_ROWS, cols)
 
 
-def gather(table, idx, *, depth: Union[int, str] = 4,
-           streams: Union[int, str] = 1, mode: str = "ff",
-           interpret: bool = True):
-    """rows = table[idx]; mode="ff"|"baseline"(depth=1)|"ref".
+def _apply(table, idx, *, policy: PipePolicy):
+    """rows = table[idx]; policy.mode="ff"|"baseline"(depth=1)|"ref".
 
-    depth accepts "auto" (planner-sized for the irregular stream). streams
-    is accepted for API uniformity but the row bundle *is* the stream
-    decomposition here (8 concurrent row DMAs per word), so the planned
-    value only affects the model, not emission.
+    The planned (or explicit) ``streams`` value widens the per-word row
+    bundle to ``8 * streams`` concurrent row DMAs — the irregular-stream
+    analogue of the paper's multi-producer design — so it is no longer
+    silently dropped.
     """
-    if mode == "ref":
+    if policy.mode == "ref":
         return gather_ref(table, idx)
     n = idx.shape[0]
     cols = table.shape[1]
     w, tile = gather_workload(n, cols, dtype=table.dtype)
-    depth, _streams = resolve_auto("ff_gather", depth, streams,
-                                   workload=w, tile=tile, dtype=table.dtype)
-    pad = (-n) % _ROWS
+    depth, streams = policy.resolve("ff_gather", workload=w, tile=tile,
+                                    dtype=table.dtype)
+    # The planner models 8-row words ("streams" = concurrent 8-row
+    # producers); emission merges them into one 8*streams-row bundle. Clamp
+    # to the bundles the index stream can actually fill (a wider word than
+    # n rows is pure padding traffic), then re-check the *emitted* ring
+    # against the VMEM budget and shed streams if the widened word would
+    # blow it.
+    streams = max(1, min(streams, n // _ROWS))
+    while streams > 1 and not vmem_budget_ok(
+            [Pipe(tile=(_ROWS * streams, cols), dtype=table.dtype,
+                  depth=depth)]):
+        streams //= 2
+    rows_per_word = _ROWS * streams
+    pad = (-n) % rows_per_word
     idx_p = jnp.pad(idx.astype(jnp.int32), (0, pad))
-    if mode == "baseline":
-        depth = 1
-    out = gather_ff(table, idx_p, depth=depth, interpret=interpret)
+    out = gather_ff(table, idx_p, depth=depth, streams=streams,
+                    interpret=policy.interpret)
     return out[:n]
+
+
+gather = make_entrypoint("ff_gather", _apply)
 
 
 def _make_inputs(key):
@@ -72,12 +87,21 @@ def _make_inputs(key):
     return (tab, idx), {}
 
 
+def _smoke_program(*, depth: int = 4, streams: int = 1):
+    # the smoke shape point of _make_inputs (52 rows padded to the bundle)
+    n = -(-52 // (_ROWS * streams)) * (_ROWS * streams)
+    return build_program(n, 128, dtype=jnp.float32, depth=depth,
+                         streams=streams)
+
+
 register_kernel(
     name="ff_gather",
+    alias="gather",
     op=gather,
     ref=gather_ref,
     cost=gather_cost,
     workload=gather_workload,
+    program=_smoke_program,
     make_inputs=_make_inputs,
     bench_kwargs={"n": 1 << 20, "cols": 512, "dtype": jnp.float32},
     regular=False,

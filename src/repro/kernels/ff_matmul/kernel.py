@@ -1,15 +1,13 @@
-"""Feed-forward (DAE) blocked matmul: C = A @ B.
+"""Feed-forward (DAE) blocked matmul: C = A @ B, as a StreamProgram.
 
 The paper's transformation, applied to the canonical MXU workload:
 
-* memory kernel  = async HBM->VMEM copies of A/B tiles, issued ``depth-1``
-  words ahead through two ring pipes (one per operand);
-* compute kernel = MXU dot over the landed tiles, accumulating in VMEM f32;
-* pipe           = the ring buffers; ``streams`` splits each tile copy into
-  parallel sub-DMAs (multi-producer M2C2 analogue).
-
-``depth=1`` degenerates to synchronous copy-then-compute — the "single
-work-item" baseline used by the Table-2 benchmark.
+* producer stages = the A and B tile streams (two ring-pipe edges), issued
+  ``depth-1`` words ahead; ``streams`` splits each tile copy into parallel
+  sub-DMAs (multi-producer M2C2 analogue);
+* consumer       = MXU dot over the landed tiles, accumulating in VMEM f32;
+* ``depth=1`` degenerates to synchronous copy-then-compute — the "single
+  work-item" baseline used by the Table-2 benchmark.
 
 Word schedule: 1-D grid over (mi, ni, ki) with k innermost; the output block
 (mi, ni) is revisited for nK consecutive steps and written on the last.
@@ -23,50 +21,66 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.emitter import RingPipe, acquire, release
 from repro.core.pipe import Pipe
+from repro.core.program import ScratchSpec, Stream, StreamProgram, \
+    compile_program
 
 
-def _kernel(a_hbm, b_hbm, o_ref, acc, a_buf, a_sems, b_buf, b_sems,
-            *, nm: int, nn: int, nk: int, a_ring: RingPipe, b_ring: RingPipe,
-            out_dtype):
-    g = pl.program_id(0)
-    n_words = nm * nn * nk
-    ki = g % nk
-    bm, bk = a_ring.spec.tile
-    _, bn = b_ring.spec.tile
+def build_program(m: int, n: int, k: int, *,
+                  block: Tuple[int, int, int] = (128, 128, 128),
+                  dtype=jnp.float32, b_dtype=None, out_dtype=None,
+                  depth: int = 2, streams: int = 1) -> StreamProgram:
+    """Declare the matmul stream program at one (block-aligned) shape.
+    ``dtype`` sizes the A pipe, ``b_dtype`` (default ``dtype``) the B pipe —
+    each operand streams through a ring of its own element type."""
+    bm, bn, bk = block
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, ((m, n, k), block)
+    nm, nn, nk = m // bm, n // bn, k // bk
+    b_dtype = b_dtype or dtype
+    out_dtype = out_dtype or dtype
 
-    def a_slice(word):
+    def a_slicer(ctx, word):
         w_ki = word % nk
         w_mi = word // (nk * nn)
-        return a_hbm.at[pl.ds(w_mi * bm, bm), pl.ds(w_ki * bk, bk)]
+        return ctx.ref("a").at[pl.ds(w_mi * bm, bm), pl.ds(w_ki * bk, bk)]
 
-    def b_slice(word):
+    def b_slicer(ctx, word):
         w_ki = word % nk
         w_ni = (word // nk) % nn
-        return b_hbm.at[pl.ds(w_ki * bk, bk), pl.ds(w_ni * bn, bn)]
+        return ctx.ref("b").at[pl.ds(w_ki * bk, bk), pl.ds(w_ni * bn, bn)]
 
-    pipes = [
-        a_ring.bind(a_buf, a_sems, a_slice),
-        b_ring.bind(b_buf, b_sems, b_slice),
-    ]
-    acquire(g, n_words, pipes)
+    def consumer(ctx):
+        ki = ctx.g % nk
+        acc = ctx.scratch("acc")
 
-    @pl.when(ki == 0)
-    def _():
-        acc[...] = jnp.zeros_like(acc)
+        @pl.when(ki == 0)
+        def _():
+            acc[...] = jnp.zeros_like(acc)
 
-    a_tile = a_ring.slot(g)[...]
-    b_tile = b_ring.slot(g)[...]
-    acc[...] += jnp.dot(a_tile, b_tile, preferred_element_type=jnp.float32)
+        acc[...] += jnp.dot(ctx.word("a")[...], ctx.word("b")[...],
+                            preferred_element_type=jnp.float32)
 
-    @pl.when(ki == nk - 1)
-    def _():
-        o_ref[...] = acc[...].astype(out_dtype)
+        @pl.when(ki == nk - 1)
+        def _():
+            ctx.out[...] = acc[...].astype(out_dtype)
 
-    release(g, n_words, pipes)
+    return StreamProgram(
+        name="ff_matmul",
+        n_words=nm * nn * nk,
+        inputs=(
+            Stream("a", Pipe(tile=(bm, bk), dtype=dtype, depth=depth,
+                             streams=streams), a_slicer),
+            Stream("b", Pipe(tile=(bk, bn), dtype=b_dtype, depth=depth,
+                             streams=streams), b_slicer),
+        ),
+        consumer=consumer,
+        out_shape=(m, n),
+        out_dtype=out_dtype,
+        out_block=(bm, bn),
+        out_index_map=lambda g: (g // (nn * nk), (g // nk) % nn),
+        scratch=(ScratchSpec("acc", (bm, bn), jnp.float32),),
+    )
 
 
 @functools.partial(
@@ -86,33 +100,7 @@ def matmul_ff(
     ops.matmul for auto-padding)."""
     (m, k), (k2, n) = a.shape, b.shape
     assert k == k2, (a.shape, b.shape)
-    bm, bn, bk = block
-    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (a.shape, b.shape, block)
-    nm, nn, nk = m // bm, n // bn, k // bk
-    out_dtype = out_dtype or a.dtype
-
-    a_ring = RingPipe(Pipe(tile=(bm, bk), dtype=a.dtype, depth=depth,
-                           streams=streams))
-    b_ring = RingPipe(Pipe(tile=(bk, bn), dtype=b.dtype, depth=depth,
-                           streams=streams))
-
-    kernel = functools.partial(
-        _kernel, nm=nm, nn=nn, nk=nk, a_ring=a_ring, b_ring=b_ring,
-        out_dtype=out_dtype)
-    return pl.pallas_call(
-        kernel,
-        grid=(nm * nn * nk,),
-        in_specs=[
-            pl.BlockSpec(memory_space=pl.ANY),
-            pl.BlockSpec(memory_space=pl.ANY),
-        ],
-        out_specs=pl.BlockSpec(
-            (bm, bn), lambda g: (g // (nn * nk), (g // nk) % nn)),
-        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
-        scratch_shapes=[
-            pltpu.VMEM((bm, bn), jnp.float32),
-            *a_ring.scratch_shapes,
-            *b_ring.scratch_shapes,
-        ],
-        interpret=interpret,
-    )(a, b)
+    program = build_program(m, n, k, block=block, dtype=a.dtype,
+                            b_dtype=b.dtype, out_dtype=out_dtype, depth=depth,
+                            streams=streams)
+    return compile_program(program, interpret=interpret)(a, b)

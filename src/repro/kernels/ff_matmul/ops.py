@@ -2,7 +2,7 @@
 
 from __future__ import annotations
 
-from typing import Tuple, Union
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -10,8 +10,8 @@ import jax.numpy as jnp
 from repro.core.emitter import cdiv, pad_to
 from repro.core.pipe import Pipe
 from repro.core.pipeline_model import Workload
-from repro.core.planner import resolve_auto
-from repro.kernels.ff_matmul.kernel import matmul_ff
+from repro.core.program import PipePolicy, make_entrypoint
+from repro.kernels.ff_matmul.kernel import build_program, matmul_ff
 from repro.kernels.ff_matmul.ref import matmul_ref
 from repro.kernels.registry import KernelCost, register_kernel
 
@@ -54,41 +54,39 @@ def matmul_workload(m: int, n: int, k: int,
     return w, (bm, bk)
 
 
-def matmul(
+def _apply(
     a: jnp.ndarray,
     b: jnp.ndarray,
     *,
     block: Tuple[int, int, int] = (128, 128, 128),
-    depth: Union[int, str] = 2,
-    streams: Union[int, str] = 1,
-    mode: str = "ff",
     out_dtype=None,
-    interpret: bool = True,
+    policy: PipePolicy,
 ) -> jnp.ndarray:
     """C = A @ B with auto-padding to the block grid.
 
-    mode="ff": DAE pipeline with the given pipe depth/streams; depth="auto"
-      / streams="auto" size the pipes via the roofline planner.
-    mode="baseline": synchronous copy-then-compute (depth=1) — the paper's
-      single work-item strawman.
-    mode="ref": pure-jnp oracle (XLA-visible; used in model graphs and as
-      the correctness reference).
+    policy.mode="ff": DAE pipeline with policy-sized pipes (depth/streams
+      "auto" size via the roofline planner against policy.hw).
+    policy.mode="baseline": synchronous copy-then-compute (depth=1) — the
+      paper's single work-item strawman.
+    policy.mode="ref": pure-jnp oracle (XLA-visible; used in model graphs
+      and as the correctness reference).
     """
-    if mode == "ref":
+    if policy.mode == "ref":
         return matmul_ref(a, b, out_dtype)
     m, k = a.shape
     _, n = b.shape
     w, tile = matmul_workload(m, n, k, block, a.dtype)
-    depth, streams = resolve_auto("ff_matmul", depth, streams,
-                                  workload=w, tile=tile, dtype=a.dtype)
+    depth, streams = policy.resolve("ff_matmul", workload=w, tile=tile,
+                                    dtype=a.dtype)
     bm, bn, bk = block
     ap = pad_to(pad_to(a, bm, 0), bk, 1)
     bp = pad_to(pad_to(b, bk, 0), bn, 1)
-    if mode == "baseline":
-        depth = 1
     out = matmul_ff(ap, bp, block=block, depth=depth, streams=streams,
-                    out_dtype=out_dtype, interpret=interpret)
+                    out_dtype=out_dtype, interpret=policy.interpret)
     return out[:m, :n]
+
+
+matmul = make_entrypoint("ff_matmul", _apply)
 
 
 def _make_inputs(key):
@@ -97,12 +95,20 @@ def _make_inputs(key):
     return (a, b), {"block": (128, 128, 128)}
 
 
+def _smoke_program(*, depth: int = 2, streams: int = 1):
+    # the smoke shape point of _make_inputs, padded to the block grid
+    return build_program(256, 256, 256, block=(128, 128, 128),
+                         dtype=jnp.float32, depth=depth, streams=streams)
+
+
 register_kernel(
     name="ff_matmul",
+    alias="matmul",
     op=matmul,
     ref=matmul_ref,
     cost=matmul_cost,
     workload=matmul_workload,
+    program=_smoke_program,
     make_inputs=_make_inputs,
     bench_kwargs={"m": 4096, "n": 4096, "k": 4096, "dtype": jnp.bfloat16},
     regular=True,

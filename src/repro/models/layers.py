@@ -205,6 +205,29 @@ def attention_xla(q, k, v, *, causal: bool, positions_q=None,
     return jnp.concatenate(outs, axis=1)
 
 
+def _session_kernel_policy(interpret: bool):
+    """Derive the kernel policy from the session `repro.policy` context (so
+    no-touch A/B runs reach model code), pinning only what the layer
+    contract fixes; modes the attention kernels don't speak (e.g.
+    chunk_scan's "xla") fall back to "ff"."""
+    from repro.core.program import current_policy
+    pol = current_policy()
+    if pol.mode not in ("ff", "baseline", "ref"):
+        pol = pol.replace(mode="ff")
+    return pol.replace(interpret=interpret)
+
+
+def _session_scan_policy(cfg_impl: str):
+    """Scan-kernel policy: the model config pins the default impl, but an
+    explicit session mode override (anything but the "ff" session default)
+    wins — so `with repro.policy(mode="baseline")` A/B runs reach the
+    chunk_scan call sites too. To force pipelined scans by default, set
+    cfg.scan_impl="ff" rather than a session policy."""
+    from repro.core.program import current_policy
+    pol = current_policy()
+    return pol.replace(mode=pol.mode if pol.mode != "ff" else cfg_impl)
+
+
 def attention_op(q, k, v, *, causal: bool, impl: str = "xla",
                  lengths=None, interpret: bool = True) -> jnp.ndarray:
     """Dispatch between the XLA path and the ff_attention Pallas kernel."""
@@ -218,8 +241,8 @@ def attention_op(q, k, v, *, causal: bool, impl: str = "xla",
     vh = v.transpose(0, 2, 1, 3).reshape(b * kvh, v.shape[1], d)
     block_q = min(128, max(8, s))
     out = ff_attn(qh, kh, vh, kv_groups=h // kvh, causal=causal,
-                  block_q=block_q, block_kv=128, mode="ff",
-                  interpret=interpret)
+                  block_q=block_q, block_kv=128,
+                  policy=_session_kernel_policy(interpret))
     return out.reshape(b, h, s, d).transpose(0, 2, 1, 3)
 
 
@@ -232,7 +255,8 @@ def decode_attention_op(q, k, v, lengths, *, impl: str = "xla",
     from repro.kernels.ff_decode_attention import decode_attention as ff_dec
     kh = k.transpose(0, 2, 1, 3)
     vh = v.transpose(0, 2, 1, 3)
-    return ff_dec(q, kh, vh, lengths, mode="ff", interpret=interpret)
+    return ff_dec(q, kh, vh, lengths,
+                  policy=_session_kernel_policy(interpret))
 
 
 # ---------------------------------------------------------------------------

@@ -109,8 +109,9 @@ def mamba_apply(cfg: ArchConfig, p, x, *, positions=None, cache=None,
     if cache is None:
         mode = cfg.scan_impl if cfg.scan_impl in ("xla", "xla_tiled", "ff") \
             else "xla"
-        y = chunk_scan(q_bh, k_bh, v_bh, lw_bh, inclusive=True, mode=mode,
-                       chunk=cfg.scan_chunk)
+        y = chunk_scan(q_bh, k_bh, v_bh, lw_bh, inclusive=True,
+                       chunk=cfg.scan_chunk,
+                       policy=L._session_scan_policy(mode))
         # final state for prefill->decode handoff:
         #   h_S = sum_s exp(cw_S - cw_s) k_s (x) v_s   (exponents <= 0)
         cw = jnp.cumsum(lw_bh.astype(jnp.float32), axis=1)        # [BH,S,N]

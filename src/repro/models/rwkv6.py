@@ -112,7 +112,8 @@ def time_mix_apply(cfg: ArchConfig, p, x, *, cache=None
         mode = cfg.scan_impl if cfg.scan_impl in ("xla", "xla_tiled", "ff") \
             else "xla"
         y = chunk_scan(heads(r), heads(k), heads(v), heads(log_w),
-                       u, inclusive=False, mode=mode, chunk=cfg.scan_chunk)
+                       u, inclusive=False, chunk=cfg.scan_chunk,
+                       policy=L._session_scan_policy(mode))
         # final state for prefill->decode handoff (low-precision operands,
         # f32 accumulation)
         lw = heads(log_w).astype(jnp.float32)

@@ -1,0 +1,54 @@
+"""repro.ops — thin kernel entrypoints generated from the kernel registry.
+
+Every registered :class:`~repro.kernels.registry.KernelSpec` exposes its
+public op here under its short alias (and its full ``ff_*`` name)::
+
+    import repro
+    y = repro.ops.matmul(a, b)                      # planner-sized pipes
+    y = repro.ops.gather(table, idx,
+                         policy=repro.PipePolicy(mode="baseline"))
+    with repro.policy(mode="baseline"):
+        y = repro.ops.attention(q, k, v)            # session default
+
+Nothing is defined by hand: attributes resolve against the registry, so a
+sixth registered kernel appears here automatically.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+_cache = (-1, {})    # (registry_version, alias -> op)
+
+
+def _aliases():
+    from repro.kernels.registry import all_kernels, registry_version
+
+    global _cache
+    version = registry_version()
+    if _cache[0] != version or not _cache[1]:
+        out = {}
+        for spec in all_kernels():
+            out[spec.alias] = spec.op
+            out[spec.name] = spec.op
+        # all_kernels() may itself register (lazy import) — re-read version
+        _cache = (registry_version(), out)
+    return _cache[1]
+
+
+def __getattr__(name):
+    ops = _aliases()
+    if name in ops:
+        return ops[name]
+    raise AttributeError(
+        f"repro.ops has no op {name!r}; registered: "
+        f"{sorted(k for k in ops if not k.startswith('ff_'))}")
+
+
+def names() -> Tuple[str, ...]:
+    """Short aliases of every registered op."""
+    return tuple(sorted(k for k in _aliases() if not k.startswith("ff_")))
+
+
+def __dir__():
+    return sorted(set(list(globals()) + list(_aliases()) + ["names"]))
