@@ -9,7 +9,15 @@ compile path — cannot silently rot even where full benches are too slow.
 It also writes ``BENCH_smoke.json`` (override with ``--json``): per-kernel
 wall time, max error, and the modeled FF-vs-baseline speedup + planned
 (depth, streams) at the registry bench shape point, so CI tracks the perf
-trajectory run over run."""
+trajectory run over run.
+
+``--autotune`` runs the measured autotuner over every registry kernel
+(``PipePolicy(mode="autotune")`` at the smoke shapes): the (tile, depth,
+streams) space is searched empirically, tuned plans are persisted to the
+plan cache (``~/.cache/repro/plans.json`` — CI restores it across runs, so
+a warm cache skips re-measuring), and ``BENCH_autotune.json`` records the
+measured tuned-vs-analytic comparison per kernel. ``--budget-s`` bounds
+the total tuning wall time. Composes with ``--smoke``."""
 
 from __future__ import annotations
 
@@ -63,7 +71,8 @@ def smoke(json_path: str = "BENCH_smoke.json") -> None:
                 "est_speedup": round(base.total_s / ff.total_s, 3),
                 "est_us_per_call": round(ff.total_s * 1e6, 1),
                 "plan": {"depth": plan.pipe.depth,
-                         "streams": plan.pipe.streams},
+                         "streams": plan.pipe.streams,
+                         "skipped": list(plan.skipped)},
                 "bottleneck": ff.bottleneck,
             })
         except Exception:   # noqa: BLE001 — still report the other kernels
@@ -93,6 +102,96 @@ def smoke(json_path: str = "BENCH_smoke.json") -> None:
     print("smoke ok")
 
 
+def autotune_bench(json_path: str = "BENCH_autotune.json",
+                   budget_s: float | None = None) -> None:
+    """Tune every registry kernel with the measured autotuner and report
+    tuned-vs-analytic per kernel. The analytic plan's configuration is
+    always in the measured candidate set, so the tuned choice can only be
+    at least as fast (within timing noise); a >5% regression is a harness
+    bug and fails the run."""
+    import jax
+    import numpy as np
+
+    from repro.core import PLAN_FORMAT_VERSION, PipePolicy
+    from repro.core import autotune as at
+    from repro.kernels.registry import all_kernels
+
+    results = []
+    failures = []
+    specs = all_kernels()
+    t_end = None if budget_s is None else time.monotonic() + budget_s
+    print("# autotune: measured (tile, depth, streams) per registry kernel")
+    print(f"# plan cache: {at.cache_path()} (format {PLAN_FORMAT_VERSION})")
+    for i, spec in enumerate(specs):
+        per_kernel = None
+        if t_end is not None:
+            # split what is left of the budget across the kernels left
+            per_kernel = max((t_end - time.monotonic()) / (len(specs) - i),
+                             1.0)
+        t0 = time.time()
+        try:
+            with at.tuning_config(budget_s=per_kernel):
+                args, kw = spec.make_inputs(jax.random.key(0))
+                np.asarray(spec.op(*args, **kw,
+                                   policy=PipePolicy(mode="autotune")))
+            rec = at.last_record(spec.name)
+            if rec is None:
+                raise RuntimeError("no tuned plan was recorded")
+        except Exception:   # noqa: BLE001 — report all kernels
+            traceback.print_exc()
+            failures.append(spec.name)
+            results.append({"kernel": spec.name, "ok": False})
+            print(f"autotune/{spec.name},nan,FAIL")
+            continue
+        wall_ms = (time.time() - t0) * 1e3
+        tuned_ms = rec["measured_s"] * 1e3
+        ana = rec["analytic"]
+        ana_ms = (ana.get("measured_s") or float("nan")) * 1e3
+        speedup = ana_ms / tuned_ms if tuned_ms else float("nan")
+        # argmin over a set containing the analytic config: tuned can only
+        # regress through measurement noise, so >5% slower = harness bug
+        ok = not math.isfinite(speedup) or speedup >= 0.95
+        results.append({
+            "kernel": spec.name,
+            "alias": spec.alias,
+            "ok": bool(ok),
+            "source": rec["source"],
+            "tuned": {"tile": rec["tile_kwargs"], "depth": rec["depth"],
+                      "streams": rec["streams"],
+                      "measured_ms": round(tuned_ms, 3)},
+            "analytic": {"depth": ana["depth"], "streams": ana["streams"],
+                         "predicted_ms": round(ana["predicted_s"] * 1e3, 4),
+                         "measured_ms": (round(ana_ms, 3)
+                                         if math.isfinite(ana_ms) else None)},
+            "speedup_vs_analytic": (round(speedup, 3)
+                                    if math.isfinite(speedup) else None),
+            "candidates_measured": sum(
+                1 for c in rec["candidates"]
+                if c.get("measured_s") is not None),
+            "candidates_considered": len(rec["candidates"]),
+            "skipped": list(rec.get("skipped", ()))[:10],
+            "tune_wall_ms": round(wall_ms, 1),
+        })
+        print(f"autotune/{spec.name},{tuned_ms * 1e3:.0f},"
+              f"speedup_vs_analytic={speedup:.2f}_{rec['source']}")
+        if not ok:
+            failures.append(f"{spec.name} (tuned slower than analytic)")
+    if json_path:
+        payload = {
+            "suite": "autotune",
+            "plan_format": PLAN_FORMAT_VERSION,
+            "kernels": results,
+        }
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"# wrote {json_path}")
+    if failures:
+        print(f"\nFAILED autotune kernels: {failures}", file=sys.stderr)
+        raise SystemExit(1)
+    print("autotune ok")
+
+
 def full() -> None:
     from benchmarks import (fig4_m2c2, kernel_bench, roofline_report,
                             table2_feedforward, table3_microbench)
@@ -119,8 +218,23 @@ def main() -> None:
     parser.add_argument("--json", default="BENCH_smoke.json",
                         help="path for the smoke-mode JSON report "
                              "('' disables; default %(default)s)")
+    parser.add_argument("--autotune", action="store_true",
+                        help="run the measured autotuner over every "
+                             "registry kernel and write the tuned-vs-"
+                             "analytic report (composes with --smoke)")
+    parser.add_argument("--autotune-json", default="BENCH_autotune.json",
+                        help="path for the autotune JSON report "
+                             "('' disables; default %(default)s)")
+    parser.add_argument("--budget-s", type=float, default=None,
+                        help="total wall-time budget for --autotune "
+                             "measurement (seconds; default unbounded)")
     args = parser.parse_args()
-    smoke(args.json) if args.smoke else full()
+    if args.smoke:
+        smoke(args.json)
+    if args.autotune:
+        autotune_bench(args.autotune_json, args.budget_s)
+    if not (args.smoke or args.autotune):
+        full()
 
 
 if __name__ == "__main__":

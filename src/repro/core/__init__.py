@@ -7,8 +7,10 @@ Public API:
   check_no_mlcd             legality (true-MLCD) checker
   Workload / HardwareModel  analytic DAE pipeline model
   estimate_baseline / estimate_feedforward / speedup
-  plan_pipe                 roofline-driven (depth, streams) auto-tuner
+  plan_pipe                 roofline-driven (depth, streams) planner
   planned_pipe / resolve_auto  cached per-call-site plan + "auto" resolution
+  resolve_call / tuning_config  measured autotuner ((tile, depth, streams)
+                            searched empirically, persistent plan cache)
   PipePolicy / policy       unified pipe policy + session-default context
   StreamProgram / compile_program  declarative producer→pipe→consumer graphs
                             lowered through the emitter into one pallas_call
@@ -44,12 +46,21 @@ from repro.core.pipeline_model import (
 )
 from repro.core.planner import (
     Plan,
+    PlanError,
     plan_cache_clear,
     plan_cache_info,
     plan_pipe,
     planned_pipe,
     resolve_auto,
     resolve_policy,
+)
+from repro.core.autotune import (
+    PLAN_FORMAT_VERSION,
+    TunedChoice,
+    measure,
+    resolve_call,
+    tuned_cache_clear,
+    tuning_config,
 )
 from repro.core.program import (
     BlockIn,
@@ -69,6 +80,9 @@ from repro.core.program import (
 __all__ = [
     "ARRIA_CX",
     "BlockIn",
+    "PLAN_FORMAT_VERSION",
+    "PlanError",
+    "TunedChoice",
     "Footprint",
     "GatherRingPipe",
     "HardwareModel",
@@ -93,6 +107,7 @@ __all__ = [
     "estimate_baseline",
     "estimate_feedforward",
     "make_entrypoint",
+    "measure",
     "pad_to",
     "plan_cache_clear",
     "plan_cache_info",
@@ -103,11 +118,14 @@ __all__ = [
     "release",
     "required_depth",
     "resolve_auto",
+    "resolve_call",
     "resolve_call_policy",
     "resolve_policy",
     "run_multistream_reference",
     "run_reference",
     "speedup",
     "split_words_static",
+    "tuned_cache_clear",
+    "tuning_config",
     "vmem_budget_ok",
 ]

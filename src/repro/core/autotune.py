@@ -1,0 +1,522 @@
+"""Measured autotuner: search (tile, depth, streams) per call site.
+
+The paper sizes pipes *empirically* — profiler-guided depth/stream choices
+per kernel, with the observation that the best configuration is device- and
+access-pattern-specific. The analytic planner (:mod:`repro.core.planner`)
+encodes the paper's reasoning but never measures anything; The Memory
+Controller Wall (arXiv 1910.06726) documents exactly the gap between
+modeled and achieved memory bandwidth that opens up. This module closes it:
+
+* **Candidate generation** is seeded and pruned by the analytic model —
+  for every tile option the kernel declares (``KernelSpec.tile_options``)
+  and every (depth, streams) the planner considers feasible (VMEM budget,
+  divisibility), candidates are ranked by :func:`estimate_feedforward`
+  predicted time and only the top-K are measured. The analytic plan's own
+  configuration is always measured first, so every tuned plan records a
+  measured-vs-analytic comparison and can never select something slower
+  than the analytic choice (it is the argmin over a set containing it).
+* **Measurement** runs the real compiled kernel at the call site's shapes:
+  warmup + median-of-N wall times with ``jax.block_until_ready``.
+* **Persistence**: selected plans land in an on-disk JSON cache
+  (``~/.cache/repro/plans.json``, override with the ``REPRO_PLAN_CACHE``
+  env var or :func:`tuning_config`), keyed by
+  ``(op, workload, dtype, hw, PLAN_FORMAT_VERSION)``. The disk cache fronts
+  an in-memory dict the same way the planner's ``lru_cache`` fronts
+  ``plan_pipe``, so a fresh process reloads tuned plans without
+  re-measuring.
+
+Entry point for kernels: :func:`resolve_call` — a drop-in superset of
+``PipePolicy.resolve`` that returns a :class:`TunedChoice` (tile override +
+depth + streams). Policies opt in with ``PipePolicy(mode="autotune")``
+(full tile/depth/streams search) or ``depth="measured"`` /
+``streams="measured"`` (measured sizing at the kernel's default tile). Call
+sites that cannot be measured (traced arguments inside a user ``jax.jit``,
+or no runner) fall back to the analytic plan with a warning.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import json
+import os
+import statistics
+import threading
+import time
+import warnings
+from typing import Any, Callable, Dict, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import planner
+from repro.core.pipe import Pipe, required_depth, vmem_budget_ok
+from repro.core.pipeline_model import estimate_feedforward
+
+# Bump whenever the record schema or the meaning of a key field changes:
+# stale on-disk plans from an older format are ignored (their keys embed the
+# version), and CI keys its plan-cache restore on this constant.
+PLAN_FORMAT_VERSION = 1
+
+_DEFAULT_CACHE_PATH = os.path.join("~", ".cache", "repro", "plans.json")
+_VMEM_BUDGET_BYTES = 96 * 1024 * 1024
+_DEPTH_CAP = 17
+
+
+@dataclasses.dataclass(frozen=True)
+class TunedChoice:
+    """One resolved call-site configuration.
+
+    ``tile_kwargs`` is the kernel-specific tile override (e.g.
+    ``{"block": (256, 128, 128)}`` or ``{"block_kv": 64}``); empty means
+    the call site's default tile. ``source`` records where the choice came
+    from: "analytic" (policy did not ask for measurement),
+    "analytic-fallback" (asked but unmeasurable), "measured" (tuned now),
+    "memory"/"disk" (served from the plan cache).
+    """
+
+    tile_kwargs: Mapping[str, Any]
+    depth: int
+    streams: int
+    source: str
+
+
+@dataclasses.dataclass(frozen=True)
+class TuningConfig:
+    """Knobs of one tuning session (see :func:`tuning_config`)."""
+
+    warmup: int = 1
+    iters: int = 3
+    top_k: int = 6
+    budget_s: Optional[float] = None
+    cache_path: Optional[str] = None
+
+
+class _ConfigStack(threading.local):
+    def __init__(self):
+        self.stack = [TuningConfig()]
+
+
+_configs = _ConfigStack()
+
+
+def current_tuning_config() -> TuningConfig:
+    return _configs.stack[-1]
+
+
+@contextlib.contextmanager
+def tuning_config(**fields):
+    """Override tuning knobs for a scope (thread-local, nests).
+
+    ``with tuning_config(budget_s=12, iters=2): ...`` bounds the wall time
+    and sampling of any tuning triggered inside; ``cache_path=`` redirects
+    the persistent plan cache (tests point it at a tmpdir).
+    """
+    cfg = dataclasses.replace(current_tuning_config(), **fields)
+    _configs.stack.append(cfg)
+    try:
+        yield cfg
+    finally:
+        _configs.stack.pop()
+
+
+def cache_path() -> str:
+    """Resolve the plan-cache file: tuning_config > $REPRO_PLAN_CACHE >
+    ``~/.cache/repro/plans.json``."""
+    cfg = current_tuning_config()
+    if cfg.cache_path:
+        return cfg.cache_path
+    return os.path.expanduser(
+        os.environ.get("REPRO_PLAN_CACHE") or _DEFAULT_CACHE_PATH)
+
+
+# ---------------------------------------------------------------------------
+# Persistent plan cache (disk JSON fronted by an in-memory dict)
+# ---------------------------------------------------------------------------
+
+_MEM: Dict[Tuple[str, str], dict] = {}   # (cache path, plan_key) -> record
+_DISK: Dict[str, Dict[str, dict]] = {}   # cache file path -> parsed plans
+_LAST: Dict[str, dict] = {}         # op -> last record resolved (for bench)
+_warned_fallback_ops = set()
+
+
+def plan_key(op: str, workload, dtype, hw, constraints: str = "") -> str:
+    """Cache key of one call site: (op, workload, dtype, hw, search
+    constraints, format). ``constraints`` carries everything that shapes
+    the search or the measurement besides the workload — policy pins,
+    interpret flag, kernel statics — so a cached plan is only served to
+    call sites it is actually valid for."""
+    wl = json.dumps(dataclasses.asdict(workload), sort_keys=True)
+    return (f"{op}|{hw.name}|{jnp.dtype(dtype).name}"
+            f"|fmt{PLAN_FORMAT_VERSION}|{constraints}|{wl}")
+
+
+def _policy_constraints(policy, extra_key: str = "") -> str:
+    """The search-space signature of a policy: pinned ints (and, outside
+    mode="autotune", planner-pinned "auto" fields) constrain the
+    candidates, mode="autotune" enables the tile search, and interpret
+    changes what is being timed — plans cached under one signature must
+    not be served to another."""
+    sig = (f"tiles{int(policy.mode == 'autotune')}"
+           f"|d{policy.depth}|s{policy.streams}"
+           f"|so{','.join(map(str, policy.stream_options))}"
+           f"|interp{int(policy.interpret)}")
+    return f"{sig}|{extra_key}" if extra_key else sig
+
+
+def tuned_cache_clear() -> None:
+    """Drop the in-memory tuned-plan caches (the disk *file* is untouched:
+    the next lookup re-reads it, like a fresh process would)."""
+    _MEM.clear()
+    _DISK.clear()
+    _LAST.clear()
+
+
+def last_record(op: str) -> Optional[dict]:
+    """The most recent tuned-plan record resolved for ``op`` (bench report
+    hook; includes the candidate table and the measured analytic config)."""
+    return _LAST.get(op)
+
+
+def load_plans(path: Optional[str] = None) -> Dict[str, dict]:
+    """The on-disk plan cache, parsed once per path per process (cleared
+    by :func:`tuned_cache_clear`). A corrupt or wrong-format file warns
+    once and reads as empty (callers then fall back to the analytic plan
+    or re-measure) — it is a cache, never a source of failure."""
+    path = path or cache_path()
+    if path in _DISK:
+        return _DISK[path]
+    _DISK[path] = plans = _read_plans_file(path)
+    return plans
+
+
+def _read_plans_file(path: str) -> Dict[str, dict]:
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+        plans = payload["plans"]
+        if payload.get("format") != PLAN_FORMAT_VERSION \
+                or not isinstance(plans, dict):
+            raise ValueError(f"plan format {payload.get('format')!r} != "
+                             f"{PLAN_FORMAT_VERSION}")
+        return plans
+    except FileNotFoundError:
+        return {}
+    except (OSError, ValueError, KeyError, TypeError) as e:
+        warnings.warn(
+            f"ignoring corrupt plan cache {path} ({e}); tuned plans will "
+            f"be re-measured or fall back to the analytic planner",
+            RuntimeWarning, stacklevel=2)
+        return {}
+
+
+def store_plan(key: str, record: dict, path: Optional[str] = None) -> None:
+    """Merge one record into the on-disk cache (atomic tmp+rename). The
+    file is re-read before writing so records tuned by concurrent
+    processes are merged, not clobbered."""
+    path = path or cache_path()
+    plans = _read_plans_file(path)
+    plans[key] = record
+    _DISK[path] = plans
+    payload = {"format": PLAN_FORMAT_VERSION, "plans": plans}
+    try:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        tmp = f"{path}.tmp.{os.getpid()}"
+        with open(tmp, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+            f.write("\n")
+        os.replace(tmp, path)
+    except OSError as e:    # read-only HOME etc.: keep the in-memory plan
+        warnings.warn(f"could not persist plan cache to {path}: {e}",
+                      RuntimeWarning, stacklevel=2)
+
+
+def _as_tuples(obj):
+    """JSON round-trip turns tuples into lists; restore tuples (tile shapes
+    must be hashable for the jitted kernels' static args)."""
+    if isinstance(obj, list):
+        return tuple(_as_tuples(v) for v in obj)
+    if isinstance(obj, dict):
+        return {k: _as_tuples(v) for k, v in obj.items()}
+    return obj
+
+
+# ---------------------------------------------------------------------------
+# Measurement harness
+# ---------------------------------------------------------------------------
+
+
+def measure(fn: Callable[[], Any], *, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall seconds of ``fn()`` over ``iters`` timed runs.
+
+    ``warmup`` untimed runs absorb compilation; every run blocks on the
+    result (``jax.block_until_ready``), so async dispatch cannot fake a
+    zero-cost kernel.
+    """
+    for _ in range(max(warmup, 0)):
+        jax.block_until_ready(fn())
+    times = []
+    for _ in range(max(iters, 1)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        times.append(time.perf_counter() - t0)
+    return float(statistics.median(times))
+
+
+def has_tracers(*arrays) -> bool:
+    """True if any argument is a JAX tracer (call site inside a user jit —
+    unmeasurable: there are no concrete operands to time against)."""
+    return any(isinstance(a, jax.core.Tracer) for a in arrays)
+
+
+def wants_measured(policy) -> bool:
+    """Does this policy resolve through the tuner?  mode="autotune", or
+    depth/streams "measured" in a pipelined mode (the baseline strawman is
+    depth=1 by definition — nothing to measure)."""
+    if policy.mode == "autotune":
+        return True
+    return policy.mode not in ("baseline", "ref") and \
+        "measured" in (policy.depth, policy.streams)
+
+
+# ---------------------------------------------------------------------------
+# Candidate generation (seeded and pruned by the analytic model)
+# ---------------------------------------------------------------------------
+
+
+def _candidate_depths(workload, hw) -> Tuple[int, ...]:
+    """Depth candidates around the analytic latency-hiding point."""
+    service = workload.word_bytes / hw.stream_bandwidth(1, workload.regular)
+    need = required_depth(hw.dma_latency_s, service, cap=_DEPTH_CAP)
+    return tuple(sorted({2, 3, 4, need, min(2 * need, _DEPTH_CAP)}))
+
+
+def _enumerate_candidates(policy, workload_fn, tile_options, dtype,
+                          pinned_depth, pinned_streams, skipped):
+    """All VMEM-feasible (tile_kwargs, depth, streams) points with their
+    model-predicted times. ``pinned_depth``/``pinned_streams`` fix that
+    axis of the search (None = free); ``skipped`` collects rejection
+    lines."""
+    hw = policy.hw
+    tiles = ({},)
+    if policy.mode == "autotune":
+        tiles += tuple(tk for tk in tile_options if tk)
+    out = []
+    for tk in tiles:
+        try:
+            w_t, plan_tile = workload_fn(_as_tuples(tk))
+        except Exception as e:    # noqa: BLE001 — tile invalid at this shape
+            skipped.append(f"tile {tk}: {type(e).__name__}: {e}")
+            continue
+        depths = (pinned_depth,) if pinned_depth else \
+            _candidate_depths(w_t, hw)
+        streams_opts = (pinned_streams,) if pinned_streams else \
+            tuple(policy.stream_options)
+        for d in depths:
+            for s in streams_opts:
+                if plan_tile[0] % s != 0:
+                    skipped.append(f"tile {tk or 'default'} streams={s}: "
+                                   f"tile[0]={plan_tile[0]} not divisible")
+                    continue
+                try:
+                    pipe = Pipe(tile=tuple(plan_tile),
+                                dtype=jnp.dtype(dtype), depth=d, streams=s)
+                except ValueError as e:    # tile not TPU-alignable
+                    skipped.append(f"tile {tk or 'default'} streams={s}: {e}")
+                    continue
+                if not vmem_budget_ok([pipe], _VMEM_BUDGET_BYTES):
+                    skipped.append(
+                        f"tile {tk or 'default'} depth={d} streams={s}: "
+                        f"ring vmem {pipe.vmem_bytes}B over budget")
+                    continue
+                est = estimate_feedforward(w_t, hw, pipe)
+                out.append({"tile_kwargs": dict(tk), "depth": int(d),
+                            "streams": int(s),
+                            "predicted_s": float(est.total_s)})
+    return out
+
+
+def _dedupe(cands):
+    seen, out = set(), []
+    for c in cands:
+        k = (json.dumps(c["tile_kwargs"], sort_keys=True, default=list),
+             c["depth"], c["streams"])
+        if k not in seen:
+            seen.add(k)
+            out.append(c)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# The tuner
+# ---------------------------------------------------------------------------
+
+
+def _analytic_choice(op, policy, *, workload, tile, dtype,
+                     source: str) -> TunedChoice:
+    # resolve_auto treats "measured" as "auto" (the documented analytic
+    # approximation), so the policy can be handed over unchanged.
+    depth, streams = planner.resolve_policy(op, policy, workload=workload,
+                                            tile=tile, dtype=dtype)
+    return TunedChoice({}, depth, streams, source)
+
+
+def _tune(op, policy, *, workload, tile, dtype, workload_fn, runner,
+          tile_options) -> Optional[dict]:
+    """Measure the pruned candidate set; return the tuned record or None
+    if nothing could be measured."""
+    cfg = current_tuning_config()
+    t0 = time.monotonic()
+    skipped: list = []
+
+    # The analytic plan at the default tile: always candidate #0, so the
+    # record carries a measured analytic reference and the argmin can only
+    # improve on it. Resolved through resolve_policy so policy-pinned ints
+    # constrain the reference exactly like they constrain the search.
+    depth_a, streams_a = planner.resolve_policy(
+        op, policy, workload=workload, tile=tuple(tile), dtype=dtype)
+    est_a = estimate_feedforward(
+        workload, policy.hw,
+        Pipe(tile=tuple(tile), dtype=jnp.dtype(dtype), depth=depth_a,
+             streams=streams_a))
+    analytic = {"tile_kwargs": {}, "depth": depth_a, "streams": streams_a,
+                "predicted_s": float(est_a.total_s)}
+
+    # Which axes does this policy open to empirical search? Explicit ints
+    # always pin. In mode="autotune" everything else is searched; in a
+    # pipelined mode with depth/streams="measured", an "auto" field keeps
+    # its documented meaning — planner-sized — and is pinned to the
+    # analytic resolution rather than silently promoted to the search.
+    def _pin(val, analytic_val):
+        if isinstance(val, int):
+            return val
+        if val == "auto" and policy.mode != "autotune":
+            return analytic_val
+        return None
+    cands = _enumerate_candidates(policy, workload_fn, tile_options, dtype,
+                                  _pin(policy.depth, depth_a),
+                                  _pin(policy.streams, streams_a), skipped)
+    cands.sort(key=lambda c: c["predicted_s"])
+    cands = _dedupe([analytic] + cands)[:max(cfg.top_k, 1)]
+
+    measured = []
+    for i, c in enumerate(cands):
+        if i > 0 and cfg.budget_s is not None \
+                and time.monotonic() - t0 >= cfg.budget_s:
+            skipped.append(
+                f"candidate depth={c['depth']} streams={c['streams']} "
+                f"tile={c['tile_kwargs'] or 'default'}: tuning budget "
+                f"{cfg.budget_s}s exhausted")
+            c["measured_s"] = None
+            continue
+        try:
+            fn = runner(_as_tuples(c["tile_kwargs"]), c["depth"],
+                        c["streams"])
+            c["measured_s"] = measure(fn, warmup=cfg.warmup,
+                                      iters=cfg.iters)
+            measured.append(c)
+        except Exception as e:   # noqa: BLE001 — candidate infeasible at run
+            c["measured_s"] = None
+            skipped.append(
+                f"candidate depth={c['depth']} streams={c['streams']} "
+                f"tile={c['tile_kwargs'] or 'default'}: "
+                f"{type(e).__name__}: {e}")
+    if not measured:
+        return None
+    best = min(measured, key=lambda c: c["measured_s"])
+    return {
+        "format": PLAN_FORMAT_VERSION,
+        "op": op,
+        "hw": policy.hw.name,
+        "dtype": jnp.dtype(dtype).name,
+        "workload": dataclasses.asdict(workload),
+        "tile_kwargs": best["tile_kwargs"],
+        "depth": best["depth"],
+        "streams": best["streams"],
+        "measured_s": best["measured_s"],
+        "analytic": dict(cands[0]),     # == analytic config, now measured
+        "candidates": cands,
+        "skipped": skipped[:40],
+        "measure": {"warmup": cfg.warmup, "iters": cfg.iters},
+    }
+
+
+def resolve_call(op: str, policy, *, workload, tile, dtype,
+                 workload_fn: Optional[Callable] = None,
+                 runner: Optional[Callable] = None,
+                 tile_options: Sequence[Mapping[str, Any]] = (),
+                 extra_key: str = "",
+                 ) -> TunedChoice:
+    """Resolve one kernel call site's (tile, depth, streams) under
+    ``policy`` — the measured superset of ``PipePolicy.resolve``.
+
+    Args:
+      op/workload/tile/dtype: the analytic planner inputs (default tile).
+      workload_fn: ``f(tile_kwargs) -> (Workload, plan_tile)`` re-deriving
+        the planner inputs for a tile candidate (``f({})`` must equal the
+        defaults).
+      runner: ``f(tile_kwargs, depth, streams) -> g`` where ``g()`` runs
+        the real kernel once at the call-site operands under that
+        configuration. ``None`` means the call site cannot be measured
+        (traced operands) — measured policies then fall back to the
+        analytic plan with a warning.
+      tile_options: the kernel's declared tile candidates
+        (``KernelSpec.tile_options``), searched only in mode="autotune".
+      extra_key: kernel statics that change the measured kernel but are
+        not part of the Workload (e.g. chunk_scan's subtile, attention's
+        kv length) — folded into the plan-cache key so a tuned plan is
+        never served across call sites it was not measured for.
+
+    Resolution order for measured policies: in-memory cache -> on-disk
+    plan cache -> measure-and-persist -> analytic fallback. The cache key
+    also carries the policy's search constraints (pinned depth/streams,
+    stream_options, interpret, tile-search on/off), so e.g. plans measured
+    in interpret mode are never served to compiled-mode call sites.
+    """
+    if not wants_measured(policy):
+        depth, streams = planner.resolve_policy(
+            op, policy, workload=workload, tile=tile, dtype=dtype)
+        return TunedChoice({}, depth, streams, "analytic")
+
+    key = plan_key(op, workload, dtype, policy.hw,
+                   _policy_constraints(policy, extra_key))
+    # the in-memory front is keyed per cache file, so redirecting the
+    # plan cache (tuning_config / REPRO_PLAN_CACHE) mid-process never
+    # serves plans from the previously selected file
+    path = cache_path()
+    mem_key = (path, key)
+    source = "memory"
+    record = _MEM.get(mem_key)
+    if record is None:
+        record = load_plans(path).get(key)
+        source = "disk"
+        if record is not None:
+            _MEM[mem_key] = record
+    if record is None:
+        if runner is None or workload_fn is None:
+            if op not in _warned_fallback_ops:
+                _warned_fallback_ops.add(op)
+                warnings.warn(
+                    f"{op}: measured plan requested but the call site is "
+                    f"not measurable (traced operands or no runner); "
+                    f"falling back to the analytic plan", RuntimeWarning,
+                    stacklevel=3)
+            return _analytic_choice(op, policy, workload=workload,
+                                    tile=tile, dtype=dtype,
+                                    source="analytic-fallback")
+        record = _tune(op, policy, workload=workload, tile=tile,
+                       dtype=dtype, workload_fn=workload_fn, runner=runner,
+                       tile_options=tile_options)
+        if record is None:    # every candidate failed to run
+            warnings.warn(
+                f"{op}: no autotune candidate could be measured; using the "
+                f"analytic plan", RuntimeWarning, stacklevel=3)
+            return _analytic_choice(op, policy, workload=workload,
+                                    tile=tile, dtype=dtype,
+                                    source="analytic-fallback")
+        source = "measured"
+        _MEM[mem_key] = record
+        store_plan(key, record, path)
+    _LAST[op] = dict(record, source=source)
+    return TunedChoice(_as_tuples(record["tile_kwargs"]),
+                       int(record["depth"]), int(record["streams"]), source)

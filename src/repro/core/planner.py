@@ -24,6 +24,30 @@ from repro.core.pipeline_model import (
 )
 
 
+class PlanError(RuntimeError):
+    """No feasible (depth, streams) candidate under the VMEM budget.
+
+    Raised (never asserted: asserts vanish under ``python -O``) with the
+    full search context attached, so autotune/bench callers can report the
+    search space instead of a bare failure:
+
+    Attributes:
+      workload: the :class:`~repro.core.pipeline_model.Workload` planned for.
+      vmem_budget_bytes: the budget every candidate was checked against.
+      rejected: one human-readable line per rejected candidate.
+    """
+
+    def __init__(self, workload: Workload, vmem_budget_bytes: int,
+                 rejected: Sequence[str]):
+        self.workload = workload
+        self.vmem_budget_bytes = vmem_budget_bytes
+        self.rejected = tuple(rejected)
+        lines = "; ".join(self.rejected) or "(no candidates generated)"
+        super().__init__(
+            f"no feasible pipe under the {vmem_budget_bytes}-byte VMEM "
+            f"budget for workload {workload}; rejected: {lines}")
+
+
 @dataclasses.dataclass(frozen=True)
 class Plan:
     pipe: Pipe
@@ -31,6 +55,7 @@ class Plan:
     predicted_s: float
     predicted_bw: float
     rationale: str
+    skipped: Tuple[str, ...] = ()    # rejected candidates, one line each
 
 
 def plan_pipe(
@@ -53,11 +78,17 @@ def plan_pipe(
     depth = required_depth(hw.dma_latency_s, service, cap=depth_cap)
 
     best: Plan | None = None
+    skipped = []
     for streams in stream_options:
         if tile[0] % streams != 0:
+            skipped.append(
+                f"streams={streams}: tile[0]={tile[0]} not divisible")
             continue
         pipe = base_pipe.with_depth(depth).with_streams(streams)
         if not vmem_budget_ok([pipe], vmem_budget_bytes):
+            skipped.append(
+                f"streams={streams} depth={depth}: ring vmem "
+                f"{pipe.vmem_bytes}B > budget {vmem_budget_bytes}B")
             continue
         est = estimate_feedforward(w, hw, pipe)
         cand = Plan(
@@ -74,7 +105,12 @@ def plan_pipe(
         # frugality, per the paper)
         if best is None or cand.predicted_s < best.predicted_s * 0.98:
             best = cand
-    assert best is not None, "no feasible pipe under VMEM budget"
+    if best is None:
+        raise PlanError(w, vmem_budget_bytes, skipped)
+    if skipped:
+        best = dataclasses.replace(
+            best, skipped=tuple(skipped),
+            rationale=best.rationale + f"; skipped: {'; '.join(skipped)}")
     return best
 
 
@@ -129,12 +165,18 @@ def resolve_auto(
     Explicit integers pass through untouched (the paper's programmer-chosen
     sizing stays available); the planner only runs when at least one of the
     two is ``"auto"``, and its Plan is served from the per-(op, shape,
-    dtype, hw) cache on repeat call sites.
+    dtype, hw) cache on repeat call sites. ``"measured"`` is accepted as a
+    synonym for ``"auto"`` here: it is the analytic *fallback* for call
+    sites the autotuner (:mod:`repro.core.autotune`) cannot measure (traced
+    arguments, no runner) — measured resolution itself never reaches this
+    function.
     """
     for label, val in (("depth", depth), ("streams", streams)):
-        if isinstance(val, str) and val != "auto":
+        if isinstance(val, str) and val not in ("auto", "measured"):
             raise ValueError(
-                f"{label} must be an int or the string 'auto', got {val!r}")
+                f"{label} must be an int or 'auto'/'measured', got {val!r}")
+    depth = "auto" if depth == "measured" else depth
+    streams = "auto" if streams == "measured" else streams
     if depth != "auto" and streams != "auto":
         return int(depth), int(streams)
     plan = planned_pipe(op, workload, tile, dtype, hw,

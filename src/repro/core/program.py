@@ -44,7 +44,7 @@ import dataclasses
 import functools
 import threading
 import warnings
-from typing import Any, Callable, Dict, Optional, Tuple, Union
+from typing import Any, Callable, Dict, Mapping, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -66,12 +66,18 @@ class PipePolicy:
 
     Attributes:
       mode: "ff" (DAE pipeline), "baseline" (synchronous depth=1 strawman),
-        "ref" (pure-jnp oracle), or a kernel-specific extra mode.
-      depth: ring slots, int or "auto" (roofline-planned per call site).
-      streams: producer DMAs per word, int or "auto".
+        "ref" (pure-jnp oracle), "autotune" (pipelined like "ff" but the
+        (tile, depth, streams) configuration is *measured* per call site by
+        :mod:`repro.core.autotune` and served from the persistent plan
+        cache), or a kernel-specific extra mode.
+      depth: ring slots — int, "auto" (roofline-planned per call site), or
+        "measured" (empirically tuned at the kernel's default tile).
+      streams: producer DMAs per word — int, "auto", or "measured".
       interpret: run the Pallas kernel in interpret mode (CPU container).
-      hw: hardware model the planner sizes against (TPU_V5E / ARRIA_CX).
-      stream_options: candidate stream counts the planner may pick from.
+      hw: hardware model the planner sizes against (TPU_V5E / ARRIA_CX);
+        also part of the tuned-plan cache key.
+      stream_options: candidate stream counts the planner/tuner may pick
+        from.
     """
 
     mode: str = "ff"
@@ -86,9 +92,9 @@ class PipePolicy:
             raise TypeError(f"mode must be a str, got {self.mode!r}")
         for label, val in (("depth", self.depth), ("streams", self.streams)):
             if isinstance(val, str):
-                if val != "auto":
-                    raise ValueError(
-                        f"{label} must be an int or 'auto', got {val!r}")
+                if val not in ("auto", "measured"):
+                    raise ValueError(f"{label} must be an int, 'auto', or "
+                                     f"'measured', got {val!r}")
             elif int(val) < 1:
                 raise ValueError(f"{label} must be >= 1, got {val!r}")
 
@@ -177,7 +183,8 @@ def resolve_call_policy(op: str, call_policy: Optional[PipePolicy] = None,
 
 
 def make_entrypoint(op: str, apply_fn: Callable[..., Any],
-                    modes: Tuple[str, ...] = ("ff", "baseline", "ref"),
+                    modes: Tuple[str, ...] = ("ff", "baseline", "ref",
+                                              "autotune"),
                     ) -> Callable[..., Any]:
     """Generate the public op wrapper from a policy-driven apply function.
 
@@ -370,7 +377,8 @@ class StreamProgram:
 # ---------------------------------------------------------------------------
 
 
-def compile_program(program: StreamProgram, *, interpret: bool = True):
+def compile_program(program: StreamProgram, *, interpret: bool = True,
+                    pipe_overrides: Optional[Mapping[str, Pipe]] = None):
     """Lower a :class:`StreamProgram` into one ``pallas_call``.
 
     Returns a callable taking the program's operands in ``inputs`` order.
@@ -384,11 +392,35 @@ def compile_program(program: StreamProgram, *, interpret: bool = True):
 
     ``depth == 1`` pipes degenerate to the synchronous copy-then-compute
     baseline, so mode="baseline" reuses this exact path.
+
+    ``pipe_overrides`` re-sizes named Stream edges at compile time: each
+    entry replaces that stream's :class:`Pipe` spec with one of a
+    different ``depth``/``streams`` without re-declaring the program —
+    useful for sweeping ring sizes over a hand-built program (the
+    built-in kernels instead rebuild through ``build_program(depth=,
+    streams=)``). The word geometry is fixed by the declaration's
+    slicers, so an override must keep ``tile`` and ``dtype`` unchanged —
+    a different *tile* candidate is a different program, built through
+    the kernel's ``build_program(...)`` / the registry's
+    ``program(tile=...)`` hook.
     """
     scalar_ins = [i for i in program.inputs if isinstance(i, ScalarIn)]
     tensor_ins = [i for i in program.inputs if not isinstance(i, ScalarIn)]
+    specs: Dict[str, Pipe] = {s.name: s.spec for s in program.streams}
+    for name, pipe in (pipe_overrides or {}).items():
+        if name not in specs:
+            raise KeyError(f"{program.name}: pipe override for unknown "
+                           f"stream {name!r}; streams: {sorted(specs)}")
+        old = specs[name]
+        if tuple(pipe.tile) != tuple(old.tile) or \
+                jnp.dtype(pipe.dtype) != jnp.dtype(old.dtype):
+            raise ValueError(
+                f"{program.name}: pipe override for {name!r} must keep "
+                f"tile/dtype ({old.tile}, {jnp.dtype(old.dtype).name}); "
+                f"rebuild the program for a different tile")
+        specs[name] = pipe
     rings: Dict[str, RingPipe] = {
-        s.name: (GatherRingPipe if s.gather else RingPipe)(s.spec)
+        s.name: (GatherRingPipe if s.gather else RingPipe)(specs[s.name])
         for s in program.streams
     }
 

@@ -41,7 +41,9 @@ The StreamProgram/registry contract — what a *new* kernel must provide
 2. **Expose a policy-driven op and register it**
    (:mod:`repro.kernels.registry`). In ops.py, implement
    ``_apply(*arrays, policy: PipePolicy, **statics)`` (ref-mode dispatch,
-   padding, planner resolution via ``policy.resolve``), wrap it with
+   padding, plan resolution via :func:`repro.core.autotune.resolve_call`,
+   which covers both the analytic planner and the measured tuner), wrap
+   it with
    :func:`repro.core.program.make_entrypoint` (which adds the ``policy=``
    argument, the session ``repro.policy`` context, and the deprecated
    keyword shims), and call
@@ -55,11 +57,17 @@ The StreamProgram/registry contract — what a *new* kernel must provide
    kernel is its subpackage plus the one ``register_kernel`` call, then
    add the ops module path to ``registry._BUILTIN``.
 
-3. **Support planner auto-sizing.** ``_apply`` must resolve the policy's
-   ``depth="auto"`` / ``streams="auto"`` through
-   :meth:`repro.core.program.PipePolicy.resolve` with the op's Workload —
-   the roofline model then picks (depth, streams) per call-site shape
-   against the policy's hardware model, cached on (op, shape, dtype, hw).
+3. **Support planner auto-sizing and measured autotuning.** ``_apply``
+   must resolve the policy through
+   :func:`repro.core.autotune.resolve_call` with the op's Workload: the
+   roofline model picks (depth, streams) for ``"auto"`` per call-site
+   shape against the policy's hardware model (cached on (op, shape,
+   dtype, hw)), and ``mode="autotune"`` / ``"measured"`` sizing searches
+   the declared ``tile_options`` x depth x streams space empirically via
+   a call-site ``runner`` closure, persisting tuned plans to the on-disk
+   plan cache. Kernels with tunable tiles declare ``tile_options`` in
+   their registry entry and accept the corresponding kwargs in ``_apply``
+   and ``program(tile=...)``.
 """
 
 from repro.core.emitter import cdiv, pad_to

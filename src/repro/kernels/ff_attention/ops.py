@@ -7,6 +7,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import autotune
 from repro.core.emitter import cdiv, pad_to
 from repro.core.pipeline_model import Workload
 from repro.core.program import PipePolicy, make_entrypoint
@@ -50,33 +51,62 @@ def attention_workload(bh: int, s: int, d: int, *, causal: bool = True,
     return w, (block_kv, d)
 
 
+# tile candidates for mode="autotune": both KV ring word sizes and the
+# q-block revisit factor move the modeled (and measured) word schedule
+_TILE_OPTIONS = (
+    {"block_q": 64, "block_kv": 64},
+    {"block_q": 64, "block_kv": 128},
+    {"block_q": 128, "block_kv": 256},
+    {"block_q": 256, "block_kv": 128},
+)
+
+
 def _apply(q, k, v, *, kv_groups: int = 1, causal: bool = True,
            block_q: int = 128, block_kv: int = 128,
            policy: PipePolicy):
     """Flash attention over [BH, S, D] tensors (wrapper pads S to blocks).
 
-    policy.mode="ff"|"baseline"(depth=1)|"ref"; the policy's depth/streams
-    "auto" are planner-sized per call-site shape against policy.hw.
+    policy.mode="ff"|"autotune"(measured plan)|"baseline"(depth=1)|"ref";
+    the policy's depth/streams "auto" are planner-sized per call-site shape
+    against policy.hw, "measured" resolves through the autotuner's plan
+    cache.
     """
     if policy.mode == "ref":
         return attention_ref(q, k, v, kv_groups=kv_groups, causal=causal)
     bh, s, d = q.shape
     skv = k.shape[1]
+
+    def _run(bq, bkv, depth, streams):
+        qp = pad_to(q, bq, 1)
+        kp = pad_to(k, bkv, 1)
+        vp = pad_to(v, bkv, 1)
+        if kp.shape[1] > skv and not causal:
+            raise ValueError(
+                "non-causal attention requires Skv to be a block multiple "
+                "(padded keys would receive softmax mass)")
+        return flash_attention_ff(
+            qp, kp, vp, kv_groups=kv_groups, block_q=bq, block_kv=bkv,
+            depth=depth, streams=streams, causal=causal,
+            interpret=policy.interpret)
+
     w, tile = attention_workload(bh, s, d, causal=causal, block_q=block_q,
                                  block_kv=block_kv, dtype=q.dtype)
-    depth, streams = policy.resolve("ff_attention", workload=w, tile=tile,
-                                    dtype=q.dtype)
-    qp = pad_to(q, block_q, 1)
-    kp = pad_to(k, block_kv, 1)
-    vp = pad_to(v, block_kv, 1)
-    if kp.shape[1] > skv and not causal:
-        raise ValueError(
-            "non-causal attention requires Skv to be a block multiple "
-            "(padded keys would receive softmax mass)")
-    out = flash_attention_ff(
-        qp, kp, vp, kv_groups=kv_groups, block_q=block_q, block_kv=block_kv,
-        depth=depth, streams=streams, causal=causal,
-        interpret=policy.interpret)
+    choice = autotune.resolve_call(
+        "ff_attention", policy, workload=w, tile=tile, dtype=q.dtype,
+        workload_fn=lambda tk: attention_workload(
+            bh, s, d, causal=causal, block_q=tk.get("block_q", block_q),
+            block_kv=tk.get("block_kv", block_kv), dtype=q.dtype),
+        runner=None if autotune.has_tracers(q, k, v) else
+        lambda tk, dep, st: lambda: _run(
+            tk.get("block_q", block_q), tk.get("block_kv", block_kv),
+            dep, st),
+        tile_options=_TILE_OPTIONS,
+        # the workload is built from the q shape only; skv/kv_groups
+        # change the measured kernel
+        extra_key=f"skv={skv}|groups={kv_groups}")
+    out = _run(choice.tile_kwargs.get("block_q", block_q),
+               choice.tile_kwargs.get("block_kv", block_kv),
+               choice.depth, choice.streams)
     return out[:, :s, :]
 
 
@@ -91,11 +121,13 @@ def _make_inputs(key):
                          "block_kv": 64}
 
 
-def _smoke_program(*, depth: int = 2, streams: int = 1):
+def _smoke_program(*, depth: int = 2, streams: int = 1, tile=None):
     # the smoke shape point of _make_inputs (already block-aligned)
-    return build_program(2, 192, 192, 64, kv_groups=2, block_q=64,
-                         block_kv=64, causal=True, dtype=jnp.float32,
-                         depth=depth, streams=streams)
+    tile = tile or {}
+    return build_program(2, 192, 192, 64, kv_groups=2,
+                         block_q=tile.get("block_q", 64),
+                         block_kv=tile.get("block_kv", 64), causal=True,
+                         dtype=jnp.float32, depth=depth, streams=streams)
 
 
 register_kernel(
@@ -108,6 +140,7 @@ register_kernel(
     program=_smoke_program,
     make_inputs=_make_inputs,
     bench_kwargs={"bh": 32, "s": 8192, "d": 128, "dtype": jnp.bfloat16},
+    tile_options=_TILE_OPTIONS,
     regular=True,
     tol=2e-4,
     doc="flash attention prefill, GQA, KV ring pipes",

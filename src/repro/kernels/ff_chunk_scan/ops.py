@@ -7,6 +7,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import autotune
 from repro.core.emitter import cdiv, pad_to
 from repro.core.pipeline_model import Workload
 from repro.core.program import PipePolicy, make_entrypoint
@@ -46,12 +47,22 @@ def chunk_scan_workload(bh: int, s: int, n: int, p: int, *, chunk: int = 64,
     return w, (chunk, n)
 
 
+# chunk-length candidates for mode="autotune": the pipe word is a whole
+# chunk, so this trades word size against the number of carried-state steps
+_TILE_OPTIONS = (
+    {"chunk": 32},
+    {"chunk": 128},
+    {"chunk": 256},
+)
+
+
 def _apply(q, k, v, log_w, u=None, *, chunk: int = 64, subtile: int = 16,
            inclusive: bool = True, policy: PipePolicy):
     """Gated linear-attention scan over [BH, S, *] streams.
 
-    policy.mode="ff"|"baseline"(depth=1)|"ref"(naive scan)|"xla"|"xla_tiled"
-    (chunked, HLO-visible; _tiled = tile-pair factorized intra-chunk).
+    policy.mode="ff"|"autotune"(measured plan)|"baseline"(depth=1)|
+    "ref"(naive scan)|"xla"|"xla_tiled" (chunked, HLO-visible; _tiled =
+    tile-pair factorized intra-chunk).
     Pads S up to a chunk multiple (decay 1, zero k/v contribute nothing).
     """
     if policy.mode == "ref":
@@ -65,20 +76,37 @@ def _apply(q, k, v, log_w, u=None, *, chunk: int = 64, subtile: int = 16,
                               tiled=policy.mode == "xla_tiled")[:, :s]
     bh, s, n = q.shape
     p = v.shape[2]
+
+    def _run(ck, depth, streams):
+        st = min(subtile, ck)
+        if ck % st != 0:
+            raise ValueError(f"chunk={ck} not a multiple of subtile={st}")
+        qp, kp, vp = (pad_to(x, ck, 1) for x in (q, k, v))
+        lwp = pad_to(log_w, ck, 1)
+        return chunk_scan_ff(qp, kp, vp, lwp, u, chunk=ck, subtile=st,
+                             inclusive=inclusive, depth=depth,
+                             streams=streams, interpret=policy.interpret)
+
     w, tile = chunk_scan_workload(bh, s, n, p, chunk=chunk, dtype=q.dtype)
-    depth, streams = policy.resolve("ff_chunk_scan", workload=w, tile=tile,
-                                    dtype=q.dtype)
-    qp, kp, vp = (pad_to(x, chunk, 1) for x in (q, k, v))
-    lwp = pad_to(log_w, chunk, 1)
-    out = chunk_scan_ff(qp, kp, vp, lwp, u, chunk=chunk, subtile=subtile,
-                        inclusive=inclusive, depth=depth, streams=streams,
-                        interpret=policy.interpret)
+    arrays = (q, k, v, log_w) + (() if u is None else (u,))
+    choice = autotune.resolve_call(
+        "ff_chunk_scan", policy, workload=w, tile=tile, dtype=q.dtype,
+        workload_fn=lambda tk: chunk_scan_workload(
+            bh, s, n, p, chunk=tk.get("chunk", chunk), dtype=q.dtype),
+        runner=None if autotune.has_tracers(*arrays) else
+        lambda tk, dep, st: lambda: _run(tk.get("chunk", chunk), dep, st),
+        tile_options=_TILE_OPTIONS,
+        # statics outside the Workload that change the measured kernel
+        extra_key=f"subtile={subtile}|inclusive={int(inclusive)}"
+                  f"|u={int(u is not None)}")
+    out = _run(choice.tile_kwargs.get("chunk", chunk), choice.depth,
+               choice.streams)
     return out[:, :s]
 
 
 chunk_scan = make_entrypoint(
     "ff_chunk_scan", _apply,
-    modes=("ff", "baseline", "ref", "xla", "xla_tiled"))
+    modes=("ff", "baseline", "ref", "autotune", "xla", "xla_tiled"))
 
 
 def _make_inputs(key):
@@ -92,9 +120,11 @@ def _make_inputs(key):
     return (q, k, v, lw), {"chunk": 64, "subtile": 16, "inclusive": True}
 
 
-def _smoke_program(*, depth: int = 2, streams: int = 1):
+def _smoke_program(*, depth: int = 2, streams: int = 1, tile=None):
     # the smoke shape point of _make_inputs
-    return build_program(2, 128, 16, 32, chunk=64, subtile=16,
+    chunk = (tile or {}).get("chunk", 64)
+    return build_program(2, 128, 16, 32, chunk=chunk,
+                         subtile=min(16, chunk),
                          inclusive=True, has_u=False, dtype=jnp.float32,
                          depth=depth, streams=streams)
 
@@ -110,6 +140,7 @@ register_kernel(
     make_inputs=_make_inputs,
     bench_kwargs={"bh": 64, "s": 4096, "n": 64, "p": 64,
                   "dtype": jnp.bfloat16},
+    tile_options=_TILE_OPTIONS,
     regular=True,
     tol=1e-3,
     doc="gated linear-attention scan (Mamba2 / RWKV6)",

@@ -7,6 +7,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import autotune
 from repro.core.emitter import cdiv
 from repro.core.pipeline_model import Workload
 from repro.core.program import PipePolicy, make_entrypoint
@@ -44,13 +45,23 @@ def decode_attention_workload(b: int, h: int, kvh: int, s: int, d: int,
     return w, (block_kv, d)
 
 
+# KV-cache tile candidates for mode="autotune" (the cache stream's word
+# size; candidates not dividing the call site's S are skipped at measure)
+_TILE_OPTIONS = (
+    {"block_kv": 64},
+    {"block_kv": 256},
+    {"block_kv": 512},
+)
+
+
 def _apply(q, k, v, lengths=None, *, kv_heads: int = None,
            block_kv: int = 128, policy: PipePolicy):
     """Decode attention for one new token.
 
     q: [B, H, D]; k, v: [B, KVH, S, D]; lengths: [B] int32 (defaults to S).
     Returns [B, H, D]. The wrapper regroups q heads per KV head and pads the
-    group to the 8-sublane granule. policy.mode="ff"|"baseline"|"ref".
+    group to the 8-sublane granule.
+    policy.mode="ff"|"autotune"(measured plan)|"baseline"|"ref".
     """
     del kv_heads    # accepted for legacy signature compatibility
     b, h, d = q.shape
@@ -62,16 +73,31 @@ def _apply(q, k, v, lengths=None, *, kv_heads: int = None,
     if policy.mode == "ref":
         qg = q.reshape(b, kvh, group, d)
         return decode_attention_ref(qg, k, v, lengths).reshape(b, h, d)
-    w, tile = decode_attention_workload(b, h, kvh, s, d, block_kv=block_kv,
-                                        dtype=k.dtype)
-    depth, streams = policy.resolve("ff_decode_attention", workload=w,
-                                    tile=tile, dtype=k.dtype)
     g_pad = -(-group // 8) * 8
     qg = q.reshape(b, kvh, group, d)
     qg = jnp.pad(qg, ((0, 0), (0, 0), (0, g_pad - group), (0, 0)))
-    out = decode_attention_ff(
-        qg, k, v, lengths.astype(jnp.int32), block_kv=block_kv, depth=depth,
-        streams=streams, interpret=policy.interpret)
+    lens = lengths.astype(jnp.int32)
+
+    def _run(bkv, depth, streams):
+        if s % bkv != 0:
+            raise ValueError(f"block_kv={bkv} does not divide S={s}")
+        return decode_attention_ff(
+            qg, k, v, lens, block_kv=bkv, depth=depth, streams=streams,
+            interpret=policy.interpret)
+
+    w, tile = decode_attention_workload(b, h, kvh, s, d, block_kv=block_kv,
+                                        dtype=k.dtype)
+    choice = autotune.resolve_call(
+        "ff_decode_attention", policy, workload=w, tile=tile, dtype=k.dtype,
+        workload_fn=lambda tk: decode_attention_workload(
+            b, h, kvh, s, d, block_kv=tk.get("block_kv", block_kv),
+            dtype=k.dtype),
+        runner=None if autotune.has_tracers(q, k, v, lens) else
+        lambda tk, dep, st: lambda: _run(
+            tk.get("block_kv", block_kv), dep, st),
+        tile_options=_TILE_OPTIONS)
+    out = _run(choice.tile_kwargs.get("block_kv", block_kv), choice.depth,
+               choice.streams)
     return out[:, :, :group, :].reshape(b, h, d)
 
 
@@ -88,10 +114,11 @@ def _make_inputs(key):
     return (q, k, v, lens), {"block_kv": 64}
 
 
-def _smoke_program(*, depth: int = 2, streams: int = 1):
+def _smoke_program(*, depth: int = 2, streams: int = 1, tile=None):
     # the smoke shape point of _make_inputs (group 2 -> g_pad 8)
-    return build_program(2, 2, 8, 128, 64, block_kv=64, dtype=jnp.float32,
-                         depth=depth, streams=streams)
+    return build_program(2, 2, 8, 128, 64,
+                         block_kv=(tile or {}).get("block_kv", 64),
+                         dtype=jnp.float32, depth=depth, streams=streams)
 
 
 register_kernel(
@@ -105,6 +132,7 @@ register_kernel(
     make_inputs=_make_inputs,
     bench_kwargs={"b": 8, "h": 64, "kvh": 8, "s": 32768, "d": 128,
                   "dtype": jnp.bfloat16},
+    tile_options=_TILE_OPTIONS,
     regular=True,
     tol=2e-4,
     doc="flash-decode vs. long KV caches",

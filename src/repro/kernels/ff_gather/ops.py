@@ -7,6 +7,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import autotune
 from repro.core.emitter import cdiv
 from repro.core.pipe import Pipe, vmem_budget_ok
 from repro.core.pipeline_model import Workload
@@ -45,36 +46,54 @@ def gather_workload(n: int, cols: int, *,
 
 
 def _apply(table, idx, *, policy: PipePolicy):
-    """rows = table[idx]; policy.mode="ff"|"baseline"(depth=1)|"ref".
+    """rows = table[idx];
+    policy.mode="ff"|"autotune"(measured plan)|"baseline"(depth=1)|"ref".
 
     The planned (or explicit) ``streams`` value widens the per-word row
     bundle to ``8 * streams`` concurrent row DMAs — the irregular-stream
     analogue of the paper's multi-producer design — so it is no longer
-    silently dropped.
+    silently dropped. There is no separate tile knob: the row bundle *is*
+    the tile, so the autotuner searches (depth, streams) only.
     """
     if policy.mode == "ref":
         return gather_ref(table, idx)
     n = idx.shape[0]
     cols = table.shape[1]
+
+    def _run(depth, streams):
+        # The planner models 8-row words ("streams" = concurrent 8-row
+        # producers); emission merges them into one 8*streams-row bundle.
+        # Clamp to the bundles the index stream can actually fill (a wider
+        # word than n rows is pure padding traffic), then re-check the
+        # *emitted* ring against the VMEM budget and shed streams if the
+        # widened word would blow it.
+        streams = max(1, min(streams, n // _ROWS))
+        while streams > 1 and not vmem_budget_ok(
+                [Pipe(tile=(_ROWS * streams, cols), dtype=table.dtype,
+                      depth=depth)]):
+            streams //= 2
+        rows_per_word = _ROWS * streams
+        pad = (-n) % rows_per_word
+        idx_p = jnp.pad(idx.astype(jnp.int32), (0, pad))
+        return gather_ff(table, idx_p, depth=depth, streams=streams,
+                         interpret=policy.interpret)
+
     w, tile = gather_workload(n, cols, dtype=table.dtype)
-    depth, streams = policy.resolve("ff_gather", workload=w, tile=tile,
-                                    dtype=table.dtype)
-    # The planner models 8-row words ("streams" = concurrent 8-row
-    # producers); emission merges them into one 8*streams-row bundle. Clamp
-    # to the bundles the index stream can actually fill (a wider word than
-    # n rows is pure padding traffic), then re-check the *emitted* ring
-    # against the VMEM budget and shed streams if the widened word would
-    # blow it.
-    streams = max(1, min(streams, n // _ROWS))
-    while streams > 1 and not vmem_budget_ok(
-            [Pipe(tile=(_ROWS * streams, cols), dtype=table.dtype,
-                  depth=depth)]):
-        streams //= 2
-    rows_per_word = _ROWS * streams
-    pad = (-n) % rows_per_word
-    idx_p = jnp.pad(idx.astype(jnp.int32), (0, pad))
-    out = gather_ff(table, idx_p, depth=depth, streams=streams,
-                    interpret=policy.interpret)
+    # Clamp the tuner's search space to the streams the index stream can
+    # fill, so candidates are distinct *effective* configs and the
+    # persisted plan names the streams value that actually executes
+    # (_run's clamp then only sheds on the VMEM re-check).
+    max_streams = max(1, n // _ROWS)
+    so = tuple(sorted({min(int(s), max_streams)
+                       for s in policy.stream_options}))
+    pol = policy if so == tuple(policy.stream_options) \
+        else policy.replace(stream_options=so)
+    choice = autotune.resolve_call(
+        "ff_gather", pol, workload=w, tile=tile, dtype=table.dtype,
+        workload_fn=lambda tk: gather_workload(n, cols, dtype=table.dtype),
+        runner=None if autotune.has_tracers(table, idx) else
+        lambda tk, dep, st: lambda: _run(dep, st))
+    out = _run(choice.depth, choice.streams)
     return out[:n]
 
 
@@ -87,8 +106,10 @@ def _make_inputs(key):
     return (tab, idx), {}
 
 
-def _smoke_program(*, depth: int = 4, streams: int = 1):
-    # the smoke shape point of _make_inputs (52 rows padded to the bundle)
+def _smoke_program(*, depth: int = 4, streams: int = 1, tile=None):
+    # the smoke shape point of _make_inputs (52 rows padded to the bundle);
+    # no tile knob: the 8*streams row bundle is the tile
+    del tile
     n = -(-52 // (_ROWS * streams)) * (_ROWS * streams)
     return build_program(n, 128, dtype=jnp.float32, depth=depth,
                          streams=streams)

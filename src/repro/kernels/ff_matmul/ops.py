@@ -7,6 +7,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import autotune
 from repro.core.emitter import cdiv, pad_to
 from repro.core.pipe import Pipe
 from repro.core.pipeline_model import Workload
@@ -54,6 +55,16 @@ def matmul_workload(m: int, n: int, k: int,
     return w, (bm, bk)
 
 
+# tile candidates the measured autotuner may search (mode="autotune");
+# the default (128, 128, 128) block is always candidate #0.
+_TILE_OPTIONS = (
+    {"block": (256, 128, 128)},
+    {"block": (128, 128, 256)},
+    {"block": (128, 256, 128)},
+    {"block": (256, 256, 128)},
+)
+
+
 def _apply(
     a: jnp.ndarray,
     b: jnp.ndarray,
@@ -66,6 +77,8 @@ def _apply(
 
     policy.mode="ff": DAE pipeline with policy-sized pipes (depth/streams
       "auto" size via the roofline planner against policy.hw).
+    policy.mode="autotune": like "ff", but (block, depth, streams) come
+      from the measured autotuner's plan cache for this call-site shape.
     policy.mode="baseline": synchronous copy-then-compute (depth=1) — the
       paper's single work-item strawman.
     policy.mode="ref": pure-jnp oracle (XLA-visible; used in model graphs
@@ -75,14 +88,26 @@ def _apply(
         return matmul_ref(a, b, out_dtype)
     m, k = a.shape
     _, n = b.shape
+
+    def _run(x, y, blk, depth, streams):
+        bm, bn, bk = blk
+        xp = pad_to(pad_to(x, bm, 0), bk, 1)
+        yp = pad_to(pad_to(y, bk, 0), bn, 1)
+        return matmul_ff(xp, yp, block=blk, depth=depth, streams=streams,
+                         out_dtype=out_dtype, interpret=policy.interpret)
+
     w, tile = matmul_workload(m, n, k, block, a.dtype)
-    depth, streams = policy.resolve("ff_matmul", workload=w, tile=tile,
-                                    dtype=a.dtype)
-    bm, bn, bk = block
-    ap = pad_to(pad_to(a, bm, 0), bk, 1)
-    bp = pad_to(pad_to(b, bk, 0), bn, 1)
-    out = matmul_ff(ap, bp, block=block, depth=depth, streams=streams,
-                    out_dtype=out_dtype, interpret=policy.interpret)
+    choice = autotune.resolve_call(
+        "ff_matmul", policy, workload=w, tile=tile, dtype=a.dtype,
+        workload_fn=lambda tk: matmul_workload(
+            m, n, k, tk.get("block", block), a.dtype),
+        runner=None if autotune.has_tracers(a, b) else
+        lambda tk, d, s: lambda: _run(a, b, tk.get("block", block), d, s),
+        tile_options=_TILE_OPTIONS,
+        extra_key="" if out_dtype is None else
+        f"out={jnp.dtype(out_dtype).name}")
+    out = _run(a, b, choice.tile_kwargs.get("block", block), choice.depth,
+               choice.streams)
     return out[:m, :n]
 
 
@@ -95,9 +120,10 @@ def _make_inputs(key):
     return (a, b), {"block": (128, 128, 128)}
 
 
-def _smoke_program(*, depth: int = 2, streams: int = 1):
+def _smoke_program(*, depth: int = 2, streams: int = 1, tile=None):
     # the smoke shape point of _make_inputs, padded to the block grid
-    return build_program(256, 256, 256, block=(128, 128, 128),
+    block = (tile or {}).get("block", (128, 128, 128))
+    return build_program(256, 256, 256, block=block,
                          dtype=jnp.float32, depth=depth, streams=streams)
 
 
@@ -111,6 +137,7 @@ register_kernel(
     program=_smoke_program,
     make_inputs=_make_inputs,
     bench_kwargs={"m": 4096, "n": 4096, "k": 4096, "dtype": jnp.bfloat16},
+    tile_options=_TILE_OPTIONS,
     regular=True,
     tol=5e-4,
     doc="DAE blocked matmul (regular streams)",

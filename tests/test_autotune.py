@@ -1,0 +1,340 @@
+"""Measured autotuner + planner-satellite tests.
+
+Covers: PlanError (no bare asserts), skipped-candidate recording in
+Plan.rationale, model monotonicity in depth, the planner's in-memory plan
+cache, the autotuner's persistent on-disk plan cache (round-trip, fresh-
+process reload without re-measuring, corrupt-file fallback), the analytic
+fallback for unmeasurable call sites, and mode="autotune" end to end on a
+real registry kernel.
+"""
+
+import dataclasses
+import json
+import os
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    TPU_V5E,
+    Pipe,
+    PipePolicy,
+    PlanError,
+    Workload,
+    autotune,
+    estimate_feedforward,
+    plan_cache_clear,
+    plan_cache_info,
+    plan_pipe,
+    planned_pipe,
+)
+from repro.core.autotune import (
+    PLAN_FORMAT_VERSION,
+    TunedChoice,
+    resolve_call,
+    tuned_cache_clear,
+    tuning_config,
+)
+
+KEY = jax.random.key(3)
+
+W_REGULAR = Workload(n_words=512, word_bytes=128 * 128 * 4.0,
+                     flops_per_word=2.0 * 128 * 128 * 128, regular=True)
+W_IRREGULAR = Workload(n_words=512, word_bytes=8 * 128 * 4.0,
+                       flops_per_word=0.0, regular=False)
+TILE = (128, 128)
+
+
+@pytest.fixture
+def plan_cache(tmp_path, monkeypatch):
+    """Point the persistent plan cache at a tmpdir and start cold."""
+    path = os.path.join(tmp_path, "plans.json")
+    monkeypatch.setenv("REPRO_PLAN_CACHE", path)
+    tuned_cache_clear()
+    yield path
+    tuned_cache_clear()
+
+
+# ---------------------------------------------------------------------------
+# Planner satellites: PlanError + skipped candidates
+# ---------------------------------------------------------------------------
+
+def test_plan_error_replaces_assert():
+    with pytest.raises(PlanError) as ei:
+        plan_pipe(W_REGULAR, TILE, jnp.float32, vmem_budget_bytes=64)
+    err = ei.value
+    assert isinstance(err, RuntimeError)      # catchable, not an assert
+    assert err.workload == W_REGULAR
+    assert err.vmem_budget_bytes == 64
+    assert err.rejected and all("vmem" in r for r in err.rejected)
+    assert "VMEM" in str(err)
+
+
+def test_plan_records_skipped_candidates():
+    plan = plan_pipe(W_REGULAR, TILE, jnp.float32,
+                     stream_options=(1, 2, 3, 4))
+    # streams=3 does not divide tile[0]=128: must be recorded, not silent
+    assert any("streams=3" in s for s in plan.skipped)
+    assert "skipped" in plan.rationale and "streams=3" in plan.rationale
+
+
+def test_plan_without_skips_has_clean_rationale():
+    plan = plan_pipe(W_REGULAR, TILE, jnp.float32, stream_options=(1, 2))
+    assert plan.skipped == ()
+    assert "skipped" not in plan.rationale
+
+
+# ---------------------------------------------------------------------------
+# Model monotonicity: deeper pipes never predict a slower steady state
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("w", [W_REGULAR, W_IRREGULAR],
+                         ids=["regular", "irregular"])
+def test_deeper_pipes_never_slow_steady_state(w):
+    """The paper's 'depth does not significantly affect performance':
+    past depth=1, the modeled steady-state word time is non-increasing in
+    depth (only the one-off fill grows)."""
+    word_times = []
+    for depth in range(2, 12):
+        pipe = Pipe(tile=TILE, dtype=jnp.float32, depth=depth, streams=2)
+        est = estimate_feedforward(w, TPU_V5E, pipe)
+        word_times.append(max(est.t_mem_word_s, est.t_comp_word_s))
+    for shallow, deep in zip(word_times, word_times[1:]):
+        assert deep <= shallow * (1 + 1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Planner plan cache: hits on repeated call sites
+# ---------------------------------------------------------------------------
+
+def test_plan_cache_hits_on_repeat_call_sites():
+    plan_cache_clear()
+    p1 = planned_pipe("ff_test_cache", W_REGULAR, TILE, jnp.float32)
+    misses = plan_cache_info().misses
+    p2 = planned_pipe("ff_test_cache", W_REGULAR, TILE, jnp.float32)
+    info = plan_cache_info()
+    assert p1 == p2
+    assert info.hits >= 1 and info.misses == misses
+
+
+# ---------------------------------------------------------------------------
+# The measured tuner against a synthetic runner (no Pallas, no flakiness)
+# ---------------------------------------------------------------------------
+
+def _synthetic_runner(best=(3, 2)):
+    """A runner whose 'kernel' is fastest at (depth, streams) == best."""
+    def runner(tile_kwargs, depth, streams):
+        cost = abs(depth - best[0]) + abs(streams - best[1])
+        return lambda: jnp.float32(cost)
+    return runner
+
+
+def _fake_measure(monkeypatch, best=(3, 2)):
+    """Deterministic stand-in for wall-clock timing."""
+    def measure(fn, *, warmup=1, iters=3):
+        return 1e-3 * (1.0 + float(fn()))
+    monkeypatch.setattr(autotune, "measure", measure)
+
+
+def _resolve(policy=None, runner="default", **kw):
+    policy = policy or PipePolicy(mode="autotune")
+    if runner == "default":
+        runner = _synthetic_runner()
+    return resolve_call(
+        "ff_synth", policy, workload=W_REGULAR, tile=TILE,
+        dtype=jnp.float32,
+        workload_fn=lambda tk: (W_REGULAR, TILE), runner=runner, **kw)
+
+
+def test_tuned_plan_is_measured_and_persisted(plan_cache, monkeypatch):
+    _fake_measure(monkeypatch)
+    choice = _resolve()
+    assert choice.source == "measured"
+    assert (choice.depth, choice.streams) == (3, 2)   # argmin of measurement
+    # persisted: the on-disk record equals the returned choice
+    plans = json.load(open(plan_cache))
+    assert plans["format"] == PLAN_FORMAT_VERSION
+    (rec,) = plans["plans"].values()
+    assert (rec["depth"], rec["streams"]) == (3, 2)
+    assert rec["measured_s"] is not None
+    assert rec["analytic"]["measured_s"] is not None
+    # tuned is argmin over a set containing the analytic config
+    assert rec["measured_s"] <= rec["analytic"]["measured_s"]
+
+
+def test_disk_cache_roundtrip_without_remeasuring(plan_cache, monkeypatch):
+    _fake_measure(monkeypatch)
+    tuned = _resolve()
+    # fresh process: in-memory cache gone, disk cache present
+    tuned_cache_clear()
+
+    def exploding_runner(tile_kwargs, depth, streams):
+        raise AssertionError("must not re-measure on a cache hit")
+
+    monkeypatch.setattr(autotune, "measure", exploding_runner)
+    again = _resolve(runner=exploding_runner)
+    assert again.source == "disk"
+    assert (again.depth, again.streams) == (tuned.depth, tuned.streams)
+    # and the next lookup is served from memory
+    assert _resolve(runner=exploding_runner).source == "memory"
+
+
+def test_corrupt_cache_falls_back_to_analytic_with_warning(plan_cache):
+    with open(plan_cache, "w") as f:
+        f.write("{not json")
+    with pytest.warns(RuntimeWarning, match="corrupt plan cache"):
+        choice = _resolve(runner=None)    # unmeasurable call site
+    assert choice.source == "analytic-fallback"
+    # the analytic plan for this workload is what plan_pipe picks
+    plan = plan_pipe(W_REGULAR, TILE, jnp.float32)
+    assert (choice.depth, choice.streams) == (plan.pipe.depth,
+                                              plan.pipe.streams)
+
+
+def test_unmeasurable_call_site_warns_and_uses_analytic(plan_cache):
+    autotune._warned_fallback_ops.discard("ff_synth")
+    with pytest.warns(RuntimeWarning, match="not measurable"):
+        choice = _resolve(runner=None)
+    assert choice.source == "analytic-fallback"
+    assert not os.path.exists(plan_cache)     # nothing persisted
+
+
+def test_analytic_policies_bypass_the_tuner(plan_cache):
+    choice = _resolve(policy=PipePolicy())    # depth/streams "auto"
+    assert choice.source == "analytic"
+    assert not os.path.exists(plan_cache)
+
+
+def test_pinned_ints_survive_tuning(plan_cache, monkeypatch):
+    _fake_measure(monkeypatch)
+    choice = _resolve(policy=PipePolicy(mode="autotune", streams=1))
+    assert choice.streams == 1                # explicit int is pinned
+    assert choice.depth == 3                  # depth still measured
+
+
+def test_auto_fields_stay_planner_sized_under_measured(plan_cache,
+                                                       monkeypatch):
+    """depth="measured", streams="auto": only depth is searched — "auto"
+    keeps its documented planner-sized meaning and is pinned to the
+    analytic resolution, even when another streams value measures faster."""
+    def runner(tile_kwargs, depth, streams):
+        cost = abs(depth - 3) + abs(streams - 4)    # fastest at streams=4
+        return lambda: jnp.float32(cost)
+
+    _fake_measure(monkeypatch)
+    choice = _resolve(policy=PipePolicy(depth="measured", streams="auto"),
+                      runner=runner)
+    plan = plan_pipe(W_REGULAR, TILE, jnp.float32)
+    assert choice.source == "measured"
+    assert choice.streams == plan.pipe.streams    # planner's choice, pinned
+    assert choice.depth == 3                      # measured argmin
+
+
+def test_memory_cache_keyed_by_cache_path(tmp_path, monkeypatch):
+    """Redirecting the plan cache mid-process must not serve plans tuned
+    against the previously selected file from the in-memory front."""
+    _fake_measure(monkeypatch)
+    tuned_cache_clear()
+    try:
+        with tuning_config(cache_path=os.path.join(tmp_path, "a.json")):
+            assert _resolve().source == "measured"
+            assert _resolve().source == "memory"
+        with tuning_config(cache_path=os.path.join(tmp_path, "b.json")):
+            assert _resolve().source == "measured"    # not "memory"
+    finally:
+        tuned_cache_clear()
+
+
+def test_wants_measured_semantics():
+    assert autotune.wants_measured(PipePolicy(mode="autotune"))
+    assert autotune.wants_measured(PipePolicy(depth="measured"))
+    assert autotune.wants_measured(PipePolicy(streams="measured"))
+    assert not autotune.wants_measured(PipePolicy())
+    assert not autotune.wants_measured(
+        PipePolicy(mode="baseline", depth="measured"))
+
+
+def test_measured_policy_validates():
+    p = PipePolicy(depth="measured", streams="measured")
+    assert p.depth == "measured"
+    with pytest.raises(ValueError, match="measured"):
+        PipePolicy(depth="bogus")
+
+
+# ---------------------------------------------------------------------------
+# End to end on a real registry kernel (tiny shapes, interpret mode)
+# ---------------------------------------------------------------------------
+
+def test_autotune_mode_end_to_end(plan_cache):
+    """mode="autotune" on ff_gather: correct output, plan measured and
+    persisted, reload served from disk without re-measuring."""
+    from repro.kernels.registry import get_kernel, run_smoke
+
+    spec = get_kernel("ff_gather")
+    with tuning_config(warmup=1, iters=1, top_k=2, budget_s=30):
+        out, ref, err = run_smoke(spec, policy=PipePolicy(mode="autotune"))
+    assert err <= spec.tol
+    rec = autotune.last_record("ff_gather")
+    assert rec["source"] == "measured"
+    assert rec["measured_s"] <= rec["analytic"]["measured_s"]
+    assert os.path.exists(plan_cache)
+
+    # a "fresh process": reload from disk, measurement must not run
+    tuned_cache_clear()
+    with tuning_config(warmup=1, iters=1, top_k=2):
+        orig_measure = autotune.measure
+
+        def no_measure(*a, **k):
+            raise AssertionError("reloaded plan must not re-measure")
+
+        autotune.measure = no_measure
+        try:
+            out2, _, err2 = run_smoke(spec,
+                                      policy=PipePolicy(mode="autotune"))
+        finally:
+            autotune.measure = orig_measure
+    assert err2 <= spec.tol
+    assert autotune.last_record("ff_gather")["source"] == "disk"
+    np.testing.assert_array_equal(out, out2)
+
+
+def test_registry_declares_tile_options():
+    from repro.kernels.registry import all_kernels, get_kernel
+
+    matmul = get_kernel("ff_matmul")
+    assert matmul.tile_options, "matmul must declare tile candidates"
+    # the program builder accepts each declared tile candidate
+    for tk in matmul.tile_options:
+        prog = matmul.program(depth=2, streams=1, tile=tk)
+        assert prog.n_words >= 1
+    for spec in all_kernels():
+        prog = spec.program(depth=2, streams=1, tile=None)
+        assert prog.name == spec.name
+
+
+def test_compile_program_pipe_overrides():
+    """compile_program resizes pipes per stream without re-declaring, and
+    rejects overrides that would change the word geometry."""
+    from repro.core import compile_program
+    from repro.kernels.registry import get_kernel
+
+    spec = get_kernel("ff_matmul")
+    prog = spec.program(depth=2, streams=1)
+    a = jax.random.normal(KEY, (256, 256), jnp.float32)
+    b = jax.random.normal(jax.random.fold_in(KEY, 1), (256, 256),
+                          jnp.float32)
+    base = compile_program(prog)(a, b)
+    deep = compile_program(
+        prog, pipe_overrides={
+            "a": dataclasses.replace(prog.streams[0].spec, depth=4,
+                                     streams=2)})(a, b)
+    np.testing.assert_allclose(np.float32(base), np.float32(deep),
+                               atol=1e-5)
+    with pytest.raises(KeyError, match="unknown stream"):
+        compile_program(prog, pipe_overrides={"zzz": prog.streams[0].spec})
+    with pytest.raises(ValueError, match="tile"):
+        bad = Pipe(tile=(64, 64), dtype=jnp.float32, depth=2)
+        compile_program(prog, pipe_overrides={"a": bad})
