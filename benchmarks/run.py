@@ -17,7 +17,16 @@ streams) space is searched empirically, tuned plans are persisted to the
 plan cache (``~/.cache/repro/plans.json`` — CI restores it across runs, so
 a warm cache skips re-measuring), and ``BENCH_autotune.json`` records the
 measured tuned-vs-analytic comparison per kernel. ``--budget-s`` bounds
-the total tuning wall time. Composes with ``--smoke``."""
+the total tuning wall time. Composes with ``--smoke``.
+
+``--graph`` exercises every registered multi-kernel StreamGraph
+(``repro.core.graph``) three ways — fused (compile_graph's per-edge
+decision), staged (HBM handoffs forced), and unfused (separate repro.ops
+calls) — checks all three against the XLA oracle, and writes
+``BENCH_graph.json``: wall ms per lowering, per-edge fused/staged
+decisions with rationales, and the modeled HBM bytes saved + estimate
+``skipped`` lines (fusion rejections observable without rerunning).
+Composes with the other modes."""
 
 from __future__ import annotations
 
@@ -192,6 +201,123 @@ def autotune_bench(json_path: str = "BENCH_autotune.json",
     print("autotune ok")
 
 
+def _interleaved_ms(variants, warmup: int = 2, iters: int = 5):
+    """Median wall ms per variant, sampled round-robin (one timed call of
+    each variant per round). Interpret-mode wall times drift with machine
+    load at the 10%+ level over seconds; interleaving makes every variant
+    see the same drift, so the *ordering* is trustworthy even when the
+    absolute numbers wobble."""
+    import statistics
+
+    import jax
+
+    samples = {name: [] for name, _ in variants}
+    for _ in range(max(warmup, 0)):
+        for _, fn in variants:
+            jax.block_until_ready(fn())
+    for _ in range(max(iters, 1)):
+        for name, fn in variants:
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            samples[name].append((time.perf_counter() - t0) * 1e3)
+    return {name: float(statistics.median(ts))
+            for name, ts in samples.items()}
+
+
+def graph_bench(json_path: str = "BENCH_graph.json",
+                iters: int = 5) -> None:
+    """Bench every registered StreamGraph: fused vs staged vs unfused.
+
+    The fused lowering removes the intermediate's HBM round trip (and, in
+    interpret mode, a whole pallas_call dispatch), so the expected ordering
+    is fused <= staged <= unfused wall time; the three lowerings are timed
+    interleaved (round-robin) so load drift cannot fake an inversion, and
+    a fused run slower than staged beyond interleaved noise (>25%) fails
+    the bench — the per-edge decision should never have fused that graph.
+    Numerics of all three lowerings are checked against the XLA oracle."""
+    import jax
+    import numpy as np
+
+    from repro.kernels.registry import all_graphs, run_graph_smoke
+
+    results = []
+    failures = []
+    print("# graph: fused vs staged vs unfused per registered StreamGraph")
+    for spec in all_graphs():
+        t0 = time.time()
+        try:
+            args = spec.make_inputs(jax.random.key(0))
+            ref = np.float32(spec.ref(*args))
+            _, _, err_f, fused = run_graph_smoke(spec)
+            _, _, err_s, staged = run_graph_smoke(spec, prefer="staged")
+            err_u = float(np.max(np.abs(
+                np.float32(spec.unfused(*args)) - ref)))
+            ok = max(err_f, err_s, err_u) <= spec.tol
+            wall = _interleaved_ms(
+                [("fused", lambda: fused(*args)),
+                 ("staged", lambda: staged(*args)),
+                 ("unfused", lambda: spec.unfused(*args))],
+                warmup=2, iters=iters)
+            fused_ms = wall["fused"]
+            staged_ms = wall["staged"]
+            unfused_ms = wall["unfused"]
+        except Exception:   # noqa: BLE001 — report all graphs
+            traceback.print_exc()
+            failures.append(spec.name)
+            results.append({"graph": spec.name, "ok": False})
+            print(f"graph/{spec.name},nan,FAIL")
+            continue
+        if fused_ms > staged_ms * 1.25:
+            ok = False
+            failures.append(f"{spec.name} (fused slower than staged: "
+                            f"{fused_ms:.1f}ms vs {staged_ms:.1f}ms)")
+        est = fused.plan.estimate
+        results.append({
+            "graph": spec.name,
+            "ok": bool(ok),
+            "max_abs_err": {"fused": err_f, "staged": err_s,
+                            "unfused": err_u},
+            "tol": spec.tol,
+            "wall_ms": {"fused": round(fused_ms, 3),
+                        "staged": round(staged_ms, 3),
+                        "unfused": round(unfused_ms, 3)},
+            "edges": [{
+                "edge": ep.edge.label,
+                "mode": ep.mode,
+                "hbm_bytes_saved": ep.hbm_bytes_saved,
+                "rationale": ep.rationale,
+            } for ep in fused.plan.edges],
+            "units": [u.kind for u in fused.units],
+            "sizing": {k: list(v) for k, v in fused.plan.sizing.items()},
+            "modeled": {
+                "total_ms": round(est.total_s * 1e3, 6),
+                "unfused_ms": round(est.unfused_s * 1e3, 6),
+                "overlap_speedup": round(est.overlap_speedup, 3),
+                "hbm_bytes_saved": est.hbm_bytes_saved,
+                # estimate_graph's per-edge rejection lines, surfaced the
+                # same way Plan.skipped is in the smoke JSON
+                "skipped": list(est.skipped),
+            },
+            "bench_wall_ms": round((time.time() - t0) * 1e3, 1),
+        })
+        status = "ok" if ok else "FAIL"
+        print(f"graph/{spec.name},{fused_ms * 1e3:.0f},"
+              f"fused={fused_ms:.1f}ms_staged={staged_ms:.1f}ms_"
+              f"unfused={unfused_ms:.1f}ms_{status}")
+        if not ok and spec.name not in [f.split(" ")[0] for f in failures]:
+            failures.append(spec.name)
+    if json_path:
+        payload = {"suite": "graph", "graphs": results}
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"# wrote {json_path}")
+    if failures:
+        print(f"\nFAILED graphs: {failures}", file=sys.stderr)
+        raise SystemExit(1)
+    print("graph ok")
+
+
 def full() -> None:
     from benchmarks import (fig4_m2c2, kernel_bench, roofline_report,
                             table2_feedforward, table3_microbench)
@@ -228,12 +354,21 @@ def main() -> None:
     parser.add_argument("--budget-s", type=float, default=None,
                         help="total wall-time budget for --autotune "
                              "measurement (seconds; default unbounded)")
+    parser.add_argument("--graph", action="store_true",
+                        help="bench every registered StreamGraph (fused vs "
+                             "staged vs unfused) and write the graph JSON "
+                             "report (composes with the other modes)")
+    parser.add_argument("--graph-json", default="BENCH_graph.json",
+                        help="path for the graph JSON report "
+                             "('' disables; default %(default)s)")
     args = parser.parse_args()
     if args.smoke:
         smoke(args.json)
     if args.autotune:
         autotune_bench(args.autotune_json, args.budget_s)
-    if not (args.smoke or args.autotune):
+    if args.graph:
+        graph_bench(args.graph_json)
+    if not (args.smoke or args.autotune or args.graph):
         full()
 
 

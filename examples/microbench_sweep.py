@@ -40,17 +40,16 @@ def sweep(hw, name):
 def kernel_check():
     print("== generated kernels vs oracles (interpret) ==")
     import repro
-    from repro.kernels.ff_chunk_scan import chunk_scan
     k = jax.random.key(0)
     q = 0.5 * jax.random.normal(k, (2, 128, 32))
     kk = 0.5 * jax.random.normal(jax.random.fold_in(k, 1), (2, 128, 32))
     v = jax.random.normal(jax.random.fold_in(k, 2), (2, 128, 64))
     lw = -jnp.exp(jax.random.normal(jax.random.fold_in(k, 3), (2, 128, 32)))
     with repro.policy(mode="ref"):
-        ref = chunk_scan(q, kk, v, lw)
+        ref = repro.ops.chunk_scan(q, kk, v, lw)
     for mode in ("xla", "ff"):
         with repro.policy(mode=mode):
-            out = chunk_scan(q, kk, v, lw)
+            out = repro.ops.chunk_scan(q, kk, v, lw)
         err = float(jnp.max(jnp.abs(out - ref)))
         print(f" chunk_scan[{mode}] max|err| = {err:.2e}")
 

@@ -14,6 +14,9 @@ Public API:
   PipePolicy / policy       unified pipe policy + session-default context
   StreamProgram / compile_program  declarative producer→pipe→consumer graphs
                             lowered through the emitter into one pallas_call
+  StreamGraph / compile_graph  multi-kernel pipe graphs: per-edge fused
+                            (in-VMEM intermediate, single pallas_call) vs
+                            staged (HBM handoff) lowering + estimate_graph
 """
 
 from repro.core.emitter import (
@@ -59,8 +62,25 @@ from repro.core.autotune import (
     TunedChoice,
     measure,
     resolve_call,
+    resolve_graph,
     tuned_cache_clear,
     tuning_config,
+)
+from repro.core.graph import (
+    CompiledGraph,
+    GraphEdge,
+    GraphNode,
+    StreamGraph,
+    check_fusion,
+    compile_graph,
+    graph_signature,
+    graph_workload,
+)
+from repro.core.pipeline_model import (
+    EdgeEstimate,
+    GraphEstimate,
+    GraphStage,
+    estimate_graph,
 )
 from repro.core.program import (
     BlockIn,
@@ -80,11 +100,24 @@ from repro.core.program import (
 __all__ = [
     "ARRIA_CX",
     "BlockIn",
+    "CompiledGraph",
+    "EdgeEstimate",
+    "GraphEdge",
+    "GraphEstimate",
+    "GraphNode",
+    "GraphStage",
     "PLAN_FORMAT_VERSION",
     "PlanError",
+    "StreamGraph",
     "TunedChoice",
     "Footprint",
     "GatherRingPipe",
+    "check_fusion",
+    "compile_graph",
+    "estimate_graph",
+    "graph_signature",
+    "graph_workload",
+    "resolve_graph",
     "HardwareModel",
     "Pipe",
     "PipePolicy",

@@ -50,7 +50,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import planner
-from repro.core.pipe import Pipe, required_depth, vmem_budget_ok
+from repro.core.pipe import DEFAULT_VMEM_BUDGET_BYTES, Pipe, \
+    required_depth, vmem_budget_ok
 from repro.core.pipeline_model import estimate_feedforward
 
 # Bump whenever the record schema or the meaning of a key field changes:
@@ -59,7 +60,7 @@ from repro.core.pipeline_model import estimate_feedforward
 PLAN_FORMAT_VERSION = 1
 
 _DEFAULT_CACHE_PATH = os.path.join("~", ".cache", "repro", "plans.json")
-_VMEM_BUDGET_BYTES = 96 * 1024 * 1024
+_VMEM_BUDGET_BYTES = DEFAULT_VMEM_BUDGET_BYTES
 _DEPTH_CAP = 17
 
 
@@ -520,3 +521,32 @@ def resolve_call(op: str, policy, *, workload, tile, dtype,
     _LAST[op] = dict(record, source=source)
     return TunedChoice(_as_tuples(record["tile_kwargs"]),
                        int(record["depth"]), int(record["streams"]), source)
+
+
+def resolve_graph(graph_name: str, policy, *, workload, tile, dtype,
+                  signature: str,
+                  workload_fn: Optional[Callable] = None,
+                  runner: Optional[Callable] = None,
+                  tile_options: Sequence[Mapping[str, Any]] = (),
+                  ) -> TunedChoice:
+    """Joint (shared tile, depth, streams) resolution for one compiled
+    multi-kernel graph (:mod:`repro.core.graph`).
+
+    The whole fused graph is one call site: a candidate is a shared tile
+    override (the fused edge's tile is shared between producer and consumer
+    by construction) plus a (depth, streams) applied to every edge — the
+    graph compiler then refines per edge (planner clamps, VMEM shedding).
+    ``runner(tile_kwargs, depth, streams)`` must rebuild + recompile the
+    graph at that configuration and run it end to end, so what is measured
+    is the *jointly* lowered program, not any node in isolation.
+
+    ``workload`` summarizes the graph (see ``graph.graph_workload``);
+    ``signature`` is the structural graph key (nodes, shapes, edges) folded
+    into the plan-cache key, so tuned graph plans are cached under the
+    graph — never served across graphs that happen to share a workload
+    summary — and reload from disk like kernel plans do.
+    """
+    return resolve_call(f"graph:{graph_name}", policy, workload=workload,
+                        tile=tile, dtype=dtype, workload_fn=workload_fn,
+                        runner=runner, tile_options=tile_options,
+                        extra_key=f"sig={signature}")

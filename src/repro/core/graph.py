@@ -1,0 +1,990 @@
+"""StreamGraph: multi-kernel pipe graphs with fused/staged lowering.
+
+The paper splits *one* kernel into a memory stage and a compute stage
+joined by a pipe. MKPipe (arXiv 2002.01614) shows the bigger win comes when
+the *multi-kernel* program is a first-class object the compiler schedules:
+producer→consumer kernels pipeline through on-chip channels so intermediates
+never round-trip global memory — exactly the memory-controller bottleneck
+quantified by The Memory Controller Wall (arXiv 1910.06726). This module is
+that compiler layer for the repo, one level above
+:mod:`repro.core.program`:
+
+* a :class:`StreamGraph` composes registered :class:`StreamProgram` nodes
+  into a DAG whose inter-kernel edges are declared :class:`GraphEdge`\\ s
+  ("node ``dst`` streams node ``src``'s output through its ``dst_input``
+  stream");
+* :func:`compile_graph` chooses **per edge** between
+
+  - **fused** lowering — when the producer's output block schedule matches
+    the consumer's stream slicer (checked statically via
+    ``StreamProgram.out_schedule`` / ``Stream.index``), the edge becomes an
+    in-VMEM ring pipe inside a *single* ``pallas_call``: the producer's
+    words are inlined ahead of the consumer words that need them and the
+    intermediate block lands in a VMEM ring slot, never in HBM;
+  - **staged** lowering — a double-buffered HBM handoff: the producer's
+    ``pallas_call`` materializes the intermediate, the consumer streams it
+    back through its declared ring pipe (depth ≥ 2 double-buffers the
+    reload), and the planner charges the round trip in
+    :func:`repro.core.pipeline_model.estimate_graph`;
+
+* fusion legality, the per-edge VMEM split (``planner.split_graph_budget``),
+  the MKPipe-style cost model (``estimate_graph``), and the graph-keyed
+  measured autotuner (``autotune.resolve_graph``) all hang off the same
+  compiled plan, so every rejection is observable as a rationale line —
+  never a silent fallback.
+
+Fused word schedule
+-------------------
+
+Legality analysis runs entirely on Python ints: the producer's output
+schedule is grouped into equal-length contiguous runs (one per output
+block, in completion order), the consumer's declared stream schedule is
+mapped onto those blocks through row-major element offsets (so an
+``edge.reshape`` between a ``[BH, S, D]`` producer and a ``[BH*S, D]``
+consumer is handled exactly), and the request order must walk the
+completion order contiguously. The resulting per-word (block ordinal,
+first-request) tables ride into the fused kernel as scalar-prefetched
+int32 vectors — the TPU analogue of the FPGA address FIFO — so the kernel
+needs no data-dependent control flow beyond ``pl.when``.
+
+At consumer word ``g`` the fused kernel runs::
+
+    b = ord[g]; fresh[g]?            # scalar-prefetched schedule tables
+    when fresh:                      # first word that needs block b
+        for j in range(words_per_block):       # inlined producer stage
+            w = b * words_per_block + j
+            acquire(w, producer pipes); producer.consumer(w -> ring[b]);
+            release(w, producer pipes)
+    acquire(g, consumer's other pipes)
+    consumer.consumer(g, edge word served from ring[b])   # compute stage
+    release(g, consumer's other pipes)
+
+Producer ``BlockIn`` operands are promoted to ring streams (Pallas block
+delivery follows the grid, but the inlined producer's words are
+schedule-driven), which is why :class:`repro.core.program.BlockIn` carries
+a declared dtype.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, \
+    Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import planner
+from repro.core.emitter import GatherRingPipe, RingPipe, acquire, release
+from repro.core.pipe import DEFAULT_VMEM_BUDGET_BYTES, Pipe
+from repro.core.pipeline_model import GraphStage, Workload, estimate_graph
+from repro.core.planner import PlanError
+from repro.core.program import BlockIn, ProducerCtx, ProgramCtx, ScalarIn, \
+    ScheduleOpaqueError, Stream, StreamProgram, compile_program
+
+_VMEM_BUDGET_BYTES = DEFAULT_VMEM_BUDGET_BYTES
+
+
+# ---------------------------------------------------------------------------
+# The graph IR
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphNode:
+    """One kernel of the multi-kernel program.
+
+    ``workload`` (optional) is the node's analytic
+    :class:`~repro.core.pipeline_model.Workload` — kernels' registry
+    ``workload`` builders produce it; when omitted a conservative one is
+    synthesized from the program's streams. ``plan_tile`` is the tile the
+    planner sizes pipes against (default: the first stream's tile).
+    """
+
+    name: str
+    program: StreamProgram
+    workload: Optional[Workload] = None
+    plan_tile: Optional[Tuple[int, ...]] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphEdge:
+    """One inter-kernel dataflow edge: ``dst`` reads ``src``'s output
+    through its Stream input ``dst_input``.
+
+    ``prefer``: "auto" fuses when legal and VMEM-feasible (staged fallback
+    with a rationale otherwise), "fused" demands fusion (infeasibility
+    raises :class:`~repro.core.planner.PlanError` with the per-edge
+    rationale), "staged" pins the HBM handoff. ``reshape`` declares the
+    view the consumer takes of the intermediate (e.g. ``[BH, S, D]`` →
+    ``[BH*S, D]`` between attention and its out-projection); it must
+    preserve the element count and is applied to the materialized array in
+    staged mode and to the offset arithmetic of the legality check in
+    fused mode.
+    """
+
+    src: str
+    dst: str
+    dst_input: str
+    prefer: str = "auto"
+    reshape: Optional[Tuple[int, ...]] = None
+
+    def __post_init__(self):
+        if self.prefer not in ("auto", "fused", "staged"):
+            raise ValueError(f"edge {self.src}->{self.dst}: prefer must be "
+                             f"auto|fused|staged, got {self.prefer!r}")
+
+    @property
+    def label(self) -> str:
+        return f"{self.src}->{self.dst}"
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamGraph:
+    """A DAG of stream programs joined by pipe edges.
+
+    Validated at construction: node names unique, edges name known nodes
+    and Stream inputs, no input is fed twice, and the graph is acyclic
+    (a pipe cycle would deadlock the FPGA channels it models — rejected
+    here, like the paper rejects true memory loop-carried dependencies).
+    """
+
+    name: str
+    nodes: Tuple[GraphNode, ...]
+    edges: Tuple[GraphEdge, ...] = ()
+
+    def __post_init__(self):
+        names = [n.name for n in self.nodes]
+        if len(set(names)) != len(names):
+            raise ValueError(f"{self.name}: duplicate node names {names}")
+        by_name = {n.name: n for n in self.nodes}
+        fed = set()
+        for e in self.edges:
+            for end in (e.src, e.dst):
+                if end not in by_name:
+                    raise ValueError(f"{self.name}: edge {e.label} names "
+                                     f"unknown node {end!r}")
+            if e.src == e.dst:
+                raise ValueError(f"{self.name}: self-edge on {e.src!r}")
+            try:
+                by_name[e.dst].program.stream(e.dst_input)
+            except KeyError as err:
+                raise ValueError(
+                    f"{self.name}: edge {e.label} must feed a Stream input "
+                    f"of {e.dst!r}: {err}") from err
+            key = (e.dst, e.dst_input)
+            if key in fed:
+                raise ValueError(f"{self.name}: input {e.dst}.{e.dst_input} "
+                                 f"is fed by more than one edge")
+            fed.add(key)
+            if e.reshape is not None:
+                src_prog = by_name[e.src].program
+                if int(np.prod(e.reshape)) != int(np.prod(src_prog.out_shape)):
+                    raise ValueError(
+                        f"{self.name}: edge {e.label} reshape {e.reshape} "
+                        f"does not preserve the element count of "
+                        f"{src_prog.out_shape}")
+        self.topo_order()    # raises on cycles
+
+    def node(self, name: str) -> GraphNode:
+        for n in self.nodes:
+            if n.name == name:
+                return n
+        raise KeyError(f"{self.name}: unknown node {name!r}")
+
+    def topo_order(self) -> Tuple[GraphNode, ...]:
+        """Kahn topological order (stable in declaration order); raises
+        ValueError on cycles."""
+        indeg = {n.name: 0 for n in self.nodes}
+        for e in self.edges:
+            indeg[e.dst] += 1
+        order: List[GraphNode] = []
+        ready = [n for n in self.nodes if indeg[n.name] == 0]
+        while ready:
+            n = ready.pop(0)
+            order.append(n)
+            for e in self.edges:
+                if e.src == n.name:
+                    indeg[e.dst] -= 1
+                    if indeg[e.dst] == 0:
+                        ready.extend(m for m in self.nodes
+                                     if m.name == e.dst)
+        if len(order) != len(self.nodes):
+            cyc = sorted(set(indeg) - {n.name for n in order})
+            raise ValueError(f"{self.name}: graph has a cycle through "
+                             f"{cyc}")
+        return tuple(order)
+
+    def sinks(self) -> Tuple[str, ...]:
+        """Nodes with no out-edge — the graph's outputs, in topo order."""
+        srcs = {e.src for e in self.edges}
+        return tuple(n.name for n in self.topo_order() if n.name not in srcs)
+
+
+# ---------------------------------------------------------------------------
+# Workload synthesis + graph identity (autotune key)
+# ---------------------------------------------------------------------------
+
+
+def node_workload(node: GraphNode) -> Workload:
+    """The node's analytic workload (declared, or synthesized from the
+    program's streams when the builder did not provide one)."""
+    if node.workload is not None:
+        return node.workload
+    p = node.program
+    store = (float(np.prod(p.out_shape))
+             * jnp.dtype(p.out_dtype).itemsize) / p.n_words
+    return Workload(
+        n_words=p.n_words,
+        word_bytes=float(sum(s.spec.word_bytes for s in p.streams)),
+        flops_per_word=0.0,
+        regular=not any(s.gather for s in p.streams),
+        store_bytes_per_word=store,
+    )
+
+
+def _node_tile(node: GraphNode) -> Tuple[int, ...]:
+    return tuple(node.plan_tile or node.program.streams[0].spec.tile)
+
+
+def _node_dtype(node: GraphNode):
+    return jnp.dtype(node.program.streams[0].spec.dtype)
+
+
+def graph_workload(graph: StreamGraph) -> Tuple[Workload, Tuple[int, ...]]:
+    """Summarize the whole graph as one Workload (the joint tuner's call
+    site): total words, byte/flop averages, irregular if any node is."""
+    ws = [node_workload(n) for n in graph.topo_order()]
+    n_words = max(sum(w.n_words for w in ws), 1)
+    w = Workload(
+        n_words=n_words,
+        word_bytes=sum(w.word_bytes * w.n_words for w in ws) / n_words,
+        flops_per_word=sum(w.flops_per_word * w.n_words for w in ws) / n_words,
+        regular=all(w.regular for w in ws),
+        store_bytes_per_word=sum(w.store_bytes_per_word * w.n_words
+                                 for w in ws) / n_words,
+    )
+    return w, _node_tile(graph.topo_order()[0])
+
+
+def graph_signature(graph: StreamGraph) -> str:
+    """Structural identity of the graph for the tuned-plan cache key:
+    nodes (program, words, shapes, pipe tiles) + edges. Two graphs with
+    the same signature lower identically, so a tuned plan transfers."""
+    parts = []
+    for n in graph.topo_order():
+        p = n.program
+        tiles = ",".join("x".join(map(str, s.spec.tile)) for s in p.streams)
+        parts.append(f"{n.name}={p.name}/{p.n_words}w/"
+                     f"{'x'.join(map(str, p.out_shape))}"
+                     f"{jnp.dtype(p.out_dtype).name}/[{tiles}]")
+    for e in graph.edges:
+        parts.append(f"{e.label}.{e.dst_input}.{e.prefer}"
+                     + (f".r{'x'.join(map(str, e.reshape))}"
+                        if e.reshape else ""))
+    return ";".join(parts)
+
+
+# ---------------------------------------------------------------------------
+# Fusion legality
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FusionReport:
+    """Outcome of the static legality analysis of one edge.
+
+    When ``ok``: ``wpb`` producer words complete each of ``n_blocks``
+    output blocks (contiguous, in ordinal order); ``ord_seq[g]`` is the
+    block ordinal consumer word ``g`` reads; ``squeeze`` leading unit dims
+    of the producer block are dropped to match the consumer tile;
+    ``inter_depth`` sizes the in-VMEM intermediate ring.
+    """
+
+    ok: bool
+    reason: str
+    wpb: int = 1
+    n_blocks: int = 0
+    ord_seq: Tuple[int, ...] = ()
+    squeeze: int = 0
+    inter_depth: int = 1
+
+
+def _strides(shape: Sequence[int]) -> List[int]:
+    st = [1] * len(shape)
+    for i in range(len(shape) - 2, -1, -1):
+        st[i] = st[i + 1] * shape[i + 1]
+    return st
+
+
+def _block_offset(idx, block, shape) -> int:
+    return sum(int(i) * b * s for i, b, s in zip(idx, block, _strides(shape)))
+
+
+def _is_contiguous_slab(block, shape) -> bool:
+    """Is a block at any grid-aligned start a contiguous row-major slab?
+    Leading unit dims are free; after the first non-unit dim every dim must
+    be full."""
+    dims = list(zip(block, shape))
+    i = 0
+    while i < len(dims) and dims[i][0] == 1:
+        i += 1
+    return all(b == d for b, d in dims[i + 1:])
+
+
+def check_fusion(producer: StreamProgram, consumer: StreamProgram,
+                 edge: GraphEdge) -> FusionReport:
+    """Static legality of fusing ``edge`` (pure-Python schedule analysis).
+
+    Legal iff the producer's output block schedule *is* the consumer's
+    stream schedule: same tile (modulo leading unit dims), blocks completed
+    in contiguous equal-length word runs, and the consumer's declared
+    request order walks the completion order contiguously (revisits allowed
+    — a block may serve several consecutive consumer words, the ring slot
+    simply stays live). Anything else returns ``ok=False`` with the
+    rationale that ends up in the plan / bench JSON.
+    """
+
+    def no(reason: str) -> FusionReport:
+        return FusionReport(False, reason)
+
+    try:
+        st = consumer.stream(edge.dst_input)
+    except KeyError as e:
+        return no(str(e))
+    if st.gather:
+        return no(f"consumer stream {edge.dst_input!r} is an irregular "
+                  f"gather (data-dependent addresses)")
+    try:
+        pout = producer.out_schedule()
+    except ScheduleOpaqueError as e:
+        return no(f"producer schedule opaque: {e}")
+    try:
+        creq = consumer.stream_schedule(edge.dst_input)
+    except ScheduleOpaqueError as e:
+        return no(f"consumer schedule opaque: {e}")
+
+    pblock = tuple(producer.out_block)
+    tile = tuple(st.spec.tile)
+    squeeze = 0
+    while len(pblock) - squeeze > len(tile) and pblock[squeeze] == 1:
+        squeeze += 1
+    if pblock[squeeze:] != tile:
+        return no(f"mismatched block schedules: producer out_block {pblock} "
+                  f"vs consumer tile {tile}")
+    if jnp.dtype(producer.out_dtype) != jnp.dtype(st.spec.dtype):
+        return no(f"dtype mismatch: producer {jnp.dtype(producer.out_dtype).name} "
+                  f"vs consumer pipe {jnp.dtype(st.spec.dtype).name}")
+    cshape = tuple(edge.reshape) if edge.reshape else tuple(producer.out_shape)
+    if len(cshape) != len(tile):
+        return no(f"consumer operand rank {len(cshape)} (shape {cshape}) "
+                  f"!= stream tile rank {len(tile)}")
+    if not _is_contiguous_slab(producer.out_block, producer.out_shape):
+        return no(f"producer blocks {pblock} of {producer.out_shape} are "
+                  f"not contiguous slabs (cannot be matched through a "
+                  f"reshape)")
+    if not _is_contiguous_slab(tile, cshape):
+        return no(f"consumer tiles {tile} of {cshape} are not contiguous "
+                  f"slabs (k-dim must fit one tile)")
+    for b in (i for i in producer.inputs if isinstance(i, BlockIn)):
+        try:
+            Pipe(tile=tuple(b.block), dtype=b.dtype, depth=2)
+        except ValueError as e:
+            return no(f"producer BlockIn {b.name!r} cannot be promoted to a "
+                      f"ring stream: {e}")
+
+    # rank guards: _block_offset zips index against block dims, so a
+    # short/long tuple would silently drop schedule components and could
+    # legalize a fusion that reads the wrong ring slot
+    bad = {len(b) for b in pout} - {len(producer.out_block)}
+    if bad:
+        return no(f"producer out_index_map rank {sorted(bad)} != out_block "
+                  f"rank {len(producer.out_block)}")
+    bad = {len(b) for b in creq} - {len(tile)}
+    if bad:
+        return no(f"consumer stream index rank {sorted(bad)} != tile rank "
+                  f"{len(tile)}")
+
+    # producer completion runs: contiguous, equal length, each block once
+    runs: List[List[Any]] = []    # [block, start, length]
+    for w, blk in enumerate(pout):
+        if runs and runs[-1][0] == blk:
+            runs[-1][2] += 1
+        else:
+            runs.append([blk, w, 1])
+    ordinal: Dict[Tuple[int, ...], int] = {}
+    for o, (blk, _, _) in enumerate(runs):
+        if blk in ordinal:
+            return no(f"producer revisits output block {blk} "
+                      f"non-contiguously")
+        ordinal[blk] = o
+    lengths = {r[2] for r in runs}
+    if len(lengths) != 1:
+        return no(f"producer block runs have unequal lengths "
+                  f"{sorted(lengths)}")
+    wpb, n_blocks = runs[0][2], len(runs)
+
+    # map consumer requests onto producer ordinals through element offsets
+    # (offsets survive the edge reshape; block tuples do not)
+    p_by_off = {_block_offset(blk, producer.out_block, producer.out_shape): o
+                for blk, o in ordinal.items()}
+    ord_seq: List[int] = []
+    prev = -1
+    for g, blk in enumerate(creq):
+        off = _block_offset(blk, tile, cshape)
+        if off not in p_by_off:
+            return no(f"consumer word {g} requests block {blk} (offset "
+                      f"{off}) the producer never writes")
+        o = p_by_off[off]
+        if o not in (prev, prev + 1):
+            return no(f"consumer request order is not contiguous "
+                      f"non-decreasing (ordinal {prev}->{o} at word {g})")
+        prev = o
+        ord_seq.append(o)
+    if prev != n_blocks - 1:
+        return no(f"consumer consumes {prev + 1} of {n_blocks} produced "
+                  f"blocks — the rest would never be scheduled")
+    return FusionReport(
+        ok=True,
+        reason=(f"fusable: {n_blocks} blocks x {wpb} producer words each, "
+                f"tile {tile}, consumer revisits "
+                f"{len(ord_seq) / n_blocks:.1f}x"),
+        wpb=wpb,
+        n_blocks=n_blocks,
+        ord_seq=tuple(ord_seq),
+        squeeze=squeeze,
+        inter_depth=1 if n_blocks == 1 else 2,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Lowering helpers
+# ---------------------------------------------------------------------------
+
+
+def _clamped_streams(tile0: int, streams: int) -> int:
+    s = max(1, int(streams))
+    while s > 1 and tile0 % s:
+        s //= 2
+    return max(1, s)
+
+
+def _stream_overrides(program: StreamProgram, depth: int,
+                      streams: int) -> Dict[str, Pipe]:
+    """Re-size every stream of a program to (depth, streams), clamping
+    streams to the tile's divisibility per stream (the planner's global
+    choice refined per edge)."""
+    return {
+        st.name: dataclasses.replace(
+            st.spec, depth=depth,
+            streams=_clamped_streams(st.spec.tile[0], streams))
+        for st in program.streams
+    }
+
+
+def _promote_blockin(b: BlockIn, scalar_names: Sequence[str],
+                     depth: int) -> Stream:
+    """Promote a producer BlockIn to a regular ring stream: the slicer
+    replays the declared index map at the (dynamic) producer word."""
+    def slicer(ctx, word, _b=b, _names=tuple(scalar_names)):
+        scalars = [ctx.ref(n) for n in _names]
+        idx = _b.index_map(word, *scalars) if _names else _b.index_map(word)
+        sl = tuple(pl.ds(i * d, d) for i, d in zip(idx, _b.block))
+        return ctx.ref(_b.name).at[sl]
+
+    return Stream(b.name,
+                  Pipe(tile=tuple(b.block), dtype=b.dtype, depth=depth),
+                  slicer)
+
+
+class _InterSlot:
+    """The consumer-side endpoint of a fused edge: serves the current
+    block from the in-VMEM intermediate ring (``ctx.word`` protocol)."""
+
+    __slots__ = ("_buf", "_slot", "_squeeze")
+
+    def __init__(self, buf, slot, squeeze):
+        self._buf = buf
+        self._slot = slot
+        self._squeeze = squeeze
+
+    def slot(self, word):
+        del word    # the ring position tracks the block ordinal, not g
+        return self._buf.at[(self._slot,) + (0,) * self._squeeze]
+
+
+def _wrap_index_map(orig: Callable, lo: int, hi: int, takes_scalars: bool):
+    """Adapt a node's index map to the fused kernel's scalar-prefetch
+    signature: it sees only its own scalar refs (slice [lo:hi])."""
+    if takes_scalars:
+        return lambda g, *s: orig(g, *s[lo:hi])
+    return lambda g, *s: orig(g)
+
+
+def _compile_fused(pnode: GraphNode, cnode: GraphNode, edge: GraphEdge,
+                   rep: FusionReport, p_sizing: Tuple[int, int],
+                   c_sizing: Tuple[int, int], *, interpret: bool):
+    """Lower one fused pair into a single ``pallas_call``.
+
+    Returns ``(fn, operands)`` where ``operands`` names the external inputs
+    in call order as ``(node_name, input_name)`` pairs. The schedule tables
+    (block ordinal + first-request flag per consumer word) are closed over
+    and passed as scalar-prefetch operands ahead of the user's scalars.
+    """
+    P, C = pnode.program, cnode.program
+    (p_depth, p_streams_n), (c_depth, c_streams_n) = p_sizing, c_sizing
+
+    p_scalars = [i for i in P.inputs if isinstance(i, ScalarIn)]
+    c_scalars = [i for i in C.inputs if isinstance(i, ScalarIn)]
+    p_tensors = [i for i in P.inputs if not isinstance(i, ScalarIn)]
+    c_tensors = [i for i in C.inputs
+                 if not isinstance(i, ScalarIn) and i.name != edge.dst_input]
+
+    p_over = _stream_overrides(P, p_depth, p_streams_n)
+    c_over = _stream_overrides(C, c_depth, c_streams_n)
+    p_scal_names = [s.name for s in p_scalars]
+    p_streams: Dict[str, Stream] = {}
+    promoted = set()
+    for i in p_tensors:
+        if isinstance(i, Stream):
+            p_streams[i.name] = dataclasses.replace(i, spec=p_over[i.name])
+        else:
+            promoted.add(i.name)
+            p_streams[i.name] = _promote_blockin(i, p_scal_names, p_depth)
+    c_streams = {
+        i.name: dataclasses.replace(i, spec=c_over[i.name])
+        for i in c_tensors if isinstance(i, Stream)
+    }
+
+    rings_p = {n: (GatherRingPipe if st.gather else RingPipe)(st.spec)
+               for n, st in p_streams.items()}
+    rings_c = {n: (GatherRingPipe if st.gather else RingPipe)(st.spec)
+               for n, st in c_streams.items()}
+
+    ord_arr = jnp.asarray(rep.ord_seq, jnp.int32)
+    fresh_arr = jnp.asarray(
+        [1 if g == 0 or rep.ord_seq[g] != rep.ord_seq[g - 1] else 0
+         for g in range(C.n_words)], jnp.int32)
+    n_scal = 2 + len(p_scalars) + len(c_scalars)
+    c_lo, c_hi = 2 + len(p_scalars), n_scal
+    c_takes = C.num_scalar_prefetch > 0
+
+    def kernel(*refs):
+        it = iter(refs)
+        ord_ref, fresh_ref = next(it), next(it)
+        p_named = {s.name: next(it) for s in p_scalars}
+        c_named = {s.name: next(it) for s in c_scalars}
+        for i in p_tensors:
+            p_named[i.name] = next(it)
+        for i in c_tensors:
+            c_named[i.name] = next(it)
+        out = next(it)
+        c_scratch = {s.name: next(it) for s in C.scratch}
+        p_scratch = {s.name: next(it) for s in P.scratch}
+        inter = next(it)
+
+        p_raw = ProducerCtx(p_named)
+        bound_p = {}
+        for name, st in p_streams.items():
+            buf, sems = next(it), next(it)
+            if st.gather:
+                bound_p[name] = rings_p[name].bind(
+                    buf, sems, lambda word, r, s=st: s.slicer(p_raw, word, r))
+            else:
+                bound_p[name] = rings_p[name].bind(
+                    buf, sems, lambda word, s=st: s.slicer(p_raw, word))
+        c_raw = ProducerCtx(c_named)
+        bound_c = {}
+        for name, st in c_streams.items():
+            buf, sems = next(it), next(it)
+            if st.gather:
+                bound_c[name] = rings_c[name].bind(
+                    buf, sems, lambda word, r, s=st: s.slicer(c_raw, word, r))
+            else:
+                bound_c[name] = rings_c[name].bind(
+                    buf, sems, lambda word, s=st: s.slicer(c_raw, word))
+
+        g = pl.program_id(0)
+        b = ord_ref[g]
+        p_list = list(bound_p.values())
+        c_list = list(bound_c.values())
+
+        # -- inlined producer stage: run block b's words on first request --
+        @pl.when(fresh_ref[g] == 1)
+        def _():
+            for j in range(rep.wpb):
+                w = b * rep.wpb + j
+                acquire(w, P.n_words, p_list)
+                body_refs = dict(p_named)
+                for name in promoted:
+                    body_refs[name] = bound_p[name].slot(w)
+                pctx = ProgramCtx(w, P.n_words, body_refs, bound_p,
+                                  inter.at[b % rep.inter_depth], p_scratch)
+                P.consumer(pctx)
+                release(w, P.n_words, p_list)
+
+        # -- consumer stage: edge word served from the intermediate ring --
+        acquire(g, C.n_words, c_list)
+        pipes_view = dict(bound_c)
+        pipes_view[edge.dst_input] = _InterSlot(
+            inter, b % rep.inter_depth, rep.squeeze)
+        cctx = ProgramCtx(g, C.n_words, c_named, pipes_view, out, c_scratch)
+        C.consumer(cctx)
+        release(g, C.n_words, c_list)
+
+    in_specs = [pl.BlockSpec(memory_space=pl.ANY) for _ in p_tensors]
+    for i in c_tensors:
+        if isinstance(i, Stream):
+            in_specs.append(pl.BlockSpec(memory_space=pl.ANY))
+        else:
+            in_specs.append(pl.BlockSpec(
+                i.block, _wrap_index_map(i.index_map, c_lo, c_hi, c_takes)))
+    scratch_shapes = [pltpu.VMEM(s.shape, s.dtype) for s in C.scratch]
+    scratch_shapes += [pltpu.VMEM(s.shape, s.dtype) for s in P.scratch]
+    scratch_shapes.append(
+        pltpu.VMEM((rep.inter_depth, *P.out_block), P.out_dtype))
+    for name in p_streams:
+        scratch_shapes.extend(rings_p[name].scratch_shapes)
+    for name in c_streams:
+        scratch_shapes.extend(rings_c[name].scratch_shapes)
+
+    call = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=n_scal,
+            grid=(C.n_words,),
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec(
+                C.out_block,
+                _wrap_index_map(C.out_index_map, c_lo, c_hi, c_takes)),
+            scratch_shapes=scratch_shapes,
+        ),
+        out_shape=jax.ShapeDtypeStruct(C.out_shape, C.out_dtype),
+        interpret=interpret,
+    )
+
+    def fn(*ops):
+        return call(ord_arr, fresh_arr, *ops)
+
+    operands = ([(pnode.name, s.name) for s in p_scalars]
+                + [(cnode.name, s.name) for s in c_scalars]
+                + [(pnode.name, i.name) for i in p_tensors]
+                + [(cnode.name, i.name) for i in c_tensors])
+    return fn, operands
+
+
+def _fused_vmem_parts(P: StreamProgram, C: StreamProgram, edge: GraphEdge,
+                      rep: FusionReport, p_sizing, c_sizing
+                      ) -> Dict[str, int]:
+    """Itemized VMEM footprint of a fused pair (for the planner's split
+    budget check)."""
+    p_over = _stream_overrides(P, *p_sizing)
+    c_over = _stream_overrides(C, *c_sizing)
+    p_rings = sum(p.vmem_bytes for p in p_over.values())
+    for b in (i for i in P.inputs if isinstance(i, BlockIn)):
+        p_rings += Pipe(tile=tuple(b.block), dtype=b.dtype,
+                        depth=p_sizing[0]).vmem_bytes
+    c_rings = sum(p.vmem_bytes for n, p in c_over.items()
+                  if n != edge.dst_input)
+    inter = rep.inter_depth * int(np.prod(P.out_block)) \
+        * jnp.dtype(P.out_dtype).itemsize
+    scratch = sum(int(np.prod(s.shape)) * jnp.dtype(s.dtype).itemsize
+                  for s in P.scratch + C.scratch)
+    scratch += int(np.prod(C.out_block)) * jnp.dtype(C.out_dtype).itemsize
+    return {"producer-rings": int(p_rings), "intermediate-ring": int(inter),
+            "consumer-rings": int(c_rings), "scratch": int(scratch)}
+
+
+# ---------------------------------------------------------------------------
+# compile_graph
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class EdgePlan:
+    """One edge's lowering decision, with the rationale that justifies it
+    (fused: legality + VMEM line; staged: why fusion was rejected)."""
+
+    edge: GraphEdge
+    mode: str                     # "fused" | "staged"
+    rationale: str
+    hbm_bytes_saved: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphPlan:
+    """The compiled graph's plan: per-edge decisions, per-node pipe sizing,
+    the VMEM budget split, and the MKPipe-style estimate (whose ``skipped``
+    lines surface fusion rejections in bench JSON, like ``Plan.skipped``
+    does for the kernel planner)."""
+
+    edges: Tuple[EdgePlan, ...]
+    sizing: Mapping[str, Tuple[int, int]]       # node -> (depth, streams)
+    budgets: Mapping[str, int]                  # node -> vmem share
+    estimate: Any                               # pipeline_model.GraphEstimate
+
+    @property
+    def fused(self) -> Tuple[EdgePlan, ...]:
+        return tuple(e for e in self.edges if e.mode == "fused")
+
+    @property
+    def hbm_bytes_saved(self) -> float:
+        return sum(e.hbm_bytes_saved for e in self.edges)
+
+
+@dataclasses.dataclass(frozen=True)
+class _Unit:
+    """One executable of the compiled graph: a single node's pallas_call
+    or a fused pair's."""
+
+    kind: str                     # "node" | "fused"
+    out_node: str
+    fn: Callable
+    operands: Tuple[Tuple[str, str], ...]     # (node, input) per call arg
+
+
+class CompiledGraph:
+    """The compiled multi-kernel program.
+
+    Call it with the graph's external operands in :attr:`arg_names` order
+    (``"node.input"`` labels; edge-fed inputs are internal). Returns the
+    sink node's output (or a tuple for multi-sink graphs). ``plan`` carries
+    the per-edge fused/staged decisions, rationales, and the analytic
+    estimate; ``units`` shows the pallas_call structure (one "fused" unit =
+    one kernel for two nodes — the acceptance check that an edge really
+    lowered into a single kernel).
+    """
+
+    def __init__(self, graph: StreamGraph, policy, plan: GraphPlan,
+                 units: Tuple[_Unit, ...], arg_names: Tuple[str, ...],
+                 edges_in: Mapping[Tuple[str, str], GraphEdge]):
+        self.graph = graph
+        self.policy = policy
+        self.plan = plan
+        self.units = units
+        self.arg_names = arg_names
+        self._edges_in = dict(edges_in)
+        self._sinks = graph.sinks()
+        # one jit over the whole unit chain: staged intermediates stay
+        # device-resident between pallas_calls and repeat calls replay the
+        # compiled program (parity with the jitted repro.ops entrypoints)
+        self._jit = jax.jit(self._run)
+
+    def __call__(self, *args):
+        if len(args) != len(self.arg_names):
+            raise TypeError(
+                f"{self.graph.name}: expected {len(self.arg_names)} operands "
+                f"{list(self.arg_names)}, got {len(args)}")
+        return self._jit(*args)
+
+    def _run(self, *args):
+        vals = dict(zip(self.arg_names, args))
+        outs: Dict[str, Any] = {}
+        for unit in self.units:
+            ops = []
+            for node, name in unit.operands:
+                e = self._edges_in.get((node, name))
+                if e is not None:
+                    v = outs[e.src]
+                    ops.append(v.reshape(e.reshape) if e.reshape else v)
+                else:
+                    ops.append(vals[f"{node}.{name}"])
+            outs[unit.out_node] = unit.fn(*ops)
+        res = tuple(outs[s] for s in self._sinks)
+        return res[0] if len(res) == 1 else res
+
+
+def _resolve_node(graph: StreamGraph, node: GraphNode, policy,
+                  budget: int) -> Tuple[Workload, int, int]:
+    """Per-node (depth, streams) under the node's split VMEM budget:
+    explicit policy ints pass through; "auto"/"measured" resolve through
+    the planner (the graph-keyed *measured* path resolves above
+    compile_graph, in ``registry.run_graph``, and arrives here as ints)."""
+    w = node_workload(node)
+    depth, streams = policy.depth, policy.streams
+    if isinstance(depth, str) or isinstance(streams, str):
+        try:
+            plan = planner.planned_pipe(
+                f"graph:{graph.name}/{node.name}", w, _node_tile(node),
+                _node_dtype(node), policy.hw,
+                stream_options=tuple(policy.stream_options),
+                vmem_budget_bytes=budget)
+            d_plan, s_plan = plan.pipe.depth, plan.pipe.streams
+        except PlanError:
+            # the split budget is too tight for the latency-hiding depth:
+            # degrade to the shallowest ring that fits (double-buffer, else
+            # synchronous) — the fused-pair VMEM check downstream is where
+            # a genuinely infeasible fusion turns into PlanError/staging
+            tile, dt = _node_tile(node), _node_dtype(node)
+            d_plan = 2 if Pipe(tile=tile, dtype=dt,
+                               depth=2).vmem_bytes <= budget else 1
+            s_plan = 1
+        depth = d_plan if isinstance(depth, str) else int(depth)
+        streams = s_plan if isinstance(streams, str) else int(streams)
+    depth, streams = int(depth), int(streams)
+    if policy.mode == "baseline":
+        depth = 1
+    return w, depth, streams
+
+
+def compile_graph(graph: StreamGraph, *, policy=None,
+                  vmem_budget_bytes: int = _VMEM_BUDGET_BYTES,
+                  prefer: Optional[str] = None) -> CompiledGraph:
+    """Compile a :class:`StreamGraph`, choosing fused/staged per edge.
+
+    Per edge: "auto" fuses when the static legality analysis passes *and*
+    the fused pair fits the planner's split VMEM budget, else stages with
+    the rejection line as the edge rationale. ``prefer`` (or
+    ``edge.prefer``) = "fused" turns an infeasible fusion into a
+    :class:`~repro.core.planner.PlanError` carrying those lines; "staged"
+    pins the HBM handoff (the A/B baseline for BENCH_graph.json).
+
+    Current fusion scope: one fused edge per kernel (a producer with one
+    consumer, a consumer with one fused in-edge); longer chains stage
+    between fused pairs. The producer must not feed anything else — fusing
+    it away means its output never materializes in HBM.
+    """
+    from repro.core.program import current_policy
+    policy = policy or current_policy()
+    order = graph.topo_order()
+    nodes = {n.name: n for n in graph.nodes}
+    budgets = planner.split_graph_budget(
+        [n.name for n in order], vmem_budget_bytes)
+
+    resolved = {n.name: _resolve_node(graph, n, policy, budgets[n.name])
+                for n in order}
+
+    out_degree: Dict[str, int] = {}
+    for e in graph.edges:
+        out_degree[e.src] = out_degree.get(e.src, 0) + 1
+
+    pos = {n.name: i for i, n in enumerate(order)}
+    edge_plans: Dict[GraphEdge, EdgePlan] = {}
+    reports: Dict[GraphEdge, FusionReport] = {}
+    fused_in: Dict[str, GraphEdge] = {}       # consumer -> its fused edge
+    in_pair = set()
+    for e in sorted(graph.edges, key=lambda e: (pos[e.dst], pos[e.src])):
+        pref = prefer or e.prefer
+        P, C = nodes[e.src].program, nodes[e.dst].program
+        if pref == "staged":
+            edge_plans[e] = EdgePlan(e, "staged", "staged by request")
+            continue
+        rep = check_fusion(P, C, e)
+        reason = None
+        if not rep.ok:
+            reason = rep.reason
+        elif out_degree.get(e.src, 0) > 1:
+            reason = (f"producer {e.src!r} output has "
+                      f"{out_degree[e.src]} consumers; fusing would "
+                      f"unmaterialize it for the others")
+        elif e.src in in_pair or e.dst in in_pair:
+            reason = "node already participates in a fused pair"
+        else:
+            _, pd, ps = resolved[e.src]
+            _, cd, cs = resolved[e.dst]
+            parts = _fused_vmem_parts(P, C, e, rep, (pd, ps), (cd, cs))
+            fits, line = planner.check_fused_vmem(
+                e.label, parts, budgets[e.src] + budgets[e.dst])
+            if fits:
+                st = C.stream(e.dst_input)
+                saved = (float(np.prod(P.out_shape))
+                         * jnp.dtype(P.out_dtype).itemsize
+                         + float(C.n_words) * st.spec.word_bytes)
+                edge_plans[e] = EdgePlan(e, "fused",
+                                         f"{rep.reason}; {line}", saved)
+                reports[e] = rep
+                fused_in[e.dst] = e
+                in_pair.update((e.src, e.dst))
+                continue
+            reason = line
+        if pref == "fused":
+            raise PlanError(resolved[e.dst][0],
+                            budgets[e.src] + budgets[e.dst],
+                            [f"{e.label}: {reason}"])
+        edge_plans[e] = EdgePlan(e, "staged", reason)
+
+    # -- build executable units (fused pairs collapse into one kernel) -----
+    # only staged edges feed a materialized operand; a fused edge's
+    # intermediate never exists outside the kernel
+    edges_in = {(e.dst, e.dst_input): e for e in graph.edges
+                if edge_plans[e].mode == "staged"}
+    fused_producers = {e.src for e in fused_in.values()}
+    units: List[_Unit] = []
+    for n in order:
+        if n.name in fused_producers:
+            continue    # emitted inside its consumer's fused unit
+        if n.name in fused_in:
+            e = fused_in[n.name]
+            rep = reports[e]
+            pn, cn = nodes[e.src], nodes[e.dst]
+            _, pd, ps = resolved[e.src]
+            _, cd, cs = resolved[e.dst]
+            fn, operands = _compile_fused(pn, cn, e, rep, (pd, ps), (cd, cs),
+                                          interpret=policy.interpret)
+            units.append(_Unit("fused", n.name, fn, tuple(operands)))
+        else:
+            _, d, s = resolved[n.name]
+            fn = compile_program(
+                n.program, interpret=policy.interpret,
+                pipe_overrides=_stream_overrides(n.program, d, s))
+            units.append(_Unit(
+                "node", n.name, fn,
+                tuple((n.name, i.name) for i in n.program.inputs)))
+
+    fed_any = {(e.dst, e.dst_input) for e in graph.edges}
+    arg_names = tuple(
+        f"{n.name}.{i.name}" for n in order for i in n.program.inputs
+        if (n.name, i.name) not in fed_any)
+
+    # -- analytic estimate (MKPipe stage overlap + per-edge traffic) --------
+    # stages follow the *execution* order of the units (a fused pair's
+    # producer immediately precedes its consumer even when the declaration
+    # topo order interleaves an unrelated node), so estimate_graph's
+    # consecutive-stage fusion model lines up with plan.edges
+    stage_order: List[GraphNode] = []
+    for u in units:
+        if u.kind == "fused":
+            stage_order.append(nodes[fused_in[u.out_node].src])
+        stage_order.append(nodes[u.out_node])
+    stages = []
+    for n in stage_order:
+        w, d, s = resolved[n.name]
+        tile = _node_tile(n)
+        pipe = Pipe(tile=tile, dtype=_node_dtype(n), depth=max(d, 1),
+                    streams=_clamped_streams(tile[0], s))
+        e = fused_in.get(n.name)
+        in_edges = [ed for ed in graph.edges if ed.dst == n.name]
+        rationale = ""
+        if e is not None:
+            rationale = edge_plans[e].rationale
+        elif in_edges:
+            rationale = "; ".join(
+                edge_plans[ed].rationale for ed in in_edges)
+        prev_name = stages[-1].name if stages else None
+        fused_with_prev = e is not None and e.src == prev_name
+        saved_load = saved_store = 0.0
+        if fused_with_prev:
+            P = nodes[e.src].program
+            st = nodes[e.dst].program.stream(e.dst_input)
+            saved_store = float(np.prod(P.out_shape)) \
+                * jnp.dtype(P.out_dtype).itemsize
+            saved_load = float(nodes[e.dst].program.n_words) \
+                * st.spec.word_bytes
+        stages.append(GraphStage(
+            name=n.name, workload=w, pipe=pipe,
+            fused_with_prev=fused_with_prev,
+            saved_load_bytes=saved_load, saved_store_bytes=saved_store,
+            rationale=rationale))
+    estimate = estimate_graph(tuple(stages), policy.hw)
+
+    plan = GraphPlan(
+        edges=tuple(edge_plans[e] for e in graph.edges),
+        sizing={k: (d, s) for k, (_, d, s) in resolved.items()},
+        budgets=budgets,
+        estimate=estimate,
+    )
+    return CompiledGraph(graph, policy, plan, tuple(units), arg_names,
+                         edges_in)

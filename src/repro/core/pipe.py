@@ -99,7 +99,14 @@ class Pipe:
         return dataclasses.replace(self, streams=streams)
 
 
-def vmem_budget_ok(pipes, budget_bytes: int = 96 * 1024 * 1024) -> bool:
+# Single source of the planning VMEM budget (v5e has ~128 MiB; keep slack
+# for Mosaic's own buffers). The planner, the autotuner, and the graph
+# compiler's split-budget logic all key off this one constant.
+DEFAULT_VMEM_BUDGET_BYTES = 96 * 1024 * 1024
+
+
+def vmem_budget_ok(pipes,
+                   budget_bytes: int = DEFAULT_VMEM_BUDGET_BYTES) -> bool:
     """Check a set of pipes against a VMEM budget (v5e ~128MiB, keep slack)."""
     return sum(p.vmem_bytes for p in pipes) <= budget_bytes
 

@@ -34,7 +34,7 @@ Two hardware presets are provided:
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Tuple
 
 from repro.core.pipe import Pipe
 
@@ -247,3 +247,142 @@ def speedup(w: Workload, hw: HardwareModel, pipe: Pipe,
     base = estimate_baseline(w, hw)
     ff = estimate_feedforward(w, hw, pipe, consumers)
     return base.total_s / ff.total_s
+
+
+# ---------------------------------------------------------------------------
+# Multi-kernel graphs (MKPipe-style stage overlap)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphStage:
+    """One node of a compiled :mod:`repro.core.graph` program, as the model
+    sees it.
+
+    ``fused_with_prev`` marks the in-edge from the previous stage as fused:
+    the previous stage's output never stores to HBM
+    (``saved_store_bytes``) and this stage's reloads of it are served from
+    the in-VMEM ring (``saved_load_bytes``); the two stages overlap
+    MKPipe-style instead of running back to back. ``rationale`` carries the
+    fuser's per-edge decision line (fused: why legal; staged: why rejected)
+    so bench reports can surface it without recompiling.
+    """
+
+    name: str
+    workload: Workload
+    pipe: Pipe
+    fused_with_prev: bool = False
+    saved_load_bytes: float = 0.0
+    saved_store_bytes: float = 0.0
+    rationale: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class EdgeEstimate:
+    """Model output for one graph edge (surfaced in BENCH_graph.json)."""
+
+    edge: str                   # "producer->consumer"
+    mode: str                   # "fused" | "staged"
+    hbm_bytes_saved: float
+    rationale: str
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphEstimate:
+    """Model output for one compiled multi-kernel graph.
+
+    ``total_s`` models the chosen lowering (fused segments overlap, staged
+    boundaries serialize); ``unfused_s`` is every stage alone with full HBM
+    traffic — the two-calls baseline the paper's memory-controller-wall
+    argument is made against. ``skipped`` mirrors ``Plan.skipped``: one
+    line per staged edge explaining *why* it did not fuse, so fusion
+    rejections are observable from the bench JSON without rerunning.
+    """
+
+    total_s: float
+    unfused_s: float
+    per_stage: Tuple[Tuple[str, PipelineEstimate], ...]
+    edges: Tuple[EdgeEstimate, ...]
+    hbm_bytes_saved: float
+    skipped: Tuple[str, ...]
+
+    @property
+    def overlap_speedup(self) -> float:
+        return self.unfused_s / max(self.total_s, 1e-30)
+
+
+def _adjusted(w: Workload, saved_load: float, saved_store: float) -> Workload:
+    """Remove fused-edge HBM traffic from one stage's workload (the bytes
+    now travel through VMEM rings instead of the memory controller)."""
+    per_word_load = saved_load / max(w.n_words, 1)
+    per_word_store = saved_store / max(w.n_words, 1)
+    return dataclasses.replace(
+        w,
+        word_bytes=max(w.word_bytes - per_word_load, 0.0),
+        store_bytes_per_word=max(w.store_bytes_per_word - per_word_store, 0.0),
+    )
+
+
+def estimate_graph(stages: Tuple[GraphStage, ...],
+                   hw: HardwareModel) -> GraphEstimate:
+    """Estimate a multi-kernel pipe graph (MKPipe, arXiv 2002.01614).
+
+    Stages are given in topological (execution) order. Consecutive stages
+    joined by a fused edge form a *segment*: their workloads shed the
+    intermediate's HBM traffic and the segment's time is the max of its
+    members plus one fill (producer and consumer overlap, like the paper's
+    producer/consumer kernels overlap within one kernel). Staged edges
+    serialize: the intermediate round-trips HBM and segment times add up —
+    exactly the memory-controller round trip the fused lowering removes.
+    """
+    if not stages:
+        raise ValueError("estimate_graph needs at least one stage")
+
+    # per-stage workloads with fused-edge traffic removed
+    adj: list = [s.workload for s in stages]
+    for i, s in enumerate(stages):
+        if not s.fused_with_prev:
+            continue
+        adj[i - 1] = _adjusted(adj[i - 1], 0.0, s.saved_store_bytes)
+        adj[i] = _adjusted(adj[i], s.saved_load_bytes, 0.0)
+
+    per_stage = []
+    edges = []
+    skipped = []
+    saved_total = 0.0
+    total = 0.0
+    unfused = 0.0
+    seg_max = 0.0
+    for i, s in enumerate(stages):
+        est = estimate_feedforward(adj[i], hw, s.pipe)
+        per_stage.append((s.name, est))
+        unfused += estimate_feedforward(s.workload, hw, s.pipe).total_s
+        if i > 0:
+            prev = stages[i - 1]
+            saved = (s.saved_load_bytes + s.saved_store_bytes) \
+                if s.fused_with_prev else 0.0
+            saved_total += saved
+            edges.append(EdgeEstimate(
+                edge=f"{prev.name}->{s.name}",
+                mode="fused" if s.fused_with_prev else "staged",
+                hbm_bytes_saved=saved,
+                rationale=s.rationale,
+            ))
+            if not s.fused_with_prev and s.rationale:
+                skipped.append(f"{prev.name}->{s.name}: {s.rationale}")
+        if s.fused_with_prev:
+            # overlap with the running segment: the segment retires at the
+            # pace of its slowest member
+            seg_max = max(seg_max, est.total_s)
+        else:
+            total += seg_max
+            seg_max = est.total_s
+    total += seg_max
+    return GraphEstimate(
+        total_s=total,
+        unfused_s=unfused,
+        per_stage=tuple(per_stage),
+        edges=tuple(edges),
+        hbm_bytes_saved=saved_total,
+        skipped=tuple(skipped),
+    )

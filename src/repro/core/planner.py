@@ -15,7 +15,8 @@ from typing import Sequence, Tuple, Union
 
 import jax.numpy as jnp
 
-from repro.core.pipe import Pipe, required_depth, vmem_budget_ok
+from repro.core.pipe import DEFAULT_VMEM_BUDGET_BYTES, Pipe, \
+    required_depth, vmem_budget_ok
 from repro.core.pipeline_model import (
     HardwareModel,
     TPU_V5E,
@@ -66,7 +67,7 @@ def plan_pipe(
     stream_options: Sequence[int] = (1, 2, 4),
     depth_cap: int = 17,     # (cap-1) outstanding = burst-LSU parity
 
-    vmem_budget_bytes: int = 96 * 1024 * 1024,
+    vmem_budget_bytes: int = DEFAULT_VMEM_BUDGET_BYTES,
 ) -> Plan:
     """Pick (depth, streams) minimizing modeled time under the VMEM budget.
 
@@ -142,7 +143,7 @@ def planned_pipe(
     hw: HardwareModel = TPU_V5E,
     stream_options: Sequence[int] = (1, 2, 4),
     depth_cap: int = 17,
-    vmem_budget_bytes: int = 96 * 1024 * 1024,
+    vmem_budget_bytes: int = DEFAULT_VMEM_BUDGET_BYTES,
 ) -> Plan:
     """Memoized :func:`plan_pipe` for one kernel call site."""
     return _plan_cached(op, w, tuple(tile), jnp.dtype(dtype).name, hw,
@@ -209,6 +210,50 @@ def resolve_policy(
     if policy.mode == "baseline":
         depth = 1
     return depth, streams
+
+
+# -- multi-kernel graphs (repro.core.graph) ----------------------------------
+#
+# A fused graph runs several stream programs inside one pallas_call, so the
+# single-kernel VMEM budget must be *split* across the fused stages: each
+# node plans its pipes against its share, and the fuser re-checks the
+# combined footprint of a fused pair (producer rings + the in-VMEM
+# intermediate ring + consumer rings + scratch) before committing to fusion.
+
+
+def split_graph_budget(names: Sequence[str],
+                       vmem_budget_bytes: int = DEFAULT_VMEM_BUDGET_BYTES,
+                       ) -> "dict[str, int]":
+    """Split the VMEM budget evenly across a graph's nodes.
+
+    Even split is deliberate: the budget bounds the *worst case* where every
+    adjacent edge fuses and all stages cohabit one kernel. A node that plans
+    under its share is guaranteed composable into any fused segment.
+    """
+    if not names:
+        return {}
+    share = vmem_budget_bytes // len(names)
+    return {n: share for n in names}
+
+
+def check_fused_vmem(edge: str, parts: "dict[str, int]",
+                     vmem_budget_bytes: int) -> Tuple[bool, str]:
+    """Check one fused pair's combined VMEM footprint against its budget.
+
+    ``parts`` itemizes the footprint (producer rings, intermediate ring,
+    consumer rings, scratch). Returns (feasible, rationale-line); the
+    caller turns an infeasible *requested* fusion into a :class:`PlanError`
+    with this line in ``rejected`` and an auto fusion into a staged
+    fallback with the line as the edge rationale.
+    """
+    del edge    # callers prefix the edge label when surfacing the line
+    total = sum(parts.values())
+    detail = " + ".join(f"{k}={v}B" for k, v in parts.items())
+    if total <= vmem_budget_bytes:
+        return True, (f"fused vmem {total}B ({detail}) fits the "
+                      f"{vmem_budget_bytes}B fused-stage budget")
+    return False, (f"fused vmem {total}B ({detail}) exceeds the "
+                   f"{vmem_budget_bytes}B fused-stage budget")
 
 
 def plan_cache_info():

@@ -229,21 +229,40 @@ class Stream:
     state — the feed-forward restriction, enforced structurally: slicers
     receive a :class:`ProducerCtx` that exposes ``ref()`` only, no scratch
     or output.
+
+    ``index`` optionally *declares* the stream's block schedule for the
+    graph fuser (:mod:`repro.core.graph`): ``index(word) -> block-index
+    tuple`` names which tile of the operand word ``word`` consumes, in the
+    operand's own ``tile`` blocking. It must be a pure function of the word
+    index (valid on Python ints for legality analysis and on traced ints
+    inside the kernel) and must agree with ``slicer`` — the slicer of a
+    declared stream is ``ref.at[index(word) * tile]``. Streams whose
+    addresses are data-dependent (gathers) cannot declare one; an edge into
+    such a stream always lowers staged.
     """
 
     name: str
     spec: Pipe
     slicer: Callable[..., Any]
     gather: bool = False
+    index: Optional[Callable[..., Tuple[int, ...]]] = None
 
 
 @dataclasses.dataclass(frozen=True)
 class BlockIn:
-    """A Pallas-blocked (non-streamed) input operand."""
+    """A Pallas-blocked (non-streamed) input operand.
+
+    ``dtype`` declares the operand element type. Plain ``compile_program``
+    lowering never needs it (Pallas blocks carry the operand's own dtype),
+    but the fused graph lowering (:mod:`repro.core.graph`) promotes producer
+    BlockIns to ring-pipe streams, and a ring buffer must be sized at trace
+    time — so the declaration carries the dtype.
+    """
 
     name: str
     block: Tuple[int, ...]
     index_map: Callable[..., Any]
+    dtype: Any = jnp.float32
 
 
 @dataclasses.dataclass(frozen=True)
@@ -263,6 +282,31 @@ class ScratchSpec:
 
 
 InputSpec = Union[Stream, BlockIn, ScalarIn]
+
+
+class ScheduleOpaqueError(ValueError):
+    """A block schedule could not be evaluated statically.
+
+    Raised by :meth:`StreamProgram.out_schedule` /
+    :meth:`StreamProgram.stream_schedule` when the requested schedule is
+    data-dependent (an index map that reads scalar-prefetch operands, or a
+    stream with no declared ``index``). The graph fuser treats this as
+    "not fusible along this edge" and falls back to staged lowering — it is
+    a rationale, never a hard failure.
+    """
+
+
+class _OpaqueScalar:
+    """Stand-in for a scalar-prefetch ref during static schedule evaluation:
+    any attempt to *read* it proves the schedule is data-dependent."""
+
+    def _opaque(self, *_, **__):
+        raise ScheduleOpaqueError(
+            "schedule depends on a scalar-prefetch operand (data-dependent)")
+
+    __getitem__ = __getattr__ = __index__ = __int__ = _opaque
+    __add__ = __radd__ = __mul__ = __rmul__ = _opaque
+    __floordiv__ = __rfloordiv__ = __mod__ = __rmod__ = _opaque
 
 
 class ProducerCtx:
@@ -370,6 +414,60 @@ class StreamProgram:
     def vmem_bytes(self) -> int:
         """Ring-buffer VMEM of all pipe edges (the BRAM analogue)."""
         return sum(s.spec.vmem_bytes for s in self.streams)
+
+    def stream(self, name: str) -> Stream:
+        for s in self.streams:
+            if s.name == name:
+                return s
+        raise KeyError(f"{self.name}: no stream {name!r}; streams: "
+                       f"{[s.name for s in self.streams]}")
+
+    # -- static block schedules (the graph fuser's legality surface) --------
+
+    def out_schedule(self) -> Tuple[Tuple[int, ...], ...]:
+        """The output block schedule: ``out_index_map`` evaluated per word.
+
+        Returns one block-index tuple per grid word — the write schedule the
+        graph fuser matches against a downstream consumer's stream schedule
+        (:mod:`repro.core.graph`). Raises :class:`ScheduleOpaqueError` when
+        the map reads scalar-prefetch operands (data-dependent output
+        placement): such a program cannot be a fused producer.
+        """
+        dummies = (_OpaqueScalar(),) * self.num_scalar_prefetch
+        sched = []
+        for g in range(self.n_words):
+            try:
+                idx = self.out_index_map(g, *dummies)
+                sched.append(tuple(int(i) for i in idx))
+            except ScheduleOpaqueError:
+                raise
+            except Exception as e:   # noqa: BLE001 — map not int-evaluable
+                raise ScheduleOpaqueError(
+                    f"{self.name}: out_index_map is not statically "
+                    f"evaluable at word {g}: {type(e).__name__}: {e}") from e
+        return tuple(sched)
+
+    def stream_schedule(self, name: str) -> Tuple[Tuple[int, ...], ...]:
+        """Stream ``name``'s declared block schedule, one tuple per word.
+
+        Requires the stream to declare :attr:`Stream.index`; raises
+        :class:`ScheduleOpaqueError` otherwise (irregular/gather streams) —
+        the fuser's staged-fallback signal.
+        """
+        st = self.stream(name)
+        if st.index is None:
+            raise ScheduleOpaqueError(
+                f"{self.name}: stream {name!r} declares no block schedule "
+                f"(Stream.index); its addresses are data-dependent")
+        try:
+            return tuple(tuple(int(i) for i in st.index(g))
+                         for g in range(self.n_words))
+        except ScheduleOpaqueError:
+            raise
+        except Exception as e:   # noqa: BLE001
+            raise ScheduleOpaqueError(
+                f"{self.name}: stream {name!r} index is not statically "
+                f"evaluable: {type(e).__name__}: {e}") from e
 
 
 # ---------------------------------------------------------------------------

@@ -99,13 +99,20 @@ def build_program(bh: int, s: int, skv: int, d: int, *,
             ctx.out[0] = (acc[...] / l).astype(out_dtype)
 
     q_index_map = lambda g: (g // (nkv * nq), (g // nkv) % nq, 0)
+    # k/v block schedule in the pipe's own (block_kv, d) blocking of the
+    # row-flattened [BKVH*Skv, d] operand view (an upstream producer edge
+    # must declare reshape=(bkvh*skv, d)); matches kv_slicer exactly
+    kv_index = lambda w: (((w // (nkv * nq)) // kv_groups) * nkv + w % nkv,
+                          0)
     return StreamProgram(
         name="ff_attention",
         n_words=bh * nq * nkv,
         inputs=(
-            BlockIn("q", (1, block_q, d), q_index_map),
-            Stream("k", k_spec, kv_slicer("k")),
-            Stream("v", v_spec, kv_slicer("v")),
+            # dtype on the BlockIn sizes its ring when a fused graph
+            # promotes q to a stream; index declares the k/v schedules
+            BlockIn("q", (1, block_q, d), q_index_map, dtype=dtype),
+            Stream("k", k_spec, kv_slicer("k"), index=kv_index),
+            Stream("v", v_spec, kv_slicer("v"), index=kv_index),
         ),
         consumer=consumer,
         out_shape=(bh, s, d),

@@ -144,11 +144,15 @@ def build_program(bh: int, s: int, n: int, p: int, *,
         name="ff_chunk_scan",
         n_words=bh * nc,
         inputs=(
-            Stream("q", q_spec, slicer("q")),
-            Stream("k", k_spec, slicer("k")),
-            Stream("v", v_spec, slicer("v")),
-            Stream("w", w_spec, slicer("w")),
-            BlockIn("u", (1, n), lambda g: (g // nc, 0)),
+            # all four streams walk (bh, chunk)-major; the index declares
+            # that schedule in each pipe's (chunk, cols) blocking of the
+            # row-flattened [BH*S, cols] operand view (a fused producer
+            # edge declares reshape=(bh*s, cols)), matching the slicer
+            Stream("q", q_spec, slicer("q"), index=lambda w: (w, 0)),
+            Stream("k", k_spec, slicer("k"), index=lambda w: (w, 0)),
+            Stream("v", v_spec, slicer("v"), index=lambda w: (w, 0)),
+            Stream("w", w_spec, slicer("w"), index=lambda w: (w, 0)),
+            BlockIn("u", (1, n), lambda g: (g // nc, 0), dtype=dtype),
         ),
         consumer=consumer,
         out_shape=(bh, s, p),

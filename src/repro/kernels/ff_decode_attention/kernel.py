@@ -101,9 +101,13 @@ def build_program(b: int, kvh: int, g_pad: int, s: int, d: int, *,
         n_words=b * kvh * nkv,
         inputs=(
             ScalarIn("lengths"),
-            BlockIn("q", (1, 1, g_pad, d), q_index_map),
-            Stream("k", k_spec, kv_slicer("k")),
-            Stream("v", v_spec, kv_slicer("v")),
+            BlockIn("q", (1, 1, g_pad, d), q_index_map, dtype=dtype),
+            # kv block schedule in the pipe's (block_kv, d) blocking of the
+            # row-flattened [B*KVH*S, d] cache view (a fused producer edge
+            # declares reshape=(b*kvh*s, d)): the word order is exactly
+            # (b, h, kj)-major, so word w reads row block w
+            Stream("k", k_spec, kv_slicer("k"), index=lambda w: (w, 0)),
+            Stream("v", v_spec, kv_slicer("v"), index=lambda w: (w, 0)),
         ),
         consumer=consumer,
         out_shape=(b, kvh, g_pad, d),

@@ -69,10 +69,15 @@ def build_program(m: int, n: int, k: int, *,
         name="ff_matmul",
         n_words=nm * nn * nk,
         inputs=(
+            # index declares each stream's block schedule (the address
+            # stream as pure int arithmetic) so the graph fuser can match
+            # an upstream producer's output schedule against it
             Stream("a", Pipe(tile=(bm, bk), dtype=dtype, depth=depth,
-                             streams=streams), a_slicer),
+                             streams=streams), a_slicer,
+                   index=lambda w: (w // (nk * nn), w % nk)),
             Stream("b", Pipe(tile=(bk, bn), dtype=b_dtype, depth=depth,
-                             streams=streams), b_slicer),
+                             streams=streams), b_slicer,
+                   index=lambda w: (w % nk, (w // nk) % nn)),
         ),
         consumer=consumer,
         out_shape=(m, n),

@@ -384,3 +384,110 @@ def chunked_unembed_loss(x: jnp.ndarray, table: jnp.ndarray,
             piece = piece + z_loss * lse ** 2
         total = total + jnp.sum(piece)
     return total / (b * s)
+
+
+# ---------------------------------------------------------------------------
+# StreamGraph workload: attention -> out-projection
+# ---------------------------------------------------------------------------
+#
+# The transformer block's hottest fusion opportunity above single kernels:
+# flash attention writes [BH, S, D] q-blocks in q-major order, and the out-
+# projection matmul streams exactly those (block_q, d) tiles as its A
+# operand — so the attention output can live in a VMEM ring inside one
+# fused pallas_call instead of round-tripping HBM between two kernels
+# (repro.core.graph decides per edge; a mismatched block_q stages instead).
+
+
+def build_attention_proj_graph(*, bh: int = 2, s: int = 256, d: int = 64,
+                               d_out: int = 256, causal: bool = True,
+                               dtype=jnp.float32, depth: int = 2,
+                               streams: int = 1, block_q: int = 128):
+    """Declare the attention→out-projection StreamGraph at one shape point.
+
+    The projection's M tile is pinned to ``block_q`` so the edge is fusable
+    when the attention output schedule lines up; ``block_q`` is the joint
+    tuner's shared-tile axis.
+    """
+    from repro.core.graph import GraphEdge, GraphNode, StreamGraph
+    from repro.kernels.ff_attention.kernel import build_program as attn_prog
+    from repro.kernels.ff_attention.ops import attention_workload
+    from repro.kernels.ff_matmul.kernel import build_program as matmul_prog
+    from repro.kernels.ff_matmul.ops import matmul_workload
+
+    block = (block_q, min(128, d_out), d)
+    attn = attn_prog(bh, s, s, d, block_q=block_q, block_kv=128,
+                     causal=causal, dtype=dtype, depth=depth, streams=streams)
+    proj = matmul_prog(bh * s, d_out, d, block=block, dtype=dtype,
+                       depth=depth, streams=streams)
+    w_a, t_a = attention_workload(bh, s, d, causal=causal, block_q=block_q,
+                                  dtype=dtype)
+    w_p, t_p = matmul_workload(bh * s, d_out, d, block, dtype)
+    return StreamGraph(
+        name="attention_proj",
+        nodes=(
+            GraphNode("attn", attn, workload=w_a, plan_tile=t_a),
+            GraphNode("proj", proj, workload=w_p, plan_tile=t_p),
+        ),
+        edges=(
+            GraphEdge("attn", "proj", "a", reshape=(bh * s, d)),
+        ),
+    )
+
+
+def _attention_proj_inputs(key):
+    """Operands in CompiledGraph.arg_names order:
+    (attn.q, attn.k, attn.v, proj.b)."""
+    # d_out = 2 N tiles: the projection re-reads each attention block
+    # once per N tile, so the fused ring saves the re-streams too
+    bh, s, d, d_out = 2, 256, 64, 256
+    q = 0.3 * jax.random.normal(key, (bh, s, d), jnp.float32)
+    k = 0.3 * jax.random.normal(jax.random.fold_in(key, 1), (bh, s, d),
+                                jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (bh, s, d),
+                          jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(key, 3), (d, d_out),
+                          jnp.float32) / jnp.sqrt(d)
+    return (q, k, v, w)
+
+
+def _attention_proj_ref(q, k, v, w):
+    bh, s, d = q.shape
+    scores = jnp.einsum("bsd,btd->bst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(d)
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    scores = jnp.where(mask[None], scores, -1e30)
+    attn = jnp.einsum("bst,btd->bsd", jax.nn.softmax(scores, axis=-1),
+                      v.astype(jnp.float32))
+    return (attn.reshape(bh * s, d) @ w.astype(jnp.float32)).astype(q.dtype)
+
+
+def _attention_proj_unfused(q, k, v, w):
+    """Attention then projection as two separate repro.ops calls — the
+    [BH, S, D] intermediate round-trips HBM (the BENCH_graph baseline).
+    The projection is pinned to the graph's tile so the comparison
+    isolates the lowering, not the tiling."""
+    import repro
+
+    bh, s, d = q.shape
+    attn = repro.ops.attention(q, k, v, causal=True)
+    return repro.ops.matmul(attn.reshape(bh * s, d), w,
+                            block=(128, 128, d))
+
+
+def _register_attention_proj_graph():
+    from repro.kernels.registry import register_graph
+
+    register_graph(
+        name="attention_proj",
+        build=build_attention_proj_graph,
+        make_inputs=_attention_proj_inputs,
+        ref=_attention_proj_ref,
+        unfused=_attention_proj_unfused,
+        tile_options=({"block_q": 64},),
+        tol=5e-4,
+        doc="flash attention -> out-projection matmul; the [BH,S,D] "
+            "intermediate stays in a VMEM ring when block_q tiles match",
+    )
+
+
+_register_attention_proj_graph()

@@ -200,3 +200,118 @@ def moe_ffn_apply(cfg: ArchConfig, p, x) -> Tuple[jnp.ndarray, jnp.ndarray]:
     if cfg.n_shared_experts:
         out = out + L.mlp_apply(p["shared"], x, "swiglu")
     return out, aux.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# StreamGraph workload: dispatch → expert-matmul → combine
+# ---------------------------------------------------------------------------
+#
+# The kernel-level core of the MoE layer above, as a registered multi-kernel
+# pipe graph (repro.core.graph): `dispatch` gathers the routed token rows
+# (the paper's irregular-access pattern, ff_gather), `expert` is the regular
+# expert FFN matmul over the dispatched buffer, `combine` gathers the expert
+# outputs back into token order (the un-permute; routing-prob weighting
+# stays in XLA where the layer applies it). The dispatch→expert edge is the
+# showcase fusion: the gather's 8·streams-row bundles are exactly the
+# matmul's A tiles, so the dispatched buffer never touches HBM — while
+# expert→combine ends at an irregular gather stream (data-dependent
+# addresses) and stages through HBM by construction, demonstrating the
+# per-edge decision.
+
+
+def build_moe_graph(*, t_tokens: int = 96, n_dispatch: int = 64,
+                    d_model: int = 128, d_ff: int = 256, t_out: int = 64,
+                    dtype=jnp.float32, depth: int = 2, streams: int = 1,
+                    bn: int = 128):
+    """Declare the MoE dispatch→expert-matmul→combine StreamGraph.
+
+    ``n_dispatch`` (dispatched rows) and ``t_out`` (combined rows) must be
+    multiples of the gather row bundle ``8 * streams``; the expert matmul's
+    M tile is pinned to that bundle so the dispatch→expert edge is fusable
+    by construction. ``bn`` is the expert matmul's N tile (the joint
+    tuner's shared-tile axis).
+    """
+    from repro.core.graph import GraphEdge, GraphNode, StreamGraph
+    from repro.kernels.ff_gather.kernel import _ROWS
+    from repro.kernels.ff_gather.kernel import build_program as gather_prog
+    from repro.kernels.ff_gather.ops import gather_workload
+    from repro.kernels.ff_matmul.kernel import build_program as matmul_prog
+    from repro.kernels.ff_matmul.ops import matmul_workload
+
+    rpw = _ROWS * streams
+    if n_dispatch % rpw or t_out % rpw:
+        raise ValueError(f"n_dispatch={n_dispatch} / t_out={t_out} must be "
+                         f"multiples of the {rpw}-row gather bundle")
+    block = (rpw, min(bn, d_ff), d_model)
+    dispatch = gather_prog(n_dispatch, d_model, dtype=dtype, depth=depth,
+                           streams=streams)
+    expert = matmul_prog(n_dispatch, d_ff, d_model, block=block, dtype=dtype,
+                         depth=depth, streams=streams)
+    combine = gather_prog(t_out, d_ff, dtype=dtype, depth=depth,
+                          streams=streams)
+    w_d, t_d = gather_workload(n_dispatch, d_model, dtype=dtype)
+    w_e, t_e = matmul_workload(n_dispatch, d_ff, d_model, block, dtype)
+    w_c, t_c = gather_workload(t_out, d_ff, dtype=dtype)
+    return StreamGraph(
+        name="moe_dispatch_ffn",
+        nodes=(
+            GraphNode("dispatch", dispatch, workload=w_d, plan_tile=t_d),
+            GraphNode("expert", expert, workload=w_e, plan_tile=t_e),
+            GraphNode("combine", combine, workload=w_c, plan_tile=t_c),
+        ),
+        edges=(
+            GraphEdge("dispatch", "expert", "a"),
+            GraphEdge("expert", "combine", "table"),
+        ),
+    )
+
+
+def _moe_graph_inputs(key):
+    """Operands in CompiledGraph.arg_names order:
+    (dispatch.idx, dispatch.table, expert.b, combine.idx)."""
+    # d_ff = 2 N tiles: the expert matmul re-reads each dispatched A tile
+    # once per N tile, so the fused ring saves the re-streams too
+    t, n, d, f, t_out = 96, 64, 128, 256, 64
+    tokens = jax.random.normal(key, (t, d), jnp.float32)
+    idx = jax.random.randint(jax.random.fold_in(key, 1), (n,), 0, t,
+                             dtype=jnp.int32)
+    w1 = jax.random.normal(jax.random.fold_in(key, 2), (d, f),
+                           jnp.float32) / jnp.sqrt(d)
+    comb = jax.random.randint(jax.random.fold_in(key, 3), (t_out,), 0, n,
+                              dtype=jnp.int32)
+    return (idx, tokens, w1, comb)
+
+
+def _moe_graph_ref(idx, tokens, w1, comb):
+    return (tokens[idx] @ w1)[comb]
+
+
+def _moe_graph_unfused(idx, tokens, w1, comb):
+    """The same computation as three separate repro.ops calls — every
+    intermediate round-trips HBM (the BENCH_graph baseline). The expert
+    matmul is pinned to the graph's 8-row tile so the comparison isolates
+    the lowering (calls + HBM handoffs), not the tiling."""
+    import repro
+
+    h = repro.ops.gather(tokens, idx)
+    y = repro.ops.matmul(h, w1, block=(8, 128, 128))
+    return repro.ops.gather(y, comb)
+
+
+def _register_moe_graph():
+    from repro.kernels.registry import register_graph
+
+    register_graph(
+        name="moe_dispatch_ffn",
+        build=build_moe_graph,
+        make_inputs=_moe_graph_inputs,
+        ref=_moe_graph_ref,
+        unfused=_moe_graph_unfused,
+        tile_options=({"bn": 64},),
+        tol=5e-4,
+        doc="MoE dispatch (irregular gather) -> expert matmul -> combine; "
+            "dispatch->expert fuses, expert->combine stages (gather edge)",
+    )
+
+
+_register_moe_graph()

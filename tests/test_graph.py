@@ -1,0 +1,312 @@
+"""StreamGraph subsystem tests (repro.core.graph).
+
+Covers the acceptance surface of the multi-kernel graph layer: fused ==
+staged == XLA-reference numerics for both shipped graphs, fusion-legality
+rejection (mismatched block schedules stage, they do not error), cycle
+detection, VMEM-split feasibility (degrade + staged fallback on "auto",
+PlanError on requested fusion), and the graph-keyed autotune cache.
+"""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import autotune
+from repro.core.graph import (
+    CompiledGraph,
+    GraphEdge,
+    GraphNode,
+    StreamGraph,
+    check_fusion,
+    compile_graph,
+    graph_signature,
+    graph_workload,
+)
+from repro.core.pipeline_model import TPU_V5E, estimate_graph
+from repro.core.planner import PlanError
+from repro.core.program import PipePolicy, ScheduleOpaqueError
+from repro.kernels import registry as R
+from repro.kernels.ff_gather.kernel import build_program as gather_program
+from repro.kernels.ff_matmul.kernel import build_program as matmul_program
+
+
+def _toy_graph(block_m=8, prefer="auto"):
+    """gather(64 rows of a [96, 128] table) -> matmul(@ [128, 128])."""
+    disp = gather_program(64, 128, dtype=jnp.float32, depth=2, streams=1)
+    mm = matmul_program(64, 128, 128, block=(block_m, 128, 128),
+                        dtype=jnp.float32, depth=2, streams=1)
+    return StreamGraph(
+        "toy", (GraphNode("d", disp), GraphNode("e", mm)),
+        (GraphEdge("d", "e", "a", prefer=prefer),))
+
+
+def _toy_inputs(key=None):
+    key = key or jax.random.key(0)
+    tab = jax.random.normal(key, (96, 128), jnp.float32)
+    idx = jax.random.randint(jax.random.fold_in(key, 1), (64,), 0, 96,
+                             dtype=jnp.int32)
+    w = jax.random.normal(jax.random.fold_in(key, 2), (128, 128),
+                          jnp.float32) / jnp.sqrt(128.0)
+    return idx, tab, w
+
+
+# ---------------------------------------------------------------------------
+# Shipped graphs: fused == staged == XLA reference
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ["moe_dispatch_ffn", "attention_proj"])
+def test_shipped_graph_fused_matches_reference(name):
+    spec = R.get_graph(name)
+    out, ref, err, compiled = R.run_graph_smoke(spec)
+    assert isinstance(compiled, CompiledGraph)
+    assert err <= spec.tol, (name, err)
+    assert any(e.mode == "fused" for e in compiled.plan.edges), \
+        [(e.edge.label, e.rationale) for e in compiled.plan.edges]
+
+
+@pytest.mark.parametrize("name", ["moe_dispatch_ffn", "attention_proj"])
+def test_shipped_graph_staged_matches_fused(name):
+    spec = R.get_graph(name)
+    out_f, _, err_f, _ = R.run_graph_smoke(spec)
+    out_s, _, err_s, staged = R.run_graph_smoke(spec, prefer="staged")
+    assert err_f <= spec.tol and err_s <= spec.tol
+    assert all(e.mode == "staged" for e in staged.plan.edges)
+    np.testing.assert_allclose(np.float32(out_f), np.float32(out_s),
+                               atol=2 * spec.tol)
+
+
+def test_moe_fused_edge_is_single_pallas_call():
+    """The acceptance check: dispatch->matmul collapses into one fused
+    unit (one pallas_call for two nodes), combine stays its own call."""
+    spec = R.get_graph("moe_dispatch_ffn")
+    _, _, _, compiled = R.run_graph_smoke(spec)
+    kinds = [(u.kind, u.out_node) for u in compiled.units]
+    assert kinds == [("fused", "expert"), ("node", "combine")], kinds
+    plan = {e.edge.label: e.mode for e in compiled.plan.edges}
+    assert plan == {"dispatch->expert": "fused",
+                    "expert->combine": "staged"}
+
+
+def test_moe_staged_is_three_pallas_calls():
+    spec = R.get_graph("moe_dispatch_ffn")
+    _, _, _, compiled = R.run_graph_smoke(spec, prefer="staged")
+    assert [u.kind for u in compiled.units] == ["node"] * 3
+
+
+def test_gather_edge_never_fuses():
+    """The combine's table stream is an irregular gather: data-dependent
+    addresses, no declared schedule — the edge must stage with rationale."""
+    spec = R.get_graph("moe_dispatch_ffn")
+    _, _, _, compiled = R.run_graph_smoke(spec)
+    staged = [e for e in compiled.plan.edges if e.mode == "staged"]
+    assert len(staged) == 1
+    assert "gather" in staged[0].rationale
+
+
+# ---------------------------------------------------------------------------
+# Legality / schedule exposure
+# ---------------------------------------------------------------------------
+
+
+def test_out_schedule_runs():
+    mm = matmul_program(256, 256, 256, block=(128, 128, 128))
+    sched = mm.out_schedule()
+    assert len(sched) == mm.n_words
+    # k-innermost word order: each (mi, ni) block written over nk words
+    assert sched[0] == sched[1] == (0, 0)
+    assert sched[2] == sched[3] == (0, 1)
+
+
+def test_stream_schedule_requires_declaration():
+    disp = gather_program(64, 128)
+    with pytest.raises(ScheduleOpaqueError):
+        disp.stream_schedule("table")    # gather: data-dependent
+
+
+def test_mismatched_block_schedule_stages_not_errors():
+    g = _toy_graph(block_m=16)    # 16-row A tile vs 8-row gather bundle
+    compiled = compile_graph(g)
+    (plan,) = compiled.plan.edges
+    assert plan.mode == "staged"
+    assert "mismatched block schedules" in plan.rationale
+    idx, tab, w = _toy_inputs()
+    np.testing.assert_allclose(np.asarray(compiled(idx, tab, w)),
+                               np.asarray(tab[idx] @ w), atol=1e-4)
+
+
+def test_forced_fusion_of_illegal_edge_raises_plan_error():
+    g = _toy_graph(block_m=16, prefer="fused")
+    with pytest.raises(PlanError) as ei:
+        compile_graph(g)
+    assert "mismatched block schedules" in str(ei.value)
+
+
+def test_check_fusion_reports_geometry():
+    disp = gather_program(64, 128)
+    mm = matmul_program(64, 128, 128, block=(8, 128, 128))
+    rep = check_fusion(disp, mm, GraphEdge("d", "e", "a"))
+    assert rep.ok
+    assert rep.n_blocks == 8 and rep.wpb == 1
+    assert rep.ord_seq == tuple(range(8))
+
+
+# ---------------------------------------------------------------------------
+# Graph validation
+# ---------------------------------------------------------------------------
+
+
+def test_cycle_detection():
+    disp = gather_program(64, 128)
+    mm = matmul_program(64, 128, 128, block=(8, 128, 128))
+    with pytest.raises(ValueError, match="cycle"):
+        StreamGraph("cyc", (GraphNode("d", disp), GraphNode("e", mm)),
+                    (GraphEdge("d", "e", "a"),
+                     GraphEdge("e", "d", "table")))
+
+
+def test_edge_must_feed_a_stream():
+    disp = gather_program(64, 128)
+    mm = matmul_program(64, 128, 128, block=(8, 128, 128))
+    with pytest.raises(ValueError, match="Stream input"):
+        StreamGraph("bad", (GraphNode("d", disp), GraphNode("e", mm)),
+                    (GraphEdge("d", "e", "nope"),))
+
+
+def test_input_fed_twice_rejected():
+    disp = gather_program(64, 128)
+    disp2 = gather_program(64, 128)
+    mm = matmul_program(64, 128, 128, block=(8, 128, 128))
+    with pytest.raises(ValueError, match="more than one edge"):
+        StreamGraph("bad", (GraphNode("d", disp), GraphNode("d2", disp2),
+                            GraphNode("e", mm)),
+                    (GraphEdge("d", "e", "a"), GraphEdge("d2", "e", "a")))
+
+
+def test_bad_reshape_rejected():
+    disp = gather_program(64, 128)
+    mm = matmul_program(64, 128, 128, block=(8, 128, 128))
+    with pytest.raises(ValueError, match="element count"):
+        StreamGraph("bad", (GraphNode("d", disp), GraphNode("e", mm)),
+                    (GraphEdge("d", "e", "a", reshape=(3, 5)),))
+
+
+# ---------------------------------------------------------------------------
+# VMEM-split feasibility
+# ---------------------------------------------------------------------------
+
+
+def test_vmem_split_infeasible_fusion_stages_on_auto():
+    g = _toy_graph()
+    compiled = compile_graph(g, vmem_budget_bytes=64 * 1024)
+    (plan,) = compiled.plan.edges
+    assert plan.mode == "staged"
+    assert "exceeds" in plan.rationale and "budget" in plan.rationale
+    idx, tab, w = _toy_inputs()
+    np.testing.assert_allclose(np.asarray(compiled(idx, tab, w)),
+                               np.asarray(tab[idx] @ w), atol=1e-4)
+
+
+def test_vmem_split_infeasible_forced_fusion_raises():
+    g = _toy_graph(prefer="fused")
+    with pytest.raises(PlanError) as ei:
+        compile_graph(g, vmem_budget_bytes=64 * 1024)
+    assert "exceeds" in str(ei.value)
+    assert ei.value.rejected    # per-edge rationale attached
+
+
+def test_budget_split_evenly_across_nodes():
+    g = _toy_graph()
+    compiled = compile_graph(g, vmem_budget_bytes=1 << 20)
+    assert compiled.plan.budgets == {"d": (1 << 20) // 2,
+                                    "e": (1 << 20) // 2}
+
+
+# ---------------------------------------------------------------------------
+# Estimate (MKPipe overlap + per-edge traffic)
+# ---------------------------------------------------------------------------
+
+
+def test_estimate_fused_beats_unfused_and_saves_bytes():
+    _, _, _, compiled = R.run_graph_smoke(R.get_graph("moe_dispatch_ffn"))
+    est = compiled.plan.estimate
+    assert est.total_s < est.unfused_s
+    assert est.hbm_bytes_saved > 0
+    modes = {e.edge: e.mode for e in est.edges}
+    assert modes["dispatch->expert"] == "fused"
+    assert modes["expert->combine"] == "staged"
+    # staged rejections surfaced like Plan.skipped
+    assert any("gather" in s for s in est.skipped)
+
+
+def test_estimate_graph_staged_everything_matches_sum():
+    _, _, _, compiled = R.run_graph_smoke(R.get_graph("moe_dispatch_ffn"),
+                                          prefer="staged")
+    est = compiled.plan.estimate
+    assert est.hbm_bytes_saved == 0
+    assert est.total_s == pytest.approx(est.unfused_s)
+
+
+# ---------------------------------------------------------------------------
+# Graph-keyed autotune
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_graph_autotune_cache_hit(tmp_path):
+    spec = R.get_graph("moe_dispatch_ffn")
+    args = spec.make_inputs(jax.random.key(0))
+    cache = os.path.join(tmp_path, "plans.json")
+    pol = PipePolicy(mode="autotune")
+    with autotune.tuning_config(cache_path=cache, warmup=0, iters=1,
+                                top_k=3):
+        out, _ = R.run_graph(spec, args, policy=pol)
+        rec = autotune.last_record(f"graph:{spec.name}")
+        assert rec is not None and rec["source"] == "measured"
+        # second resolve: served from the in-memory cache, no re-measure
+        R.run_graph(spec, args, policy=pol)
+        rec2 = autotune.last_record(f"graph:{spec.name}")
+        assert rec2["source"] == "memory"
+        # fresh process analogue: drop memory, reload from disk
+        autotune.tuned_cache_clear()
+        R.run_graph(spec, args, policy=pol)
+        rec3 = autotune.last_record(f"graph:{spec.name}")
+        assert rec3["source"] == "disk"
+    err = float(np.max(np.abs(np.float32(out)
+                              - np.float32(spec.ref(*args)))))
+    assert err <= spec.tol
+
+
+def test_graph_signature_distinguishes_graphs():
+    g1 = _toy_graph()
+    g2 = _toy_graph(block_m=16)
+    assert graph_signature(g1) != graph_signature(g2)
+    w, tile = graph_workload(g1)
+    assert w.n_words > 0 and tile == (8, 128)
+    assert not w.regular    # the gather node makes the graph irregular
+
+
+def test_estimate_graph_direct_api():
+    """estimate_graph is usable standalone (no compile needed)."""
+    from repro.core.pipe import Pipe
+    from repro.core.pipeline_model import GraphStage, Workload
+
+    w = Workload(n_words=64, word_bytes=4096.0, flops_per_word=1e6,
+                 store_bytes_per_word=4096.0)
+    pipe = Pipe(tile=(8, 128), depth=2)
+    fused = estimate_graph((
+        GraphStage("a", w, pipe),
+        GraphStage("b", w, pipe, fused_with_prev=True,
+                   saved_load_bytes=64 * 4096.0,
+                   saved_store_bytes=64 * 4096.0),
+    ), TPU_V5E)
+    staged = estimate_graph((
+        GraphStage("a", w, pipe),
+        GraphStage("b", w, pipe, rationale="why not"),
+    ), TPU_V5E)
+    assert fused.total_s < staged.total_s
+    assert fused.hbm_bytes_saved == 2 * 64 * 4096.0
+    assert staged.skipped == ("a->b: why not",)
