@@ -26,13 +26,24 @@ calls) — checks all three against the XLA oracle, and writes
 ``BENCH_graph.json``: wall ms per lowering, per-edge fused/staged
 decisions with rationales, and the modeled HBM bytes saved + estimate
 ``skipped`` lines (fusion rejections observable without rerunning).
-Composes with the other modes."""
+Composes with the other modes.
+
+``--sharded`` forces an 8-device host platform (``XLA_FLAGS`` set before
+jax imports), builds a 1-D data mesh, and runs every registry kernel that
+declares ``shard_dims`` under ``shard_map`` two ways: **local-planned**
+(the default mesh-aware path — each shard plans against its local word
+schedule with topology-keyed caches) and **global-planned** (depth/streams
+pinned to the plan the *global* workload would get — the pre-mesh
+behaviour every sharded path used to inherit). Both are parity-checked
+against the unsharded op and the XLA oracle, timed interleaved, and
+written to ``BENCH_sharded.json``. Composes with the other modes."""
 
 from __future__ import annotations
 
 import argparse
 import json
 import math
+import os
 import sys
 import time
 import traceback
@@ -318,6 +329,164 @@ def graph_bench(json_path: str = "BENCH_graph.json",
     print("graph ok")
 
 
+def sharded_bench(json_path: str = "BENCH_sharded.json", n_dev: int = 8,
+                  iters: int = 5) -> None:
+    """Bench every shardable registry kernel on the forced host mesh:
+    local-planned (mesh-aware) vs global-planned (pre-mesh sizing).
+
+    The local plan sizes pipes for the per-shard word schedule the kernel
+    actually streams inside ``shard_map``; the global plan is what the
+    same call site inherited before the runtime was mesh-aware — the
+    (depth, streams) of the *global* workload, pinned. Both lowerings are
+    parity-checked (sharded == unsharded == oracle) and timed interleaved
+    so load drift cannot fake an ordering."""
+    import jax
+    import numpy as np
+
+    from repro.core import MeshSpec, TPU_V5E, PipePolicy, planned_pipe
+    from repro.core.planner import last_plan
+    from repro.kernels.registry import all_kernels, run_sharded_smoke, \
+        shard_partition_specs, sharded_inputs
+    from repro.runtime import sharding as shlib
+    from repro.runtime.streams import shard_streams
+
+    if len(jax.devices()) < n_dev:
+        raise SystemExit(
+            f"--sharded needs {n_dev} host devices; run through "
+            f"benchmarks/run.py (it sets XLA_FLAGS before jax imports)")
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:n_dev]), ("data",))
+    results = []
+    failures = []
+    print(f"# sharded: registry kernels under shard_map on a "
+          f"{n_dev}-device data mesh (local- vs global-planned)")
+    with shlib.use_sharding(mesh):
+        for spec in all_kernels():
+            t0 = time.time()
+            if spec.shard_dims is None:
+                results.append({"kernel": spec.name, "ok": True,
+                                "skipped": "no shard_dims declared"})
+                print(f"sharded/{spec.name},nan,skipped_no_shard_dims")
+                continue
+            try:
+                # parity: sharded == unsharded == oracle (local-planned)
+                _, un, _, err_un, err_ref = run_sharded_smoke(spec, mesh)
+                ok = max(err_un, err_ref) <= max(spec.tol, 1e-6)
+
+                args, kw = sharded_inputs(spec, n_dev)
+                local_plan = last_plan(spec.name)
+                # the pre-mesh sizing: plan at the *global* workload shapes
+                dtype = kw.get("dtype", args[0].dtype)
+                w_g, tile_g = _global_workload(spec, args, kw)
+                g_plan = planned_pipe(f"{spec.name}/global", w_g, tile_g,
+                                      dtype, TPU_V5E)
+                # explicit per-call policies bypass the session policy the
+                # shard_streams wrapper installs — tag the mesh directly
+                mspec = MeshSpec.from_mesh(mesh)
+                pol_local = PipePolicy(mesh=mspec)
+                pol_global = PipePolicy(depth=g_plan.pipe.depth,
+                                        streams=g_plan.pipe.streams,
+                                        mesh=mspec)
+
+                in_specs, out_spec = shard_partition_specs(spec, args,
+                                                           un.ndim)
+                f_local = shard_streams(
+                    lambda *a: spec.op(*a, **kw, policy=pol_local),
+                    in_specs=in_specs, out_specs=out_spec, mesh=mesh)
+                f_global = shard_streams(
+                    lambda *a: spec.op(*a, **kw, policy=pol_global),
+                    in_specs=in_specs, out_specs=out_spec, mesh=mesh)
+                # the global-planned lowering is parity-checked too — a
+                # pinned depth/streams the local shard cannot honor must
+                # fail loudly, not ship as a silently wrong A/B baseline
+                err_global = float(np.max(np.abs(
+                    np.float32(f_global(*args)) - un)))
+                ok = ok and err_global <= max(spec.tol, 1e-6)
+                wall = _interleaved_ms(
+                    [("local", lambda: f_local(*args)),
+                     ("global", lambda: f_global(*args))],
+                    warmup=1, iters=iters)
+            except Exception:   # noqa: BLE001 — report all kernels
+                traceback.print_exc()
+                failures.append(spec.name)
+                results.append({"kernel": spec.name, "ok": False})
+                print(f"sharded/{spec.name},nan,FAIL")
+                continue
+            results.append({
+                "kernel": spec.name,
+                "alias": spec.alias,
+                "ok": bool(ok),
+                "devices": n_dev,
+                "mesh": f"data{n_dev}",
+                "max_abs_err": {"vs_unsharded": err_un, "vs_ref": err_ref,
+                                "global_planned_vs_unsharded": err_global},
+                "tol": spec.tol,
+                "wall_ms": {"local_planned": round(wall["local"], 3),
+                            "global_planned": round(wall["global"], 3)},
+                "plan": {
+                    "local": {"depth": local_plan.pipe.depth,
+                              "streams": local_plan.pipe.streams,
+                              "n_words": local_plan.workload.n_words,
+                              "mesh": local_plan.mesh.token},
+                    "global": {"depth": g_plan.pipe.depth,
+                               "streams": g_plan.pipe.streams,
+                               "n_words": w_g.n_words},
+                },
+                "bench_wall_ms": round((time.time() - t0) * 1e3, 1),
+            })
+            status = "ok" if ok else "FAIL"
+            print(f"sharded/{spec.name},{wall['local'] * 1e3:.0f},"
+                  f"local={wall['local']:.1f}ms_global={wall['global']:.1f}"
+                  f"ms_{status}")
+            if not ok:
+                failures.append(spec.name)
+    if json_path:
+        payload = {"suite": "sharded", "devices": n_dev, "kernels": results}
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"# wrote {json_path}")
+    if failures:
+        print(f"\nFAILED sharded kernels: {failures}", file=sys.stderr)
+        raise SystemExit(1)
+    print("sharded ok")
+
+
+def _global_workload(spec, args, kw):
+    """The Workload of the *global* (unsharded) operand shapes — what the
+    planner saw before the runtime became mesh-aware."""
+    builders = {
+        "ff_matmul": lambda: spec.workload(
+            args[0].shape[0], args[1].shape[1], args[0].shape[1],
+            kw.get("block", (128, 128, 128)), args[0].dtype),
+        "ff_attention": lambda: spec.workload(
+            args[0].shape[0], args[0].shape[1], args[0].shape[2],
+            causal=kw.get("causal", True),
+            block_q=kw.get("block_q", 128), block_kv=kw.get("block_kv", 128),
+            dtype=args[0].dtype),
+    }
+    if spec.name in builders:
+        return builders[spec.name]()
+    # generic fallback: synthesize from the program declaration scaled to
+    # the sharded operand count (words scale with the data-parallel rows)
+    from repro.core import program_workload
+    import dataclasses as _dc
+    prog = spec.program(depth=2, streams=1)
+    w = program_workload(prog)
+    return _dc.replace(w, n_words=w.n_words * _shard_factor(spec, args)), \
+        tuple(prog.streams[0].spec.tile)
+
+
+def _shard_factor(spec, args):
+    """How many per-shard smoke inputs were concatenated into ``args``."""
+    import jax
+
+    one, _ = spec.make_inputs(jax.random.key(0))
+    for a, ref, dim in zip(args, one, spec.shard_dims):
+        if dim is not None:
+            return max(a.shape[dim] // ref.shape[dim], 1)
+    return 1
+
+
 def full() -> None:
     from benchmarks import (fig4_m2c2, kernel_bench, roofline_report,
                             table2_feedforward, table3_microbench)
@@ -361,14 +530,31 @@ def main() -> None:
     parser.add_argument("--graph-json", default="BENCH_graph.json",
                         help="path for the graph JSON report "
                              "('' disables; default %(default)s)")
+    parser.add_argument("--sharded", action="store_true",
+                        help="run every shardable registry kernel under "
+                             "shard_map on a forced 8-device host mesh "
+                             "(local- vs global-planned) and write the "
+                             "sharded JSON report (composes with the "
+                             "other modes)")
+    parser.add_argument("--sharded-json", default="BENCH_sharded.json",
+                        help="path for the sharded JSON report "
+                             "('' disables; default %(default)s)")
     args = parser.parse_args()
+    if args.sharded and "jax" not in sys.modules:
+        # must land before the first jax import anywhere in the process
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = \
+                f"{flags} --xla_force_host_platform_device_count=8".strip()
     if args.smoke:
         smoke(args.json)
     if args.autotune:
         autotune_bench(args.autotune_json, args.budget_s)
     if args.graph:
         graph_bench(args.graph_json)
-    if not (args.smoke or args.autotune or args.graph):
+    if args.sharded:
+        sharded_bench(args.sharded_json)
+    if not (args.smoke or args.autotune or args.graph or args.sharded):
         full()
 
 

@@ -1,12 +1,51 @@
 """Batched serving example: continuous-batching greedy decode with separate
 prefill/decode programs (the feed-forward model at the serving level —
-prefill produces the KV-cache pipe, the decode loop consumes it).
+prefill produces the KV-cache pipe, the decode loop consumes it), running
+through the ``repro.ops`` stream kernels under a session policy.
+
+The serving driver installs the mesh-tagged session
+:class:`repro.PipePolicy` around the prefill/decode step bodies, so every
+attention call inside the model resolves its pipe plan under the serving
+mesh topology. This example shows the same two-layer API directly first —
+``repro.ops`` + ``with repro.policy(...)`` — then runs the full driver.
 
 Run:  PYTHONPATH=src python examples/serve_pipelined.py
 """
 
+import jax
+import jax.numpy as jnp
+
+import repro
 from repro.launch import serve as serve_mod
 
+
+def decode_attention_demo():
+    """One serving decode step through repro.ops: the KV cache is the pipe,
+    flash-decode is the consumer. Policies come from the session context —
+    no per-op mode/depth/streams keywords anywhere."""
+    key = jax.random.key(0)
+    b, h, d, s_kv = 2, 4, 64, 128
+    q = jax.random.normal(key, (b, h, d), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, h, s_kv, d),
+                          jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, h, s_kv, d),
+                          jnp.float32)
+    lengths = jnp.array([70, 128], jnp.int32)
+
+    with repro.policy(mode="ref"):                 # pure-XLA oracle
+        ref = repro.ops.decode_attention(q, k, v, lengths)
+    with repro.policy(mode="ff"):                  # planner-sized pipes
+        out = repro.ops.decode_attention(q, k, v, lengths)
+    err = float(jnp.max(jnp.abs(out - ref)))
+    print(f"decode_attention via repro.ops: max|err| vs oracle = {err:.2e}")
+
+
 if __name__ == "__main__":
-    serve_mod.main(["--arch", "qwen1_5_0p5b", "--smoke",
-                    "--requests", "8", "--prompt-len", "24", "--max-new", "12"])
+    decode_attention_demo()
+    # the full continuous-batching driver: --impl ff routes the model's
+    # attention call sites through the same repro.ops kernels, with the
+    # session policy installed (mesh-tagged) around the step bodies
+    with repro.policy(mode="ff"):
+        serve_mod.main(["--arch", "qwen1_5_0p5b", "--smoke", "--impl", "ff",
+                        "--policy-mode", "ff", "--requests", "4",
+                        "--prompt-len", "16", "--max-new", "8"])

@@ -12,6 +12,8 @@ Public API surface (lazily imported, so ``import repro`` stays cheap):
   repro.PipePolicy            the unified pipe policy dataclass
   repro.policy(...)           session-default policy context manager
   repro.current_policy()      the active policy
+  repro.MeshSpec              hashable mesh topology (PipePolicy.mesh /
+                              plan-cache key component)
 """
 
 __version__ = "0.1.0"
@@ -20,6 +22,7 @@ _LAZY = {
     "PipePolicy": ("repro.core.program", "PipePolicy"),
     "policy": ("repro.core.program", "policy"),
     "current_policy": ("repro.core.program", "current_policy"),
+    "MeshSpec": ("repro.core.meshspec", "MeshSpec"),
     "ops": ("repro.ops", None),
 }
 

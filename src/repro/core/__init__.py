@@ -27,6 +27,14 @@ from repro.core.emitter import (
     pad_to,
     release,
 )
+from repro.core.meshspec import (
+    MeshSpec,
+    SINGLE_DEVICE,
+    ambient_mesh,
+    localize_workload,
+    resolve_mesh,
+    resolve_sharding,
+)
 from repro.core.pipe import Pipe, required_depth, vmem_budget_ok
 from repro.core.feedforward import (
     Footprint,
@@ -50,6 +58,7 @@ from repro.core.pipeline_model import (
 from repro.core.planner import (
     Plan,
     PlanError,
+    last_plan,
     plan_cache_clear,
     plan_cache_info,
     plan_pipe,
@@ -94,6 +103,7 @@ from repro.core.program import (
     current_policy,
     make_entrypoint,
     policy,
+    program_workload,
     resolve_call_policy,
 )
 
@@ -119,6 +129,7 @@ __all__ = [
     "graph_workload",
     "resolve_graph",
     "HardwareModel",
+    "MeshSpec",
     "Pipe",
     "PipePolicy",
     "PipelineEstimate",
@@ -129,16 +140,20 @@ __all__ = [
     "ScratchSpec",
     "Stream",
     "StreamProgram",
+    "SINGLE_DEVICE",
     "StreamSpec",
     "TPU_V5E",
     "Workload",
     "acquire",
+    "ambient_mesh",
     "cdiv",
     "check_no_mlcd",
     "compile_program",
     "current_policy",
     "estimate_baseline",
     "estimate_feedforward",
+    "last_plan",
+    "localize_workload",
     "make_entrypoint",
     "measure",
     "pad_to",
@@ -147,13 +162,16 @@ __all__ = [
     "plan_pipe",
     "planned_pipe",
     "policy",
+    "program_workload",
     "reduction_stream",
     "release",
     "required_depth",
     "resolve_auto",
     "resolve_call",
     "resolve_call_policy",
+    "resolve_mesh",
     "resolve_policy",
+    "resolve_sharding",
     "run_multistream_reference",
     "run_reference",
     "speedup",

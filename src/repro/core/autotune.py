@@ -20,7 +20,10 @@ modeled and achieved memory bandwidth that opens up. This module closes it:
 * **Persistence**: selected plans land in an on-disk JSON cache
   (``~/.cache/repro/plans.json``, override with the ``REPRO_PLAN_CACHE``
   env var or :func:`tuning_config`), keyed by
-  ``(op, workload, dtype, hw, PLAN_FORMAT_VERSION)``. The disk cache fronts
+  ``(op, workload, dtype, hw, mesh topology, PLAN_FORMAT_VERSION)``. The
+  mesh component (axis names/sizes + device count, from ``policy.mesh`` or
+  the ambient ShardingContext) scopes tuned plans to the topology they
+  were measured under. The disk cache fronts
   an in-memory dict the same way the planner's ``lru_cache`` fronts
   ``plan_pipe``, so a fresh process reloads tuned plans without
   re-measuring.
@@ -50,6 +53,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import planner
+from repro.core.meshspec import MeshSpec, SINGLE_DEVICE, resolve_mesh
 from repro.core.pipe import DEFAULT_VMEM_BUDGET_BYTES, Pipe, \
     required_depth, vmem_budget_ok
 from repro.core.pipeline_model import estimate_feedforward
@@ -57,7 +61,10 @@ from repro.core.pipeline_model import estimate_feedforward
 # Bump whenever the record schema or the meaning of a key field changes:
 # stale on-disk plans from an older format are ignored (their keys embed the
 # version), and CI keys its plan-cache restore on this constant.
-PLAN_FORMAT_VERSION = 1
+# v2: keys gained the mesh-topology component (axis names/sizes + device
+# count) — plans tuned on one topology must never be served to another, so
+# every pre-mesh entry is invalidated wholesale.
+PLAN_FORMAT_VERSION = 2
 
 _DEFAULT_CACHE_PATH = os.path.join("~", ".cache", "repro", "plans.json")
 _VMEM_BUDGET_BYTES = DEFAULT_VMEM_BUDGET_BYTES
@@ -141,15 +148,20 @@ _LAST: Dict[str, dict] = {}         # op -> last record resolved (for bench)
 _warned_fallback_ops = set()
 
 
-def plan_key(op: str, workload, dtype, hw, constraints: str = "") -> str:
-    """Cache key of one call site: (op, workload, dtype, hw, search
+def plan_key(op: str, workload, dtype, hw, constraints: str = "",
+             mesh: MeshSpec = SINGLE_DEVICE) -> str:
+    """Cache key of one call site: (op, workload, dtype, hw, mesh, search
     constraints, format). ``constraints`` carries everything that shapes
     the search or the measurement besides the workload — policy pins,
     interpret flag, kernel statics — so a cached plan is only served to
-    call sites it is actually valid for."""
+    call sites it is actually valid for. ``mesh`` is the call site's
+    topology (axis names/sizes + device count): a plan measured under one
+    mesh never leaks to another (or to single-device call sites)."""
     wl = json.dumps(dataclasses.asdict(workload), sort_keys=True)
     return (f"{op}|{hw.name}|{jnp.dtype(dtype).name}"
-            f"|fmt{PLAN_FORMAT_VERSION}|{constraints}|{wl}")
+            f"|fmt{PLAN_FORMAT_VERSION}"
+            f"|mesh{mesh.token}|dev{mesh.device_count}"
+            f"|{constraints}|{wl}")
 
 
 def _policy_constraints(policy, extra_key: str = "") -> str:
@@ -354,16 +366,17 @@ def _dedupe(cands):
 
 
 def _analytic_choice(op, policy, *, workload, tile, dtype,
-                     source: str) -> TunedChoice:
+                     source: str, mesh: MeshSpec = SINGLE_DEVICE,
+                     ) -> TunedChoice:
     # resolve_auto treats "measured" as "auto" (the documented analytic
     # approximation), so the policy can be handed over unchanged.
     depth, streams = planner.resolve_policy(op, policy, workload=workload,
-                                            tile=tile, dtype=dtype)
+                                            tile=tile, dtype=dtype, mesh=mesh)
     return TunedChoice({}, depth, streams, source)
 
 
 def _tune(op, policy, *, workload, tile, dtype, workload_fn, runner,
-          tile_options) -> Optional[dict]:
+          tile_options, mesh: MeshSpec = SINGLE_DEVICE) -> Optional[dict]:
     """Measure the pruned candidate set; return the tuned record or None
     if nothing could be measured."""
     cfg = current_tuning_config()
@@ -375,7 +388,8 @@ def _tune(op, policy, *, workload, tile, dtype, workload_fn, runner,
     # improve on it. Resolved through resolve_policy so policy-pinned ints
     # constrain the reference exactly like they constrain the search.
     depth_a, streams_a = planner.resolve_policy(
-        op, policy, workload=workload, tile=tuple(tile), dtype=dtype)
+        op, policy, workload=workload, tile=tuple(tile), dtype=dtype,
+        mesh=mesh)
     est_a = estimate_feedforward(
         workload, policy.hw,
         Pipe(tile=tuple(tile), dtype=jnp.dtype(dtype), depth=depth_a,
@@ -430,6 +444,8 @@ def _tune(op, policy, *, workload, tile, dtype, workload_fn, runner,
         "op": op,
         "hw": policy.hw.name,
         "dtype": jnp.dtype(dtype).name,
+        "mesh": mesh.token,
+        "devices": mesh.device_count,
         "workload": dataclasses.asdict(workload),
         "tile_kwargs": best["tile_kwargs"],
         "depth": best["depth"],
@@ -474,13 +490,14 @@ def resolve_call(op: str, policy, *, workload, tile, dtype,
     stream_options, interpret, tile-search on/off), so e.g. plans measured
     in interpret mode are never served to compiled-mode call sites.
     """
+    mesh = resolve_mesh(getattr(policy, "mesh", None))
     if not wants_measured(policy):
         depth, streams = planner.resolve_policy(
-            op, policy, workload=workload, tile=tile, dtype=dtype)
+            op, policy, workload=workload, tile=tile, dtype=dtype, mesh=mesh)
         return TunedChoice({}, depth, streams, "analytic")
 
     key = plan_key(op, workload, dtype, policy.hw,
-                   _policy_constraints(policy, extra_key))
+                   _policy_constraints(policy, extra_key), mesh=mesh)
     # the in-memory front is keyed per cache file, so redirecting the
     # plan cache (tuning_config / REPRO_PLAN_CACHE) mid-process never
     # serves plans from the previously selected file
@@ -504,17 +521,17 @@ def resolve_call(op: str, policy, *, workload, tile, dtype,
                     stacklevel=3)
             return _analytic_choice(op, policy, workload=workload,
                                     tile=tile, dtype=dtype,
-                                    source="analytic-fallback")
+                                    source="analytic-fallback", mesh=mesh)
         record = _tune(op, policy, workload=workload, tile=tile,
                        dtype=dtype, workload_fn=workload_fn, runner=runner,
-                       tile_options=tile_options)
+                       tile_options=tile_options, mesh=mesh)
         if record is None:    # every candidate failed to run
             warnings.warn(
                 f"{op}: no autotune candidate could be measured; using the "
                 f"analytic plan", RuntimeWarning, stacklevel=3)
             return _analytic_choice(op, policy, workload=workload,
                                     tile=tile, dtype=dtype,
-                                    source="analytic-fallback")
+                                    source="analytic-fallback", mesh=mesh)
         source = "measured"
         _MEM[mem_key] = record
         store_plan(key, record, path)

@@ -79,11 +79,14 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import planner
 from repro.core.emitter import GatherRingPipe, RingPipe, acquire, release
+from repro.core.meshspec import MeshSpec, SINGLE_DEVICE, localize_workload, \
+    resolve_sharding
 from repro.core.pipe import DEFAULT_VMEM_BUDGET_BYTES, Pipe
 from repro.core.pipeline_model import GraphStage, Workload, estimate_graph
 from repro.core.planner import PlanError
 from repro.core.program import BlockIn, ProducerCtx, ProgramCtx, ScalarIn, \
-    ScheduleOpaqueError, Stream, StreamProgram, compile_program
+    ScheduleOpaqueError, Stream, StreamProgram, _clamped_streams, \
+    compile_program, program_workload
 
 _VMEM_BUDGET_BYTES = DEFAULT_VMEM_BUDGET_BYTES
 
@@ -234,16 +237,7 @@ def node_workload(node: GraphNode) -> Workload:
     program's streams when the builder did not provide one)."""
     if node.workload is not None:
         return node.workload
-    p = node.program
-    store = (float(np.prod(p.out_shape))
-             * jnp.dtype(p.out_dtype).itemsize) / p.n_words
-    return Workload(
-        n_words=p.n_words,
-        word_bytes=float(sum(s.spec.word_bytes for s in p.streams)),
-        flops_per_word=0.0,
-        regular=not any(s.gather for s in p.streams),
-        store_bytes_per_word=store,
-    )
+    return program_workload(node.program)
 
 
 def _node_tile(node: GraphNode) -> Tuple[int, ...]:
@@ -463,13 +457,6 @@ def check_fusion(producer: StreamProgram, consumer: StreamProgram,
 # ---------------------------------------------------------------------------
 # Lowering helpers
 # ---------------------------------------------------------------------------
-
-
-def _clamped_streams(tile0: int, streams: int) -> int:
-    s = max(1, int(streams))
-    while s > 1 and tile0 % s:
-        s //= 2
-    return max(1, s)
 
 
 def _stream_overrides(program: StreamProgram, depth: int,
@@ -798,12 +785,16 @@ class CompiledGraph:
 
 
 def _resolve_node(graph: StreamGraph, node: GraphNode, policy,
-                  budget: int) -> Tuple[Workload, int, int]:
+                  budget: int, mesh: MeshSpec = SINGLE_DEVICE,
+                  shards: int = 1) -> Tuple[Workload, int, int]:
     """Per-node (depth, streams) under the node's split VMEM budget:
     explicit policy ints pass through; "auto"/"measured" resolve through
     the planner (the graph-keyed *measured* path resolves above
-    compile_graph, in ``registry.run_graph``, and arrives here as ints)."""
-    w = node_workload(node)
+    compile_graph, in ``registry.run_graph``, and arrives here as ints).
+    ``shards`` localizes the node's word schedule to the mesh's per-shard
+    view before planning (local shapes, not global); ``mesh`` keys the
+    plan so topologies never share cache entries."""
+    w = localize_workload(node_workload(node), shards)
     depth, streams = policy.depth, policy.streams
     if isinstance(depth, str) or isinstance(streams, str):
         try:
@@ -811,7 +802,7 @@ def _resolve_node(graph: StreamGraph, node: GraphNode, policy,
                 f"graph:{graph.name}/{node.name}", w, _node_tile(node),
                 _node_dtype(node), policy.hw,
                 stream_options=tuple(policy.stream_options),
-                vmem_budget_bytes=budget)
+                vmem_budget_bytes=budget, mesh=mesh)
             d_plan, s_plan = plan.pipe.depth, plan.pipe.streams
         except PlanError:
             # the split budget is too tight for the latency-hiding depth:
@@ -832,7 +823,8 @@ def _resolve_node(graph: StreamGraph, node: GraphNode, policy,
 
 def compile_graph(graph: StreamGraph, *, policy=None,
                   vmem_budget_bytes: int = _VMEM_BUDGET_BYTES,
-                  prefer: Optional[str] = None) -> CompiledGraph:
+                  prefer: Optional[str] = None,
+                  sharding=None) -> CompiledGraph:
     """Compile a :class:`StreamGraph`, choosing fused/staged per edge.
 
     Per edge: "auto" fuses when the static legality analysis passes *and*
@@ -842,6 +834,14 @@ def compile_graph(graph: StreamGraph, *, policy=None,
     :class:`~repro.core.planner.PlanError` carrying those lines; "staged"
     pins the HBM handoff (the A/B baseline for BENCH_graph.json).
 
+    ``sharding`` makes the compile mesh-aware: pass a
+    :class:`~repro.runtime.sharding.ShardingContext` (or a bare
+    :class:`~repro.core.meshspec.MeshSpec`), or leave ``None`` to pick up
+    the ambient context. Each node's workload is localized to the mesh's
+    per-shard word schedule before planning (local shapes, not global) and
+    every node plan is cache-keyed by the mesh topology, so a graph
+    compiled under a mesh never reuses single-device plans or vice versa.
+
     Current fusion scope: one fused edge per kernel (a producer with one
     consumer, a consumer with one fused in-edge); longer chains stage
     between fused pairs. The producer must not feed anything else — fusing
@@ -849,12 +849,15 @@ def compile_graph(graph: StreamGraph, *, policy=None,
     """
     from repro.core.program import current_policy
     policy = policy or current_policy()
+    sh = sharding if sharding is not None else policy.mesh
+    mesh, shards = resolve_sharding(sh)
     order = graph.topo_order()
     nodes = {n.name: n for n in graph.nodes}
     budgets = planner.split_graph_budget(
         [n.name for n in order], vmem_budget_bytes)
 
-    resolved = {n.name: _resolve_node(graph, n, policy, budgets[n.name])
+    resolved = {n.name: _resolve_node(graph, n, policy, budgets[n.name],
+                                      mesh=mesh, shards=shards)
                 for n in order}
 
     out_degree: Dict[str, int] = {}

@@ -1,0 +1,148 @@
+"""Mesh topology as a planner input: :class:`MeshSpec`.
+
+The Memory Controller Wall (arXiv 1910.06726) argues that interface-level
+bandwidth planning must account for the *actual device topology* — a plan
+sized for one memory system silently mis-sizes another. At mesh scale the
+same hazard appears one level up: a pipe plan tuned on a single device (or
+an 8-way data-parallel mesh) must never be served to a call site running
+under a different topology, and a kernel running *inside* ``shard_map``
+works on per-shard local shapes, not the global array.
+
+:class:`MeshSpec` is the frozen, hashable summary of that topology — axis
+names/sizes and the derived device count — used three ways:
+
+* as a :class:`~repro.core.program.PipePolicy` field (``policy.mesh``), so
+  plans and tuned-plan cache keys are topology-scoped;
+* as the planner's localization input: :func:`localize_workload` divides a
+  global word schedule across the mesh's workload-splitting shards;
+* as the ambient default: :func:`ambient_mesh` picks up the installed
+  :class:`repro.runtime.sharding.ShardingContext` without core ever
+  importing the runtime layer at module scope.
+
+Core stays importable without a mesh: everything degrades to
+:data:`SINGLE_DEVICE` (one shard, empty axes) when no mesh is involved.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from repro.core.pipeline_model import Workload
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshSpec:
+    """Hashable mesh-topology summary (axis names/sizes, device count).
+
+    ``axes`` is the ordered ``((name, size), ...)`` tuple of the mesh.
+    An empty tuple is the single-device topology. Build one from a live
+    ``jax.sharding.Mesh`` with :meth:`from_mesh`, or from an installed
+    :class:`~repro.runtime.sharding.ShardingContext` via its
+    ``mesh_spec()`` method.
+    """
+
+    axes: Tuple[Tuple[str, int], ...] = ()
+
+    def __post_init__(self):
+        for ax in self.axes:
+            name, size = ax
+            if not isinstance(name, str) or int(size) < 1:
+                raise ValueError(f"bad mesh axis {ax!r}")
+
+    @classmethod
+    def from_mesh(cls, mesh) -> "MeshSpec":
+        """Summarize a ``jax.sharding.Mesh`` (or anything with ``.shape``
+        mapping axis names to sizes)."""
+        shape = dict(mesh.shape)
+        return cls(axes=tuple((str(k), int(v)) for k, v in shape.items()))
+
+    @property
+    def device_count(self) -> int:
+        n = 1
+        for _, size in self.axes:
+            n *= size
+        return n
+
+    def axis_size(self, name: str) -> int:
+        for ax, size in self.axes:
+            if ax == name:
+                return size
+        return 1
+
+    @property
+    def token(self) -> str:
+        """Cache-key component: ``"single"`` or ``"data4.model2"``."""
+        if not self.axes:
+            return "single"
+        return ".".join(f"{name}{size}" for name, size in self.axes)
+
+
+SINGLE_DEVICE = MeshSpec()
+
+
+def ambient_mesh() -> Optional[MeshSpec]:
+    """MeshSpec of the installed ambient ShardingContext, if any.
+
+    Imported lazily so ``repro.core`` never depends on the runtime layer
+    at module scope (the runtime imports core the other way around).
+    """
+    try:
+        from repro.runtime import sharding
+    except Exception:    # noqa: BLE001 — core must work without runtime
+        return None
+    ctx = sharding.current()
+    if ctx is None:
+        return None
+    return MeshSpec.from_mesh(ctx.mesh)
+
+
+def resolve_mesh(mesh: Optional[MeshSpec]) -> MeshSpec:
+    """The effective topology of a call site: the policy's explicit mesh,
+    else the ambient ShardingContext's, else single-device."""
+    if mesh is not None:
+        return mesh
+    return ambient_mesh() or SINGLE_DEVICE
+
+
+def resolve_sharding(sharding=None) -> Tuple[MeshSpec, int]:
+    """Resolve a ``sharding=`` argument to ``(MeshSpec, workload shards)``.
+
+    Accepts a :class:`~repro.runtime.sharding.ShardingContext` (duck-typed:
+    anything with ``mesh`` + ``data_shards()``), a :class:`MeshSpec`, or
+    ``None`` — which picks up the ambient context, falling back to
+    single-device. A bare MeshSpec carries no logical rules, so its shard
+    count comes from the ambient context when that context describes the
+    *same* topology (the common case: a policy tagged by ``mesh_policy``
+    inside ``use_sharding``); otherwise it is conservatively treated as
+    fully workload-splitting — every device gets ``1/device_count`` of
+    the word schedule.
+    """
+    def ambient():
+        try:
+            from repro.runtime import sharding as shlib
+            return shlib.current()
+        except Exception:    # noqa: BLE001
+            return None
+
+    if sharding is None:
+        sharding = ambient()
+        if sharding is None:
+            return SINGLE_DEVICE, 1
+    if isinstance(sharding, MeshSpec):
+        ctx = ambient()
+        if ctx is not None and MeshSpec.from_mesh(ctx.mesh) == sharding:
+            return sharding, int(ctx.data_shards())
+        return sharding, sharding.device_count
+    # ShardingContext: batch-rule-derived data shards, full mesh in the key
+    return MeshSpec.from_mesh(sharding.mesh), int(sharding.data_shards())
+
+
+def localize_workload(w: Workload, shards: int) -> Workload:
+    """Per-shard view of a global word schedule: ``shards`` devices each
+    stream ``ceil(n_words / shards)`` words; per-word bytes/flops are
+    unchanged (the tile geometry is the same on every shard)."""
+    shards = max(int(shards), 1)
+    if shards == 1:
+        return w
+    return dataclasses.replace(w, n_words=max(-(-w.n_words // shards), 1))

@@ -11,10 +11,11 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Sequence, Tuple, Union
+from typing import Optional, Sequence, Tuple, Union
 
 import jax.numpy as jnp
 
+from repro.core.meshspec import MeshSpec, SINGLE_DEVICE, resolve_mesh
 from repro.core.pipe import DEFAULT_VMEM_BUDGET_BYTES, Pipe, \
     required_depth, vmem_budget_ok
 from repro.core.pipeline_model import (
@@ -57,6 +58,11 @@ class Plan:
     predicted_bw: float
     rationale: str
     skipped: Tuple[str, ...] = ()    # rejected candidates, one line each
+    # what the plan was sized against: the (local, per-shard) workload and
+    # the mesh topology the call site ran under — introspectable via
+    # last_plan() so sharded tests can assert local-shape planning
+    workload: Optional[Workload] = None
+    mesh: MeshSpec = SINGLE_DEVICE
 
 
 def plan_pipe(
@@ -97,6 +103,7 @@ def plan_pipe(
             consumers=streams,
             predicted_s=est.total_s,
             predicted_bw=est.achieved_bw,
+            workload=w,
             rationale=(
                 f"depth={depth} hides dma latency "
                 f"({hw.dma_latency_s*1e9:.0f}ns over {service*1e9:.0f}ns/word); "
@@ -120,19 +127,31 @@ def plan_pipe(
 # Every kernel's public op wrapper routes through here: the op builds its
 # Workload from the call-site shapes and the planner returns the (depth,
 # streams) the analytic model picks. Plans are memoized: the key is
-# (op, workload, tile, dtype, hw, knobs) — workload and tile are pure
-# functions of (op, shape, dtype), so this is the per-(op, shape, dtype, hw)
-# plan cache with no risk of shape aliasing.
+# (op, workload, tile, dtype, hw, mesh, knobs) — workload and tile are pure
+# functions of (op, shape, dtype), so this is the per-(op, shape, dtype, hw,
+# mesh) plan cache with no risk of shape aliasing, and plans sized under one
+# mesh topology are never served to call sites running under another.
 
 
 @functools.lru_cache(maxsize=1024)
 def _plan_cached(op: str, w: Workload, tile: Tuple[int, ...],
                  dtype_name: str, hw: HardwareModel,
                  stream_options: Tuple[int, ...], depth_cap: int,
-                 vmem_budget_bytes: int) -> Plan:
-    return plan_pipe(w, tile, jnp.dtype(dtype_name), hw,
+                 vmem_budget_bytes: int, mesh: MeshSpec) -> Plan:
+    plan = plan_pipe(w, tile, jnp.dtype(dtype_name), hw,
                      stream_options=stream_options, depth_cap=depth_cap,
                      vmem_budget_bytes=vmem_budget_bytes)
+    return dataclasses.replace(plan, mesh=mesh)
+
+
+_LAST_PLAN: "dict[str, Plan]" = {}   # op -> most recent plan resolved
+
+
+def last_plan(op: str) -> Optional[Plan]:
+    """The most recent plan resolved for ``op`` (introspection hook: its
+    ``workload``/``mesh`` record what the call site was actually sized
+    against — the sharded-stream tests assert local-shape planning here)."""
+    return _LAST_PLAN.get(op)
 
 
 def planned_pipe(
@@ -144,10 +163,14 @@ def planned_pipe(
     stream_options: Sequence[int] = (1, 2, 4),
     depth_cap: int = 17,
     vmem_budget_bytes: int = DEFAULT_VMEM_BUDGET_BYTES,
+    mesh: MeshSpec = SINGLE_DEVICE,
 ) -> Plan:
     """Memoized :func:`plan_pipe` for one kernel call site."""
-    return _plan_cached(op, w, tuple(tile), jnp.dtype(dtype).name, hw,
-                        tuple(stream_options), depth_cap, vmem_budget_bytes)
+    plan = _plan_cached(op, w, tuple(tile), jnp.dtype(dtype).name, hw,
+                        tuple(stream_options), depth_cap, vmem_budget_bytes,
+                        mesh)
+    _LAST_PLAN[op] = plan
+    return plan
 
 
 def resolve_auto(
@@ -160,14 +183,15 @@ def resolve_auto(
     dtype,
     hw: HardwareModel = TPU_V5E,
     stream_options: Sequence[int] = (1, 2, 4),
+    mesh: MeshSpec = SINGLE_DEVICE,
 ) -> Tuple[int, int]:
     """Resolve ``depth="auto"`` / ``streams="auto"`` to planned integers.
 
     Explicit integers pass through untouched (the paper's programmer-chosen
     sizing stays available); the planner only runs when at least one of the
     two is ``"auto"``, and its Plan is served from the per-(op, shape,
-    dtype, hw) cache on repeat call sites. ``"measured"`` is accepted as a
-    synonym for ``"auto"`` here: it is the analytic *fallback* for call
+    dtype, hw, mesh) cache on repeat call sites. ``"measured"`` is accepted
+    as a synonym for ``"auto"`` here: it is the analytic *fallback* for call
     sites the autotuner (:mod:`repro.core.autotune`) cannot measure (traced
     arguments, no runner) — measured resolution itself never reaches this
     function.
@@ -181,7 +205,7 @@ def resolve_auto(
     if depth != "auto" and streams != "auto":
         return int(depth), int(streams)
     plan = planned_pipe(op, workload, tile, dtype, hw,
-                        stream_options=stream_options)
+                        stream_options=stream_options, mesh=mesh)
     d = plan.pipe.depth if depth == "auto" else int(depth)
     s = plan.pipe.streams if streams == "auto" else int(streams)
     return d, s
@@ -194,19 +218,27 @@ def resolve_policy(
     workload: Workload,
     tile: Tuple[int, ...],
     dtype,
+    mesh: Optional[MeshSpec] = None,
 ) -> Tuple[int, int]:
     """Planner entry for :class:`repro.core.program.PipePolicy` call sites.
 
     Duck-typed over anything exposing ``mode`` / ``depth`` / ``streams`` /
-    ``hw`` / ``stream_options``: resolves "auto" fields against the policy's
-    hardware model (so plans are cache-keyed by policy, not just shape) and
-    applies the mode semantics — ``baseline`` forces the synchronous
-    depth=1 pipe after planning, exactly like the legacy per-kernel
-    keyword plumbing did.
+    ``hw`` / ``stream_options`` (and optionally ``mesh``): resolves "auto"
+    fields against the policy's hardware model and mesh topology (so plans
+    are cache-keyed by policy *and* topology, not just shape) and applies
+    the mode semantics — ``baseline`` forces the synchronous depth=1 pipe
+    after planning, exactly like the legacy per-kernel keyword plumbing
+    did. When the policy carries no explicit mesh, the ambient
+    :class:`~repro.runtime.sharding.ShardingContext` is consulted — a call
+    site running inside ``use_sharding`` plans under that topology without
+    any keyword plumbing.
     """
+    if mesh is None:
+        mesh = resolve_mesh(getattr(policy, "mesh", None))
     depth, streams = resolve_auto(
         op, policy.depth, policy.streams, workload=workload, tile=tile,
-        dtype=dtype, hw=policy.hw, stream_options=tuple(policy.stream_options))
+        dtype=dtype, hw=policy.hw, stream_options=tuple(policy.stream_options),
+        mesh=mesh)
     if policy.mode == "baseline":
         depth = 1
     return depth, streams
@@ -263,3 +295,4 @@ def plan_cache_info():
 
 def plan_cache_clear() -> None:
     _plan_cached.cache_clear()
+    _LAST_PLAN.clear()

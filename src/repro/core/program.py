@@ -53,8 +53,9 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import planner
 from repro.core.emitter import GatherRingPipe, RingPipe, acquire, release
+from repro.core.meshspec import MeshSpec, localize_workload, resolve_sharding
 from repro.core.pipe import Pipe
-from repro.core.pipeline_model import TPU_V5E, HardwareModel
+from repro.core.pipeline_model import TPU_V5E, HardwareModel, Workload
 
 # ---------------------------------------------------------------------------
 # PipePolicy: one frozen knob bundle for every kernel call site
@@ -78,6 +79,12 @@ class PipePolicy:
         also part of the tuned-plan cache key.
       stream_options: candidate stream counts the planner/tuner may pick
         from.
+      mesh: the mesh topology this policy's call sites run under
+        (:class:`~repro.core.meshspec.MeshSpec`) — part of every plan and
+        tuned-plan cache key, so plans sized for one topology never leak
+        to another. ``None`` (the default) picks up the ambient
+        :class:`~repro.runtime.sharding.ShardingContext` at resolve time;
+        :func:`repro.runtime.streams.mesh_policy` tags a policy explicitly.
     """
 
     mode: str = "ff"
@@ -86,10 +93,14 @@ class PipePolicy:
     interpret: bool = True
     hw: HardwareModel = TPU_V5E
     stream_options: Tuple[int, ...] = (1, 2, 4)
+    mesh: Optional[MeshSpec] = None
 
     def __post_init__(self):
         if not isinstance(self.mode, str):
             raise TypeError(f"mode must be a str, got {self.mode!r}")
+        if self.mesh is not None and not isinstance(self.mesh, MeshSpec):
+            raise TypeError(
+                f"mesh must be a MeshSpec or None, got {self.mesh!r}")
         for label, val in (("depth", self.depth), ("streams", self.streams)):
             if isinstance(val, str):
                 if val not in ("auto", "measured"):
@@ -475,8 +486,36 @@ class StreamProgram:
 # ---------------------------------------------------------------------------
 
 
-def compile_program(program: StreamProgram, *, interpret: bool = True,
-                    pipe_overrides: Optional[Mapping[str, Pipe]] = None):
+def program_workload(program: StreamProgram) -> Workload:
+    """Synthesize a conservative analytic Workload from a program's streams
+    (n_words, per-word load/store bytes, regularity) — the planner input
+    for programs whose kernel did not declare a workload builder."""
+    import numpy as np
+
+    store = (float(np.prod(program.out_shape))
+             * jnp.dtype(program.out_dtype).itemsize) / program.n_words
+    return Workload(
+        n_words=program.n_words,
+        word_bytes=float(sum(s.spec.word_bytes for s in program.streams)),
+        flops_per_word=0.0,
+        regular=not any(s.gather for s in program.streams),
+        store_bytes_per_word=store,
+    )
+
+
+def _clamped_streams(tile0: int, streams: int) -> int:
+    """Largest power-of-two-reduced stream count dividing the tile's
+    leading dim (the planner's global choice refined per stream)."""
+    s = max(1, int(streams))
+    while s > 1 and tile0 % s:
+        s //= 2
+    return max(1, s)
+
+
+def compile_program(program: StreamProgram, *,
+                    interpret: Optional[bool] = None,
+                    pipe_overrides: Optional[Mapping[str, Pipe]] = None,
+                    policy: Optional[PipePolicy] = None, sharding=None):
     """Lower a :class:`StreamProgram` into one ``pallas_call``.
 
     Returns a callable taking the program's operands in ``inputs`` order.
@@ -501,7 +540,42 @@ def compile_program(program: StreamProgram, *, interpret: bool = True,
     a different *tile* candidate is a different program, built through
     the kernel's ``build_program(...)`` / the registry's
     ``program(tile=...)`` hook.
+
+    ``policy`` (optional) asks compile_program to *plan* the pipes
+    instead: every regular stream is re-sized to the planner's (depth,
+    streams) for the program's synthesized workload under the policy
+    (gather streams keep their declared stream count — their row bundle
+    is part of the word geometry), and ``policy.interpret`` supplies the
+    interpret flag unless ``interpret=`` is passed explicitly.
+    ``sharding`` localizes that planning to the mesh: pass a
+    :class:`~repro.runtime.sharding.ShardingContext` (or a bare
+    :class:`~repro.core.meshspec.MeshSpec`), or leave ``None`` to pick up
+    the ambient context — the planner then sizes against the per-shard
+    local word schedule, not the global one, and the plan is cache-keyed
+    by the mesh topology. Mutually exclusive with explicit
+    ``pipe_overrides``.
     """
+    if policy is not None:
+        if pipe_overrides is not None:
+            raise TypeError(f"{program.name}: pass either policy= or "
+                            f"pipe_overrides=, not both")
+        sh = sharding if sharding is not None else policy.mesh
+        mesh, shards = resolve_sharding(sh)
+        w = localize_workload(program_workload(program), shards)
+        tile = tuple(program.streams[0].spec.tile)
+        depth, streams = planner.resolve_policy(
+            program.name, policy, workload=w, tile=tile,
+            dtype=program.streams[0].spec.dtype, mesh=mesh)
+        pipe_overrides = {
+            st.name: dataclasses.replace(
+                st.spec, depth=depth,
+                streams=(st.spec.streams if st.gather else
+                         _clamped_streams(st.spec.tile[0], streams)))
+            for st in program.streams
+        }
+        if interpret is None:
+            interpret = policy.interpret
+    interpret = True if interpret is None else interpret
     scalar_ins = [i for i in program.inputs if isinstance(i, ScalarIn)]
     tensor_ins = [i for i in program.inputs if not isinstance(i, ScalarIn)]
     specs: Dict[str, Pipe] = {s.name: s.spec for s in program.streams}

@@ -136,4 +136,6 @@ register_kernel(
     regular=True,
     tol=2e-4,
     doc="flash-decode vs. long KV caches",
+    shard_dims=(0, 0, 0, 0),     # request batch data-parallel
+    shard_out_dim=0,
 )

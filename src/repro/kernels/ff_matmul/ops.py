@@ -141,4 +141,6 @@ register_kernel(
     regular=True,
     tol=5e-4,
     doc="DAE blocked matmul (regular streams)",
+    shard_dims=(0, None),        # A rows data-parallel, B replicated
+    shard_out_dim=0,
 )

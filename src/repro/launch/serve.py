@@ -6,6 +6,14 @@ decode loop is the consumer). Requests arrive with different prompt
 lengths; the scheduler right-pads prompts into a prefill batch, then decodes
 in lockstep with per-row lengths, retiring rows at EOS / max-len.
 
+The decode loop runs through ``repro.ops`` under the mesh by default
+(``--impl ff``): the model's attention/decode-attention call sites hit the
+tuned stream kernels, with the session :class:`~repro.core.program.
+PipePolicy` installed mesh-tagged around the step bodies (``--policy-mode``
+selects ff / baseline / autotune) — so pipe plans are keyed by the serving
+mesh topology, never shared with single-device runs. ``--impl xla`` keeps
+the HLO-visible reference path; ``--impl cfg`` defers to the arch config.
+
 Example (CPU smoke):
   PYTHONPATH=src python -m repro.launch.serve --arch qwen1_5_0p5b --smoke \
       --requests 6 --max-new 16
@@ -24,6 +32,10 @@ from repro.configs.base import ARCH_IDS, get_config, smoke_config
 from repro.launch import steps as steps_lib
 from repro.launch.mesh import make_host_mesh
 from repro.runtime import sharding as shlib
+
+# decode caches are padded to a KV-block multiple so the ff decode kernel
+# streams full tiles (rows past `lengths` are masked inside the kernel)
+_KV_BLOCK = 128
 
 
 def pad_cache_to(cache, s_from: int, s_max: int, seq_dims):
@@ -45,12 +57,24 @@ def main(argv=None):
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--impl", choices=("ff", "xla", "cfg"), default="ff",
+                    help="attention implementation: ff = repro.ops stream "
+                         "kernels (default), xla = HLO reference, cfg = "
+                         "whatever the arch config pins")
+    ap.add_argument("--policy-mode", choices=("ff", "baseline", "autotune"),
+                    default="ff",
+                    help="session PipePolicy mode installed around the "
+                         "prefill/decode step bodies (mesh-tagged)")
     args = ap.parse_args(argv)
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if cfg.family == "encdec":
         raise SystemExit("serve driver targets decoder-only archs; "
                          "see tests/test_serving.py for enc-dec decode")
+    if args.impl != "cfg":
+        cfg = cfg.replace(attn_impl=args.impl)
+    from repro.core.program import PipePolicy
+    policy = PipePolicy(mode=args.policy_mode, interpret=True)
     from repro.models import build_model
     model = build_model(cfg)
     mesh = make_host_mesh()
@@ -66,10 +90,14 @@ def main(argv=None):
     for i, p in enumerate(prompts):
         toks[i, :len(p)] = p       # right-padded prefill batch
 
+    # cache length rounded to the KV block so the ff decode kernel streams
+    # whole tiles; lengths mask the padded rows
+    s_max = -(-s_max // _KV_BLOCK) * _KV_BLOCK
+
     with shlib.use_sharding(mesh, overrides=dict(cfg.rule_overrides or {})):
         params = model.init(jax.random.key(0))
-        prefill = jax.jit(steps_lib.make_prefill_step(model))
-        decode = jax.jit(steps_lib.make_decode_step(model))
+        prefill = jax.jit(steps_lib.make_prefill_step(model, policy=policy))
+        decode = jax.jit(steps_lib.make_decode_step(model, policy=policy))
 
         t0 = time.time()
         logits, cache = prefill(params, {"tokens": jnp.asarray(toks)})
@@ -100,6 +128,8 @@ def main(argv=None):
         t_decode = time.time() - t0
 
     toks_out = sum(len(o) - len(p) for o, p in zip(out, prompts))
+    print(f"impl={cfg.attn_impl} policy={args.policy_mode} "
+          f"mesh={dict(mesh.shape)}")
     print(f"prefill {t_prefill*1e3:.0f} ms; decode {toks_out} tokens in "
           f"{t_decode*1e3:.0f} ms "
           f"({toks_out / max(t_decode, 1e-9):.1f} tok/s batched)")

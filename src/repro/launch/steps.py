@@ -1,10 +1,21 @@
 """Step builders: train / prefill / decode, with shardings derived from the
 logical rules. Used identically by the real trainer, the server, and the
 dry-run (which lowers these very functions with ShapeDtypeStructs).
+
+Every builder accepts an optional ``policy``
+(:class:`~repro.core.program.PipePolicy`): the step body then runs under
+the mesh-tagged session policy (``repro.policy`` context, tagged with the
+ambient :class:`~repro.runtime.sharding.ShardingContext`'s topology via
+:func:`repro.runtime.streams.mesh_policy`), so every stream-kernel call
+site inside the model — attention, decode attention, scans — resolves its
+pipe plan under that policy with topology-keyed plan caches. The serving
+decode loop and the trainer thereby run the same tuned stream kernels as
+the single-device paths, under the mesh.
 """
 
 from __future__ import annotations
 
+import contextlib
 import functools
 from typing import Any, Dict, Optional, Tuple
 
@@ -15,6 +26,18 @@ from repro.configs.base import ArchConfig, ShapeConfig
 from repro.optim import adafactor, adamw
 from repro.optim.compression import QuantizedAccumulator
 from repro.runtime import sharding as shlib
+
+
+def _policy_scope(policy):
+    """Session-policy context for one step body (no-op without a policy).
+    Entered inside the step function, so it is active at trace time
+    whenever the jitted step (re)traces — the moment the model's kernel
+    call sites read the session policy."""
+    if policy is None:
+        return contextlib.nullcontext()
+    from repro.core.program import policy as policy_ctx
+    from repro.runtime.streams import mesh_policy
+    return policy_ctx(mesh_policy(policy))
 
 
 def opt_init_and_update(optimizer: str, opt_cfg=None):
@@ -41,16 +64,23 @@ def opt_state_axes(optimizer: str, param_axes):
 
 
 def make_train_step(model, *, optimizer: str = "adamw", opt_cfg=None,
-                    accum_steps: int = 1, quantized_accum: bool = False):
+                    accum_steps: int = 1, quantized_accum: bool = False,
+                    policy=None):
     """Returns train_step(params, opt_state, batch) -> (params, opt_state,
     metrics). With accum_steps > 1 the batch splits into microbatches along
     dim 0 and gradients accumulate (optionally in int8 w/ error feedback)
     before one optimizer update — collective-frugal: the DP all-reduce
-    happens once per step, not per microbatch."""
+    happens once per step, not per microbatch. ``policy`` installs the
+    mesh-tagged session PipePolicy around the step body (see module
+    docstring)."""
     _, opt_update = opt_init_and_update(optimizer, opt_cfg)
     grad_fn = jax.value_and_grad(model.loss, has_aux=True)
 
     def train_step(params, opt_state, batch):
+        with _policy_scope(policy):
+            return _train_step(params, opt_state, batch)
+
+    def _train_step(params, opt_state, batch):
         if accum_steps == 1:
             (loss, metrics), grads = grad_fn(params, batch)
         else:
@@ -88,15 +118,17 @@ def make_train_step(model, *, optimizer: str = "adamw", opt_cfg=None,
     return train_step
 
 
-def make_prefill_step(model):
+def make_prefill_step(model, *, policy=None):
     def prefill_step(params, batch):
-        return model.prefill(params, batch)
+        with _policy_scope(policy):
+            return model.prefill(params, batch)
     return prefill_step
 
 
-def make_decode_step(model):
+def make_decode_step(model, *, policy=None):
     def decode_step(params, batch, cache):
-        logits, new_cache = model.decode_step(params, batch, cache)
+        with _policy_scope(policy):
+            logits, new_cache = model.decode_step(params, batch, cache)
         next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return next_tok, logits, new_cache
     return decode_step

@@ -47,6 +47,12 @@ def main(argv=None):
     ap.add_argument("--fail-at", type=int, default=None,
                     help="inject a failure at this step (tests)")
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--policy-mode", choices=("ff", "baseline", "autotune"),
+                    default=None,
+                    help="install a session PipePolicy of this mode (mesh-"
+                         "tagged) around the train-step body, so stream-"
+                         "kernel call sites inside the model plan under "
+                         "the training mesh; default: no policy override")
     args = ap.parse_args(argv)
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -64,6 +70,11 @@ def main(argv=None):
         n_patches=cfg.n_patches if cfg.family == "vlm" else 0,
         d_model=cfg.d_model)
 
+    policy = None
+    if args.policy_mode is not None:
+        from repro.core.program import PipePolicy
+        policy = PipePolicy(mode=args.policy_mode, interpret=True)
+
     overrides = dict(cfg.rule_overrides or {})
     with shlib.use_sharding(mesh, overrides=overrides):
         params = model.init(jax.random.key(0))
@@ -73,7 +84,7 @@ def main(argv=None):
             steps_lib.make_train_step(
                 model, optimizer=cfg.optimizer, opt_cfg=opt_cfg,
                 accum_steps=args.accum,
-                quantized_accum=args.quantized_accum),
+                quantized_accum=args.quantized_accum, policy=policy),
             donate_argnums=(0, 1))
 
         sup = Supervisor(FTConfig(ckpt_dir=args.ckpt_dir,

@@ -255,7 +255,23 @@ def decode_attention_op(q, k, v, lengths, *, impl: str = "xla",
     from repro.kernels.ff_decode_attention import decode_attention as ff_dec
     kh = k.transpose(0, 2, 1, 3)
     vh = v.transpose(0, 2, 1, 3)
-    return ff_dec(q, kh, vh, lengths,
+    # the kernel streams whole KV tiles: round the cache up to the block
+    # (rows past `lengths` are masked inside the kernel, so zero-padding
+    # is free of numerics). The serving driver already pads caches to a
+    # 128 multiple; for other cache lengths pick the tile that minimizes
+    # padded traffic (skv=130 streams 160 rows at block 32, not 256 at
+    # block 128), preferring larger tiles on ties (fewer DMAs).
+    skv = k.shape[1]
+    if skv <= 128:
+        block_kv = -(-skv // 8) * 8
+    else:
+        block_kv = min((128, 64, 32),
+                       key=lambda blk: (-(-skv // blk) * blk, -blk))
+    pad = -skv % block_kv
+    if pad:
+        kh = jnp.pad(kh, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vh = jnp.pad(vh, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    return ff_dec(q, kh, vh, lengths, block_kv=block_kv,
                   policy=_session_kernel_policy(interpret))
 
 

@@ -62,6 +62,26 @@ class ShardingContext:
     def axis_size(self, name: str) -> int:
         return self.mesh.shape.get(name, 1)
 
+    def data_shards(self) -> int:
+        """How many ways the rules split the workload's batch dim: the
+        product of the mesh axes ``"batch"`` maps to. This is the factor
+        the stream planner divides a global word schedule by when deriving
+        per-shard local workloads (core.meshspec.localize_workload)."""
+        target = self.rules.get("batch")
+        if target is None:
+            return 1
+        tgt = (target,) if isinstance(target, str) else target
+        n = 1
+        for a in tgt:
+            n *= self.axis_size(a)
+        return n
+
+    def mesh_spec(self):
+        """This context's topology as a hashable
+        :class:`repro.core.meshspec.MeshSpec` (planner / plan-cache key)."""
+        from repro.core.meshspec import MeshSpec
+        return MeshSpec.from_mesh(self.mesh)
+
 
 _LOCAL = threading.local()
 

@@ -265,6 +265,90 @@ def test_measured_policy_validates():
 
 
 # ---------------------------------------------------------------------------
+# Mesh topology in the plan caches (PR 5: mesh-aware streams)
+# ---------------------------------------------------------------------------
+
+def test_planner_cache_keyed_by_mesh():
+    """Same workload under a different mesh topology is a different plan
+    cache entry (plans must never leak across topologies)."""
+    from repro.core import MeshSpec, last_plan
+
+    plan_cache_clear()
+    m = MeshSpec(axes=(("data", 8),))
+    p1 = planned_pipe("ff_mesh_key", W_REGULAR, TILE, jnp.float32)
+    misses = plan_cache_info().misses
+    p2 = planned_pipe("ff_mesh_key", W_REGULAR, TILE, jnp.float32, mesh=m)
+    assert plan_cache_info().misses == misses + 1     # new key
+    assert p1.pipe == p2.pipe                         # same analytic sizing
+    assert p1.mesh.token == "single" and p2.mesh.token == "data8"
+    assert last_plan("ff_mesh_key").mesh == m
+    assert last_plan("ff_mesh_key").workload == W_REGULAR
+
+
+def test_plan_key_carries_mesh_topology():
+    from repro.core import MeshSpec
+
+    m = MeshSpec(axes=(("data", 4), ("model", 2)))
+    k_single = autotune.plan_key("op", W_REGULAR, jnp.float32, TPU_V5E)
+    k_mesh = autotune.plan_key("op", W_REGULAR, jnp.float32, TPU_V5E,
+                               mesh=m)
+    assert k_single != k_mesh
+    assert "meshsingle|dev1" in k_single
+    assert "meshdata4.model2|dev8" in k_mesh
+    assert f"fmt{PLAN_FORMAT_VERSION}" in k_mesh
+
+
+def test_mesh_scopes_tuned_plan_cache(plan_cache, monkeypatch):
+    """Tuned plans reload from disk under the same mesh but never serve a
+    different topology (the staleness hazard the format bump closes)."""
+    from repro.core import MeshSpec
+
+    _fake_measure(monkeypatch)
+    mesh8 = MeshSpec(axes=(("data", 8),))
+    pol8 = PipePolicy(mode="autotune", mesh=mesh8)
+    first = _resolve(policy=pol8)
+    assert first.source == "measured"
+    rec = json.load(open(plan_cache))
+    assert all("meshdata8|dev8" in k for k in rec["plans"])
+    (stored,) = rec["plans"].values()
+    assert stored["mesh"] == "data8" and stored["devices"] == 8
+
+    # fresh process, same mesh: disk hit, measurement must not run
+    tuned_cache_clear()
+
+    def exploding(*a, **k):
+        raise AssertionError("same-mesh reload must not re-measure")
+
+    monkeypatch.setattr(autotune, "measure", exploding)
+    again = _resolve(policy=pol8)
+    assert again.source == "disk"
+    assert (again.depth, again.streams) == (first.depth, first.streams)
+
+    # a different topology misses the cache and re-measures
+    _fake_measure(monkeypatch)
+    other = _resolve(policy=PipePolicy(mode="autotune",
+                                       mesh=MeshSpec(axes=(("data", 4),))))
+    assert other.source == "measured"
+
+
+def test_old_format_cache_entries_fall_back_and_remeasure(plan_cache,
+                                                          monkeypatch):
+    """A v1-format plan file (pre-mesh keys) is ignored with a warning and
+    replaced by freshly measured v2 records — stale plans never replay."""
+    _fake_measure(monkeypatch)
+    with open(plan_cache, "w") as f:
+        json.dump({"format": PLAN_FORMAT_VERSION - 1,
+                   "plans": {"stale-v1-key": {"depth": 9, "streams": 9}}}, f)
+    with pytest.warns(RuntimeWarning, match="corrupt plan cache"):
+        choice = _resolve()
+    assert choice.source == "measured"
+    assert (choice.depth, choice.streams) == (3, 2)   # measured, not stale
+    plans = json.load(open(plan_cache))
+    assert plans["format"] == PLAN_FORMAT_VERSION
+    assert "stale-v1-key" not in plans["plans"]
+
+
+# ---------------------------------------------------------------------------
 # End to end on a real registry kernel (tiny shapes, interpret mode)
 # ---------------------------------------------------------------------------
 
