@@ -451,6 +451,54 @@ def sharded_bench(json_path: str = "BENCH_sharded.json", n_dev: int = 8,
     print("sharded ok")
 
 
+def serve_bench_mode(json_path: str = "BENCH_serve.json",
+                     smoke: bool = True) -> None:
+    """Continuous-batching serving bench: paged-KV continuous batching vs.
+    the padded lockstep baseline over the same Poisson trace (see
+    ``repro.launch.serve``). Writes ``BENCH_serve.json`` with per-scheduler
+    p50/p99 per-token latency, tokens/s, and KV utilization, plus the
+    paged-vs-contiguous bitwise parity probe. Both sizes run the smoke
+    model config (CPU interpret container); ``smoke`` only shrinks the
+    trace."""
+    from repro.launch import serve as serve_lib
+
+    ap = argparse.ArgumentParser()
+    serve_lib.add_serve_args(ap)
+    if smoke:
+        argv = ["--smoke", "--requests", "8", "--slots", "2",
+                "--prompt-len", "16", "--max-new", "8", "--rate", "20"]
+    else:
+        argv = ["--smoke", "--requests", "24", "--slots", "4",
+                "--prompt-len", "48", "--max-new", "24", "--rate", "10"]
+    args = ap.parse_args(argv)
+    print("# serve: paged continuous batching vs padded lockstep "
+          f"(requests={args.requests}, slots={args.slots}, "
+          f"page={args.page})")
+    result = serve_lib.serve_bench(args)
+    ls, pg = result["lockstep"], result["paged"]
+    for name, m in (("lockstep", ls), ("paged", pg)):
+        print(f"# {name:9s} {m['tokens']} tokens {m['tokens_per_s']:.2f} "
+              f"tok/s p99 {m['p99_ms']:.0f} ms kv_util {m['kv_util']:.2f}")
+    print(f"serve,speedup_tokens_per_s,{result['speedup_tokens_per_s']:.3f}")
+    print(f"serve,p99_ratio,{result['p99_ratio']:.3f}")
+    print(f"serve,bitwise_max_abs_diff,{result['bitwise_max_abs_diff']:.1e}")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(result, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"# wrote {json_path}")
+    if not result["bitwise_identical"]:
+        print("\nFAILED: paged decode is not bitwise-identical to the "
+              "contiguous path", file=sys.stderr)
+        raise SystemExit(1)
+    if result["speedup_tokens_per_s"] <= 1.0 or (
+            result["p99_ratio"] is not None and result["p99_ratio"] <= 1.0):
+        print("\nFAILED: paged continuous batching did not beat the "
+              "lockstep baseline (tokens/s and p99)", file=sys.stderr)
+        raise SystemExit(1)
+    print("serve ok")
+
+
 def _global_workload(spec, args, kw):
     """The Workload of the *global* (unsharded) operand shapes — what the
     planner saw before the runtime became mesh-aware."""
@@ -539,6 +587,15 @@ def main() -> None:
     parser.add_argument("--sharded-json", default="BENCH_sharded.json",
                         help="path for the sharded JSON report "
                              "('' disables; default %(default)s)")
+    parser.add_argument("--serve", action="store_true",
+                        help="run the continuous-batching serving bench "
+                             "(paged vs lockstep over a Poisson trace) and "
+                             "write the serve JSON report; --smoke shrinks "
+                             "the trace (and is consumed: the kernel smoke "
+                             "suite does not also run)")
+    parser.add_argument("--serve-json", default="BENCH_serve.json",
+                        help="path for the serve JSON report "
+                             "('' disables; default %(default)s)")
     args = parser.parse_args()
     if args.sharded and "jax" not in sys.modules:
         # must land before the first jax import anywhere in the process
@@ -546,7 +603,7 @@ def main() -> None:
         if "xla_force_host_platform_device_count" not in flags:
             os.environ["XLA_FLAGS"] = \
                 f"{flags} --xla_force_host_platform_device_count=8".strip()
-    if args.smoke:
+    if args.smoke and not args.serve:
         smoke(args.json)
     if args.autotune:
         autotune_bench(args.autotune_json, args.budget_s)
@@ -554,7 +611,10 @@ def main() -> None:
         graph_bench(args.graph_json)
     if args.sharded:
         sharded_bench(args.sharded_json)
-    if not (args.smoke or args.autotune or args.graph or args.sharded):
+    if args.serve:
+        serve_bench_mode(args.serve_json, smoke=args.smoke)
+    if not (args.smoke or args.autotune or args.graph or args.sharded
+            or args.serve):
         full()
 
 

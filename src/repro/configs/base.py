@@ -72,6 +72,12 @@ class ArchConfig:
 
     # implementation switches (hillclimb knobs)
     attn_impl: str = "xla"                    # xla | ff
+    decode_block_kv: Optional[int] = None     # pin the ff decode-attention
+                                              # KV tile (None = heuristic);
+                                              # serving pins it to the paged
+                                              # cache's page size so the
+                                              # contiguous path is bitwise-
+                                              # equal to the paged path
     scan_impl: str = "xla"                    # xla | xla_tiled | ff
     scan_layers: bool = True                  # lax.scan over layer stack
     loss_chunk: int = 0                       # >1: chunked-vocab CE (no full

@@ -45,6 +45,23 @@ def decode_attention_workload(b: int, h: int, kvh: int, s: int, d: int,
     return w, (block_kv, d)
 
 
+def paged_decode_attention_workload(b: int, h: int, kvh: int, n_pages: int,
+                                    page: int, d: int, *, dtype=jnp.bfloat16
+                                    ) -> Tuple[Workload, Tuple[int, int]]:
+    """One word per (b, kvh, page): a merged K+V page tile gathered through
+    the block table. Same math as :func:`decode_attention_workload` at
+    ``block_kv == page``, but the stream arrives via an irregular gather."""
+    itemsize = jnp.dtype(dtype).itemsize
+    group = max(h // kvh, 1)
+    w = Workload(
+        n_words=b * kvh * n_pages,
+        word_bytes=float(2 * page * d * itemsize),
+        flops_per_word=4.0 * group * page * d,
+        regular=True,
+    )
+    return w, (2 * page, d)
+
+
 # KV-cache tile candidates for mode="autotune" (the cache stream's word
 # size; candidates not dividing the call site's S are skipped at measure)
 _TILE_OPTIONS = (

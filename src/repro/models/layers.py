@@ -247,8 +247,11 @@ def attention_op(q, k, v, *, causal: bool, impl: str = "xla",
 
 
 def decode_attention_op(q, k, v, lengths, *, impl: str = "xla",
-                        interpret: bool = True) -> jnp.ndarray:
-    """q: [B,H,D] one token; k,v: [B,Skv,KVH,D] cache; lengths: [B]."""
+                        interpret: bool = True,
+                        block_kv: Optional[int] = None) -> jnp.ndarray:
+    """q: [B,H,D] one token; k,v: [B,Skv,KVH,D] cache; lengths: [B].
+    ``block_kv`` pins the ff KV tile (serving pins it to the paged cache's
+    page size for bitwise parity); None picks the traffic heuristic."""
     if impl == "xla":
         out = attention_xla(q[:, None], k, v, causal=False, lengths=lengths)
         return out[:, 0]
@@ -257,22 +260,47 @@ def decode_attention_op(q, k, v, lengths, *, impl: str = "xla",
     vh = v.transpose(0, 2, 1, 3)
     # the kernel streams whole KV tiles: round the cache up to the block
     # (rows past `lengths` are masked inside the kernel, so zero-padding
-    # is free of numerics). The serving driver already pads caches to a
-    # 128 multiple; for other cache lengths pick the tile that minimizes
-    # padded traffic (skv=130 streams 160 rows at block 32, not 256 at
-    # block 128), preferring larger tiles on ties (fewer DMAs).
+    # is free of numerics). For unpinned block_kv pick the tile that
+    # minimizes padded traffic (skv=130 streams 160 rows at block 32, not
+    # 256 at block 128), preferring larger tiles on ties (fewer DMAs).
     skv = k.shape[1]
-    if skv <= 128:
-        block_kv = -(-skv // 8) * 8
-    else:
-        block_kv = min((128, 64, 32),
-                       key=lambda blk: (-(-skv // blk) * blk, -blk))
+    if block_kv is None:
+        if skv <= 128:
+            block_kv = -(-skv // 8) * 8
+        else:
+            block_kv = min((128, 64, 32),
+                           key=lambda blk: (-(-skv // blk) * blk, -blk))
     pad = -skv % block_kv
     if pad:
         kh = jnp.pad(kh, ((0, 0), (0, 0), (0, pad), (0, 0)))
         vh = jnp.pad(vh, ((0, 0), (0, 0), (0, pad), (0, 0)))
     return ff_dec(q, kh, vh, lengths, block_kv=block_kv,
                   policy=_session_kernel_policy(interpret))
+
+
+def paged_decode_attention_op(q, kv_pool, block_tables, lengths, *,
+                              impl: str = "xla",
+                              interpret: bool = True) -> jnp.ndarray:
+    """Decode attention through a paged KV pool (continuous batching).
+
+    q: [B,H,D] one token; kv_pool: [nb, 2, page, KVH, D] (one layer's
+    block pool); block_tables: [B, n_pages] (entries >= nb are sentinels);
+    lengths: [B] (0 = inactive slot). "xla" dereferences the table densely;
+    "ff" runs the fused gather->attention StreamGraph.
+    """
+    if impl == "xla":
+        nb, _, page, kvh, d = kv_pool.shape
+        b = q.shape[0]
+        npg = block_tables.shape[-1]
+        bt = jnp.clip(block_tables.astype(jnp.int32), 0, nb - 1)
+        kv = kv_pool[bt]                  # [B, npg, 2, page, KVH, D]
+        k = kv[:, :, 0].reshape(b, npg * page, kvh, d)
+        v = kv[:, :, 1].reshape(b, npg * page, kvh, d)
+        out = attention_xla(q[:, None], k, v, causal=False, lengths=lengths)
+        return out[:, 0]
+    from repro.runtime.paged_kv import paged_decode_attention
+    return paged_decode_attention(q, kv_pool, block_tables, lengths,
+                                  policy=_session_kernel_policy(interpret))
 
 
 # ---------------------------------------------------------------------------

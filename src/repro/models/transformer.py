@@ -70,6 +70,20 @@ def attn_apply(cfg: ArchConfig, p, x, *, positions, cache=None,
         # the cache sequence over the model axis)
         new_cache = {"k": constrain(k, ("batch", "kv", "kv_heads", None)),
                      "v": constrain(v, ("batch", "kv", "kv_heads", None))}
+    elif "kv_pool" in cache:
+        # paged decode: append this token's K/V through the block table,
+        # then attend via the gather->attention stream graph (sentinel
+        # table entries drop the write / mask the read, so inactive
+        # continuous-batching slots are inert)
+        from repro.runtime.paged_kv import scatter_token
+        pool = scatter_token(cache["kv_pool"], cache["block_tables"],
+                             lengths, k[:, 0], v[:, 0],
+                             n_blocks=cache["kv_pool"].shape[0])
+        out = L.paged_decode_attention_op(
+            q[:, 0], pool, cache["block_tables"], lengths + 1,
+            impl=cfg.attn_impl)[:, None]
+        new_cache = {"kv_pool": pool,
+                     "block_tables": cache["block_tables"]}
     else:
         b = x.shape[0]
         ck = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice_in_dim(
@@ -77,7 +91,8 @@ def attn_apply(cfg: ArchConfig, p, x, *, positions, cache=None,
         cv = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice_in_dim(
             c, u, i, axis=0))(cache["v"], v, lengths)
         out = L.decode_attention_op(q[:, 0], ck, cv, lengths + 1,
-                                    impl=cfg.attn_impl)[:, None]
+                                    impl=cfg.attn_impl,
+                                    block_kv=cfg.decode_block_kv)[:, None]
         new_cache = {"k": ck, "v": cv}
     dt = x.dtype
     return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt)), new_cache

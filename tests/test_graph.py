@@ -58,7 +58,8 @@ def _toy_inputs(key=None):
 # ---------------------------------------------------------------------------
 
 
-@pytest.mark.parametrize("name", ["moe_dispatch_ffn", "attention_proj"])
+@pytest.mark.parametrize("name", ["moe_dispatch_ffn", "attention_proj",
+                                  "paged_decode_attention"])
 def test_shipped_graph_fused_matches_reference(name):
     spec = R.get_graph(name)
     out, ref, err, compiled = R.run_graph_smoke(spec)
@@ -68,7 +69,8 @@ def test_shipped_graph_fused_matches_reference(name):
         [(e.edge.label, e.rationale) for e in compiled.plan.edges]
 
 
-@pytest.mark.parametrize("name", ["moe_dispatch_ffn", "attention_proj"])
+@pytest.mark.parametrize("name", ["moe_dispatch_ffn", "attention_proj",
+                                  "paged_decode_attention"])
 def test_shipped_graph_staged_matches_fused(name):
     spec = R.get_graph(name)
     out_f, _, err_f, _ = R.run_graph_smoke(spec)

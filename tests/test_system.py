@@ -40,12 +40,16 @@ def test_train_driver_learns(tmp_path, capsys):
 
 
 def test_serve_driver_generates():
+    """serve driver end to end: both schedulers replay the trace, every
+    request emits, paged decode matches the dense path bitwise."""
     from repro.launch import serve as serve_mod
     out = serve_mod.main(["--arch", "qwen1_5_0p5b", "--smoke", "--requests",
-                          "3", "--prompt-len", "12", "--max-new", "4"])
-    assert len(out) == 3
-    for o in out:
-        assert len(o) >= 4
+                          "3", "--prompt-len", "12", "--max-new", "4",
+                          "--slots", "2", "--page", "8", "--impl", "xla"])
+    assert out["token_count_parity"]
+    assert out["bitwise_identical"]
+    assert out["paged"]["tokens"] >= 3      # every request emitted
+    assert out["lockstep"]["tokens"] == out["paged"]["tokens"]
 
 
 def test_grad_accum_equivalence():
