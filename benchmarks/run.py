@@ -36,7 +36,18 @@ schedule with topology-keyed caches) and **global-planned** (depth/streams
 pinned to the plan the *global* workload would get — the pre-mesh
 behaviour every sharded path used to inherit). Both are parity-checked
 against the unsharded op and the XLA oracle, timed interleaved, and
-written to ``BENCH_sharded.json``. Composes with the other modes."""
+written to ``BENCH_sharded.json``. Composes with the other modes.
+
+``--plans`` runs the fleet plan-service round trip (``repro.plans``):
+records a serve-smoke traffic profile via ``--record-profile``, sweeps it
+offline (``sweep_profile``, bounded by ``--budget-s``) into a versioned
+PlanDB, checks that merging a foreign-fingerprint DB preserves both
+namespaces bitwise, then replays the identical trace in a simulated fresh
+process (cleared caches, swept DB only) and gates the plan-cache hit rate
+at >= 0.9. Writes ``BENCH_plans.json`` (hit rate, cold-start sweep /
+prewarm / replay seconds) plus the swept ``PLANDB_swept.json`` artifact
+CI caches keyed by the plan-format version. ``--smoke`` shrinks the
+trace and is consumed, like ``--serve``."""
 
 from __future__ import annotations
 
@@ -499,6 +510,148 @@ def serve_bench_mode(json_path: str = "BENCH_serve.json",
     print("serve ok")
 
 
+def plans_bench(json_path: str = "BENCH_plans.json", smoke: bool = True,
+                budget_s: float = None,
+                db_out: str = "PLANDB_swept.json") -> None:
+    """Plan-service round trip (``repro.plans``): record a serve-smoke
+    traffic profile, sweep it offline into a PlanDB under a budget, then
+    replay the same trace in a simulated fresh process (cleared in-memory
+    caches, empty host cache) with only the swept DB and measure the
+    plan-cache hit rate. Writes ``BENCH_plans.json`` with the hit rate
+    (gated >= 0.9), cold-start tuning/prewarm times, and a namespace-
+    bitwise merge check; the swept DB lands at ``db_out`` so CI can cache
+    it across runs keyed by PLAN_FORMAT_VERSION."""
+    import shutil
+    import tempfile
+    import warnings
+
+    from repro.core import autotune
+    from repro.launch import serve as serve_lib
+    from repro.plans import PlanDB, TrafficProfile, sweep_profile
+    from repro.plans import plandb as plandb_lib
+
+    tmp = tempfile.mkdtemp(prefix="repro-plans-")
+    profile_path = os.path.join(tmp, "traffic.json")
+    db_path = os.path.join(tmp, "plans_db.json")
+    if smoke:
+        base = ["--smoke", "--requests", "6", "--slots", "2",
+                "--prompt-len", "12", "--max-new", "6", "--rate", "20"]
+        budget_s = 600.0 if budget_s is None else budget_s
+    else:
+        base = ["--smoke", "--requests", "16", "--slots", "4",
+                "--prompt-len", "48", "--max-new", "16", "--rate", "10"]
+    base += ["--policy-mode", "autotune"]
+    ap = argparse.ArgumentParser()
+    serve_lib.add_serve_args(ap)
+
+    def run_serve(extra, host_cache):
+        args = ap.parse_args(base + extra)
+        with autotune.tuning_config(cache_path=host_cache), \
+                warnings.catch_warnings():
+            # in-jit autotune call sites warn per (op, workload) and fall
+            # back analytic — exactly the misses this bench measures
+            warnings.simplefilter("ignore", RuntimeWarning)
+            t0 = time.perf_counter()
+            serve_lib.serve_bench(args)
+            return time.perf_counter() - t0
+
+    # 1. record: the serve-smoke trace with an empty cache and no DB —
+    #    every measured-policy resolution is a cold miss, and the recorder
+    #    captures the exact call-site traffic
+    print("# plans: recording serve-smoke traffic profile")
+    autotune.tuned_cache_clear()
+    autotune.plan_stats_clear()
+    record_s = run_serve(["--record-profile", profile_path],
+                         os.path.join(tmp, "record_host.json"))
+    cold_stats = autotune.plan_stats()
+
+    # 2. sweep: tune offline from the recorded profile under the budget,
+    #    highest observed-frequency x modeled-cost bucket first
+    profile = TrafficProfile.load(profile_path)
+    print(f"# plans: sweeping {len(profile)} buckets "
+          f"({profile.total_count} observations, budget {budget_s}s)")
+    autotune.tuned_cache_clear()
+    # top_k=2 keeps the smoke sweep to (analytic reference + best
+    # predicted) per bucket: interpret-mode compiles dominate, coverage
+    # of all buckets matters more here than search depth
+    sweep = sweep_profile(profile, budget_s=budget_s,
+                          scratch_cache=os.path.join(tmp, "scratch.json"),
+                          warmup=0, iters=1, top_k=2 if smoke else None)
+    sweep.db.save(db_path)
+    for line in sweep.skipped:
+        print(f"#   sweep skipped: {line}")
+
+    # 3. merge check: a DB tuned on a different hw fingerprint merges in
+    #    without rewriting a byte of either namespace
+    foreign = PlanDB()
+    for key, rec in sweep.db.records(sweep.namespace).items():
+        foreign.put("tpu.fake-v5e", key, rec, tuned_at=0.0)
+    merged = PlanDB.load(db_path)
+    report = merged.merge(foreign)
+    merge_ok = (
+        json.dumps(merged.records(sweep.namespace), sort_keys=True)
+        == json.dumps(sweep.db.records(sweep.namespace), sort_keys=True)
+        and json.dumps(merged.records("tpu.fake-v5e"), sort_keys=True)
+        == json.dumps(foreign.records("tpu.fake-v5e"), sort_keys=True)
+        and not report.conflicts)
+
+    # 4. replay: fresh-process simulation — in-memory caches cleared, a
+    #    fresh (empty) host cache, only the swept DB in the chain
+    print("# plans: replaying the trace against the swept PlanDB")
+    autotune.tuned_cache_clear()
+    plandb_lib.clear_cache()
+    autotune.plan_stats_clear()
+    prewarm = plandb_lib.prewarm(db_path)
+    replay_s = run_serve(["--plan-db", db_path],
+                         os.path.join(tmp, "cold_host.json"))
+    warm_stats = autotune.plan_stats()
+
+    payload = {
+        "suite": "plans",
+        "smoke": smoke,
+        "profile": {"buckets": len(profile),
+                    "observations": profile.total_count},
+        "sweep": sweep.to_payload(),
+        "hit_rate": warm_stats["hit_rate"],
+        "stats_cold": cold_stats,
+        "stats_warm": warm_stats,
+        "cold_start": {
+            # what a fresh host pays without the artifact (full offline
+            # sweep) vs. with it (parse + dict lookups)
+            "record_s": record_s,
+            "sweep_s": sweep.wall_s,
+            "prewarm_s": prewarm["prewarm_s"],
+            "replay_s": replay_s,
+        },
+        "prewarm": prewarm,
+        "merge_namespaces_bitwise": merge_ok,
+    }
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"# wrote {json_path}")
+    if db_out:
+        shutil.copyfile(db_path, db_out)
+        print(f"# wrote {db_out}")
+    hr = warm_stats["hit_rate"]
+    print(f"plans,hit_rate,{hr if hr is not None else 'n/a'}")
+    print(f"plans,sweep_s,{sweep.wall_s:.2f}")
+    print(f"plans,prewarm_s,{prewarm['prewarm_s']:.4f}")
+    if not merge_ok:
+        print("\nFAILED: PlanDB merge did not preserve both namespaces "
+              "bitwise", file=sys.stderr)
+        raise SystemExit(1)
+    if hr is None or hr < 0.9:
+        print(f"\nFAILED: plan-cache hit rate {hr} < 0.9 on the fresh-"
+              f"process replay (misses: "
+              f"{warm_stats.get('measured', 0)} measured, "
+              f"{warm_stats.get('analytic-fallback', 0)} fallback)",
+              file=sys.stderr)
+        raise SystemExit(1)
+    print("plans ok")
+
+
 def _global_workload(spec, args, kw):
     """The Workload of the *global* (unsharded) operand shapes — what the
     planner saw before the runtime became mesh-aware."""
@@ -596,6 +749,18 @@ def main() -> None:
     parser.add_argument("--serve-json", default="BENCH_serve.json",
                         help="path for the serve JSON report "
                              "('' disables; default %(default)s)")
+    parser.add_argument("--plans", action="store_true",
+                        help="run the plan-service round trip (record a "
+                             "serve traffic profile, sweep it offline into "
+                             "a PlanDB, replay fresh-process and gate the "
+                             "plan-cache hit rate >= 0.9); --smoke shrinks "
+                             "the trace (and is consumed, like --serve)")
+    parser.add_argument("--plans-json", default="BENCH_plans.json",
+                        help="path for the plans JSON report "
+                             "('' disables; default %(default)s)")
+    parser.add_argument("--plans-db-out", default="PLANDB_swept.json",
+                        help="where to copy the swept PlanDB artifact "
+                             "('' disables; default %(default)s)")
     args = parser.parse_args()
     if args.sharded and "jax" not in sys.modules:
         # must land before the first jax import anywhere in the process
@@ -603,7 +768,7 @@ def main() -> None:
         if "xla_force_host_platform_device_count" not in flags:
             os.environ["XLA_FLAGS"] = \
                 f"{flags} --xla_force_host_platform_device_count=8".strip()
-    if args.smoke and not args.serve:
+    if args.smoke and not (args.serve or args.plans):
         smoke(args.json)
     if args.autotune:
         autotune_bench(args.autotune_json, args.budget_s)
@@ -613,8 +778,11 @@ def main() -> None:
         sharded_bench(args.sharded_json)
     if args.serve:
         serve_bench_mode(args.serve_json, smoke=args.smoke)
+    if args.plans:
+        plans_bench(args.plans_json, smoke=args.smoke,
+                    budget_s=args.budget_s, db_out=args.plans_db_out)
     if not (args.smoke or args.autotune or args.graph or args.sharded
-            or args.serve):
+            or args.serve or args.plans):
         full()
 
 

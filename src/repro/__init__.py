@@ -14,6 +14,8 @@ Public API surface (lazily imported, so ``import repro`` stays cheap):
   repro.current_policy()      the active policy
   repro.MeshSpec              hashable mesh topology (PipePolicy.mesh /
                               plan-cache key component)
+  repro.plans                 fleet plan service: traffic recording,
+                              offline sweeps, mergeable PlanDB artifacts
 """
 
 __version__ = "0.1.0"
@@ -24,6 +26,7 @@ _LAZY = {
     "current_policy": ("repro.core.program", "current_policy"),
     "MeshSpec": ("repro.core.meshspec", "MeshSpec"),
     "ops": ("repro.ops", None),
+    "plans": ("repro.plans", None),
 }
 
 

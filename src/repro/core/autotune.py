@@ -39,6 +39,7 @@ or no runner) fall back to the analytic plan with a warning.
 
 from __future__ import annotations
 
+import collections
 import contextlib
 import dataclasses
 import json
@@ -52,7 +53,7 @@ from typing import Any, Callable, Dict, Mapping, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import planner
+from repro.core import planner, profiling
 from repro.core.meshspec import MeshSpec, SINGLE_DEVICE, resolve_mesh
 from repro.core.pipe import DEFAULT_VMEM_BUDGET_BYTES, Pipe, \
     required_depth, vmem_budget_ok
@@ -98,6 +99,9 @@ class TuningConfig:
     top_k: int = 6
     budget_s: Optional[float] = None
     cache_path: Optional[str] = None
+    # release PlanDB (repro.plans.plandb) consulted between the per-host
+    # disk cache and measurement; None = $REPRO_PLAN_DB (or nothing)
+    plan_db: Optional[str] = None
 
 
 class _ConfigStack(threading.local):
@@ -138,6 +142,16 @@ def cache_path() -> str:
         os.environ.get("REPRO_PLAN_CACHE") or _DEFAULT_CACHE_PATH)
 
 
+def plan_db_path() -> Optional[str]:
+    """Resolve the release PlanDB file: tuning_config > $REPRO_PLAN_DB >
+    none. The DB sits *after* the per-host cache in the lookup chain
+    (host-measured plans are fresher than the shipped artifact) and is
+    read-only: newly measured plans go to the host cache, never the DB."""
+    cfg = current_tuning_config()
+    p = cfg.plan_db or os.environ.get("REPRO_PLAN_DB")
+    return os.path.expanduser(p) if p else None
+
+
 # ---------------------------------------------------------------------------
 # Persistent plan cache (disk JSON fronted by an in-memory dict)
 # ---------------------------------------------------------------------------
@@ -145,7 +159,39 @@ def cache_path() -> str:
 _MEM: Dict[Tuple[str, str], dict] = {}   # (cache path, plan_key) -> record
 _DISK: Dict[str, Dict[str, dict]] = {}   # cache file path -> parsed plans
 _LAST: Dict[str, dict] = {}         # op -> last record resolved (for bench)
+# (op, plan_key) pairs already warned about: the traced-call-site fallback
+# fires once per distinct (op, workload/constraints), not per traced call
 _warned_fallback_ops = set()
+
+# per-source resolution counters for measured policies (memory / disk /
+# plandb / measured / analytic-fallback) plus "analytic" for unmeasured
+# policies — the plan service's hit-rate metric (BENCH_plans.json)
+_STATS: "collections.Counter[str]" = collections.Counter()
+
+# sources that served a plan without re-measurement at the call site
+HIT_SOURCES = ("memory", "disk", "plandb")
+
+
+def plan_stats() -> Dict[str, int]:
+    """Resolution counts by source since the last :func:`plan_stats_clear`.
+
+    ``hits``/``lookups``/``hit_rate`` summarize measured-policy resolutions:
+    a hit is any plan served without measuring (in-memory, per-host disk
+    cache, or the release PlanDB); "measured" and "analytic-fallback" are
+    the misses. Unmeasured ("analytic") resolutions are reported but not
+    counted as lookups."""
+    out: Dict[str, Any] = dict(_STATS)
+    lookups = sum(_STATS[s] for s in
+                  HIT_SOURCES + ("measured", "analytic-fallback"))
+    hits = sum(_STATS[s] for s in HIT_SOURCES)
+    out["lookups"] = lookups
+    out["hits"] = hits
+    out["hit_rate"] = (hits / lookups) if lookups else None
+    return out
+
+
+def plan_stats_clear() -> None:
+    _STATS.clear()
 
 
 def plan_key(op: str, workload, dtype, hw, constraints: str = "",
@@ -463,6 +509,8 @@ def resolve_call(op: str, policy, *, workload, tile, dtype,
                  runner: Optional[Callable] = None,
                  tile_options: Sequence[Mapping[str, Any]] = (),
                  extra_key: str = "",
+                 site: Optional[Mapping[str, Any]] = None,
+                 site_dynamic: Sequence[str] = (),
                  ) -> TunedChoice:
     """Resolve one kernel call site's (tile, depth, streams) under
     ``policy`` — the measured superset of ``PipePolicy.resolve``.
@@ -483,14 +531,36 @@ def resolve_call(op: str, policy, *, workload, tile, dtype,
         not part of the Workload (e.g. chunk_scan's subtile, attention's
         kv length) — folded into the plan-cache key so a tuned plan is
         never served across call sites it was not measured for.
+      site/site_dynamic: kernel shape kwargs (mirroring the kernel's
+        workload-builder signature) for the traffic recorder
+        (:mod:`repro.core.profiling`) — ``site_dynamic`` names the keys
+        the profile shape-buckets. Never part of the plan key.
 
     Resolution order for measured policies: in-memory cache -> on-disk
-    plan cache -> measure-and-persist -> analytic fallback. The cache key
-    also carries the policy's search constraints (pinned depth/streams,
-    stream_options, interpret, tile-search on/off), so e.g. plans measured
-    in interpret mode are never served to compiled-mode call sites.
+    per-host plan cache -> release PlanDB (:func:`plan_db_path`) ->
+    measure-and-persist -> analytic fallback. The cache key also carries
+    the policy's search constraints (pinned depth/streams, stream_options,
+    interpret, tile-search on/off), so e.g. plans measured in interpret
+    mode are never served to compiled-mode call sites.
     """
     mesh = resolve_mesh(getattr(policy, "mesh", None))
+    profiling.emit_call(
+        op=op, policy=policy, workload=workload, tile=tile,
+        dtype=jnp.dtype(dtype).name, mesh=mesh, extra_key=extra_key,
+        site=site, site_dynamic=site_dynamic)
+    # resolve_call funnels into planner.resolve_policy internally — the
+    # suppression scope keeps those inner calls out of the recorded profile
+    with profiling.suppress_planner():
+        choice = _resolve_call(
+            op, policy, workload=workload, tile=tile, dtype=dtype,
+            workload_fn=workload_fn, runner=runner,
+            tile_options=tile_options, extra_key=extra_key, mesh=mesh)
+    _STATS[choice.source] += 1
+    return choice
+
+
+def _resolve_call(op, policy, *, workload, tile, dtype, workload_fn,
+                  runner, tile_options, extra_key, mesh) -> TunedChoice:
     if not wants_measured(policy):
         depth, streams = planner.resolve_policy(
             op, policy, workload=workload, tile=tile, dtype=dtype, mesh=mesh)
@@ -511,9 +581,17 @@ def resolve_call(op: str, policy, *, workload, tile, dtype,
         if record is not None:
             _MEM[mem_key] = record
     if record is None:
+        db = plan_db_path()
+        if db is not None:
+            from repro.plans import plandb as _plandb   # lazy: plans sits on core
+            record = _plandb.lookup(key, path=db)
+            source = "plandb"
+            if record is not None:
+                _MEM[mem_key] = record
+    if record is None:
         if runner is None or workload_fn is None:
-            if op not in _warned_fallback_ops:
-                _warned_fallback_ops.add(op)
+            if (op, key) not in _warned_fallback_ops:
+                _warned_fallback_ops.add((op, key))
                 warnings.warn(
                     f"{op}: measured plan requested but the call site is "
                     f"not measurable (traced operands or no runner); "
@@ -545,6 +623,8 @@ def resolve_graph(graph_name: str, policy, *, workload, tile, dtype,
                   workload_fn: Optional[Callable] = None,
                   runner: Optional[Callable] = None,
                   tile_options: Sequence[Mapping[str, Any]] = (),
+                  site: Optional[Mapping[str, Any]] = None,
+                  site_dynamic: Sequence[str] = (),
                   ) -> TunedChoice:
     """Joint (shared tile, depth, streams) resolution for one compiled
     multi-kernel graph (:mod:`repro.core.graph`).
@@ -566,4 +646,5 @@ def resolve_graph(graph_name: str, policy, *, workload, tile, dtype,
     return resolve_call(f"graph:{graph_name}", policy, workload=workload,
                         tile=tile, dtype=dtype, workload_fn=workload_fn,
                         runner=runner, tile_options=tile_options,
-                        extra_key=f"sig={signature}")
+                        extra_key=f"sig={signature}",
+                        site=site, site_dynamic=site_dynamic)

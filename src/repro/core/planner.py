@@ -15,6 +15,7 @@ from typing import Optional, Sequence, Tuple, Union
 
 import jax.numpy as jnp
 
+from repro.core import profiling
 from repro.core.meshspec import MeshSpec, SINGLE_DEVICE, resolve_mesh
 from repro.core.pipe import DEFAULT_VMEM_BUDGET_BYTES, Pipe, \
     required_depth, vmem_budget_ok
@@ -235,6 +236,12 @@ def resolve_policy(
     """
     if mesh is None:
         mesh = resolve_mesh(getattr(policy, "mesh", None))
+    if profiling.recording():
+        # planner-origin traffic record: suppressed when the call came
+        # through autotune.resolve_call (which already recorded it)
+        profiling.emit_planner(op=op, policy=policy, workload=workload,
+                               tile=tile, dtype=jnp.dtype(dtype).name,
+                               mesh=mesh)
     depth, streams = resolve_auto(
         op, policy.depth, policy.streams, workload=workload, tile=tile,
         dtype=dtype, hw=policy.hw, stream_options=tuple(policy.stream_options),

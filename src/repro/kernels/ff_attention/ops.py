@@ -103,7 +103,11 @@ def _apply(q, k, v, *, kv_groups: int = 1, causal: bool = True,
         tile_options=_TILE_OPTIONS,
         # the workload is built from the q shape only; skv/kv_groups
         # change the measured kernel
-        extra_key=f"skv={skv}|groups={kv_groups}")
+        extra_key=f"skv={skv}|groups={kv_groups}",
+        site={"bh": bh, "s": s, "d": d, "skv": skv,
+              "kv_groups": kv_groups, "causal": causal,
+              "block_q": block_q, "block_kv": block_kv},
+        site_dynamic=("bh", "s", "skv"))
     out = _run(choice.tile_kwargs.get("block_q", block_q),
                choice.tile_kwargs.get("block_kv", block_kv),
                choice.depth, choice.streams)
@@ -119,6 +123,23 @@ def _make_inputs(key):
                            jnp.float32)
     return (q, kv, kv), {"kv_groups": 2, "causal": True, "block_q": 64,
                          "block_kv": 64}
+
+
+def _sweep_inputs(key, site):
+    # rebuild concrete operands at a recorded call-site shape (plan sweep).
+    # The KV batch is bh/kv_groups, so bh snaps to the nearest multiple of
+    # the recorded group count; causal self-attention keeps s == skv.
+    groups = int(site.get("kv_groups", 1))
+    kvb = max(1, int(site["bh"]) // groups)
+    bh, s, d = kvb * groups, int(site["s"]), int(site["d"])
+    skv = s if site.get("causal", True) else int(site.get("skv", s))
+    dt = jnp.dtype(site.get("dtype", "float32"))
+    q = jax.random.normal(key, (bh, s, d), dt)
+    kv = jax.random.normal(jax.random.fold_in(key, 1), (kvb, skv, d), dt)
+    return (q, kv, kv), {"kv_groups": groups,
+                         "causal": bool(site.get("causal", True)),
+                         "block_q": int(site.get("block_q", 128)),
+                         "block_kv": int(site.get("block_kv", 128))}
 
 
 def _smoke_program(*, depth: int = 2, streams: int = 1, tile=None):
@@ -146,4 +167,5 @@ register_kernel(
     doc="flash attention prefill, GQA, KV ring pipes",
     shard_dims=(0, 0, 0),        # head-batch dim data-parallel (q and kv
     shard_out_dim=0,             # shard together, preserving kv_groups)
+    sweep_inputs=_sweep_inputs,
 )

@@ -98,7 +98,11 @@ def _apply(q, k, v, log_w, u=None, *, chunk: int = 64, subtile: int = 16,
         tile_options=_TILE_OPTIONS,
         # statics outside the Workload that change the measured kernel
         extra_key=f"subtile={subtile}|inclusive={int(inclusive)}"
-                  f"|u={int(u is not None)}")
+                  f"|u={int(u is not None)}",
+        site={"bh": bh, "s": s, "n": n, "p": p, "chunk": chunk,
+              "subtile": subtile, "inclusive": inclusive,
+              "has_u": u is not None},
+        site_dynamic=("bh", "s"))
     out = _run(choice.tile_kwargs.get("chunk", chunk), choice.depth,
                choice.streams)
     return out[:, :s]
@@ -118,6 +122,25 @@ def _make_inputs(key):
     lw = -0.5 * jnp.exp(jax.random.normal(jax.random.fold_in(key, 3),
                                           (bh, s, n)))
     return (q, k, v, lw), {"chunk": 64, "subtile": 16, "inclusive": True}
+
+
+def _sweep_inputs(key, site):
+    # rebuild concrete operands at a recorded call-site shape (plan sweep)
+    bh, s = int(site["bh"]), int(site["s"])
+    n, p = int(site["n"]), int(site["p"])
+    dt = jnp.dtype(site.get("dtype", "float32"))
+    q = 0.5 * jax.random.normal(key, (bh, s, n), dt)
+    k = 0.5 * jax.random.normal(jax.random.fold_in(key, 1), (bh, s, n), dt)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (bh, s, p), dt)
+    lw = -0.5 * jnp.exp(jax.random.normal(jax.random.fold_in(key, 3),
+                                          (bh, s, n), dt))
+    args = (q, k, v, lw)
+    if site.get("has_u"):
+        args += (jax.random.normal(jax.random.fold_in(key, 4),
+                                   (bh, s, p), dt),)
+    return args, {"chunk": int(site.get("chunk", 64)),
+                  "subtile": int(site.get("subtile", 16)),
+                  "inclusive": bool(site.get("inclusive", True))}
 
 
 def _smoke_program(*, depth: int = 2, streams: int = 1, tile=None):
@@ -146,4 +169,5 @@ register_kernel(
     doc="gated linear-attention scan (Mamba2 / RWKV6)",
     shard_dims=(0, 0, 0, 0),     # head-batch dim data-parallel
     shard_out_dim=0,
+    sweep_inputs=_sweep_inputs,
 )

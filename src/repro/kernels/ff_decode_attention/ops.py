@@ -112,7 +112,10 @@ def _apply(q, k, v, lengths=None, *, kv_heads: int = None,
         runner=None if autotune.has_tracers(q, k, v, lens) else
         lambda tk, dep, st: lambda: _run(
             tk.get("block_kv", block_kv), dep, st),
-        tile_options=_TILE_OPTIONS)
+        tile_options=_TILE_OPTIONS,
+        site={"b": b, "h": h, "kvh": kvh, "s": s, "d": d,
+              "block_kv": block_kv},
+        site_dynamic=("b", "s"))
     out = _run(choice.tile_kwargs.get("block_kv", block_kv), choice.depth,
                choice.streams)
     return out[:, :, :group, :].reshape(b, h, d)
@@ -129,6 +132,20 @@ def _make_inputs(key):
                           jnp.float32)
     lens = jnp.array([70, 128], jnp.int32)
     return (q, k, v, lens), {"block_kv": 64}
+
+
+def _sweep_inputs(key, site):
+    # rebuild concrete operands at a recorded call-site shape (plan sweep);
+    # h snaps to a multiple of the recorded KV-head count
+    kvh = int(site["kvh"])
+    h = max(1, int(site["h"]) // kvh) * kvh
+    b, s, d = int(site["b"]), int(site["s"]), int(site["d"])
+    dt = jnp.dtype(site.get("dtype", "float32"))
+    q = jax.random.normal(key, (b, h, d), dt)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, kvh, s, d), dt)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, kvh, s, d), dt)
+    lens = jnp.full((b,), s, jnp.int32)
+    return (q, k, v, lens), {"block_kv": int(site.get("block_kv", 128))}
 
 
 def _smoke_program(*, depth: int = 2, streams: int = 1, tile=None):
@@ -155,4 +172,5 @@ register_kernel(
     doc="flash-decode vs. long KV caches",
     shard_dims=(0, 0, 0, 0),     # request batch data-parallel
     shard_out_dim=0,
+    sweep_inputs=_sweep_inputs,
 )

@@ -92,7 +92,9 @@ def _apply(table, idx, *, policy: PipePolicy):
         "ff_gather", pol, workload=w, tile=tile, dtype=table.dtype,
         workload_fn=lambda tk: gather_workload(n, cols, dtype=table.dtype),
         runner=None if autotune.has_tracers(table, idx) else
-        lambda tk, dep, st: lambda: _run(dep, st))
+        lambda tk, dep, st: lambda: _run(dep, st),
+        site={"rows": table.shape[0], "cols": cols, "n": n},
+        site_dynamic=("rows", "n"))
     out = _run(choice.depth, choice.streams)
     return out[:n]
 
@@ -103,6 +105,15 @@ gather = make_entrypoint("ff_gather", _apply)
 def _make_inputs(key):
     tab = jax.random.normal(key, (96, 128), jnp.float32)
     idx = jax.random.randint(jax.random.fold_in(key, 1), (52,), 0, 96)
+    return (tab, idx), {}
+
+
+def _sweep_inputs(key, site):
+    # rebuild concrete operands at a recorded call-site shape (plan sweep)
+    rows, cols, n = int(site["rows"]), int(site["cols"]), int(site["n"])
+    dt = jnp.dtype(site.get("dtype", "float32"))
+    tab = jax.random.normal(key, (rows, cols), dt)
+    idx = jax.random.randint(jax.random.fold_in(key, 1), (n,), 0, rows)
     return (tab, idx), {}
 
 
@@ -130,4 +141,5 @@ register_kernel(
     doc="irregular row gather (embedding / MoE dispatch)",
     shard_dims=(None, 0),        # table replicated, index rows split
     shard_out_dim=0,
+    sweep_inputs=_sweep_inputs,
 )

@@ -105,7 +105,9 @@ def _apply(
         lambda tk, d, s: lambda: _run(a, b, tk.get("block", block), d, s),
         tile_options=_TILE_OPTIONS,
         extra_key="" if out_dtype is None else
-        f"out={jnp.dtype(out_dtype).name}")
+        f"out={jnp.dtype(out_dtype).name}",
+        site={"m": m, "n": n, "k": k, "block": tuple(block)},
+        site_dynamic=("m", "n", "k"))
     out = _run(a, b, choice.tile_kwargs.get("block", block), choice.depth,
                choice.streams)
     return out[:m, :n]
@@ -127,6 +129,15 @@ def _smoke_program(*, depth: int = 2, streams: int = 1, tile=None):
                          dtype=jnp.float32, depth=depth, streams=streams)
 
 
+def _sweep_inputs(key, site):
+    # rebuild concrete operands at a recorded call-site shape (plan sweep)
+    m, n, k = int(site["m"]), int(site["n"]), int(site["k"])
+    dt = jnp.dtype(site.get("dtype", "float32"))
+    a = jax.random.normal(key, (m, k), dt)
+    b = jax.random.normal(jax.random.fold_in(key, 1), (k, n), dt)
+    return (a, b), {"block": tuple(site.get("block", (128, 128, 128)))}
+
+
 register_kernel(
     name="ff_matmul",
     alias="matmul",
@@ -143,4 +154,5 @@ register_kernel(
     doc="DAE blocked matmul (regular streams)",
     shard_dims=(0, None),        # A rows data-parallel, B replicated
     shard_out_dim=0,
+    sweep_inputs=_sweep_inputs,
 )

@@ -435,17 +435,48 @@ def serve_bench(args) -> Dict[str, object]:
         args.requests, prompt_len=args.prompt_len, max_new=args.max_new,
         rate=args.rate, vocab=cfg.vocab, seed=args.seed)
 
-    with shlib.use_sharding(mesh, overrides=dict(cfg.rule_overrides or {})):
-        params = model.init(jax.random.key(0))
-        lockstep = run_lockstep(
-            model, params, cfg, requests, n_slots=args.slots,
-            page=args.page, eos_id=args.eos_id, policy=policy)
-        paged = run_continuous(
-            model, params, cfg, requests, n_slots=args.slots,
-            page=args.page, eos_id=args.eos_id, policy=policy,
-            pool_blocks=args.pool_blocks)
-        bitwise = decode_parity_probe(model, params, cfg, policy,
-                                      page=args.page)
+    # plan-service hooks: --plan-db points the autotune lookup chain at a
+    # release PlanDB (pre-warmed here so the first resolution is a dict
+    # hit, not file IO); --record-profile captures this run's traffic for
+    # an offline sweep (see repro.plans)
+    import contextlib
+
+    from repro.core import autotune
+    plan_service: Dict[str, object] = {}
+    with contextlib.ExitStack() as stack:
+        if getattr(args, "plan_db", None):
+            from repro.plans import plandb as plandb_lib
+            stack.enter_context(autotune.tuning_config(plan_db=args.plan_db))
+            plan_service["prewarm"] = plandb_lib.prewarm(args.plan_db)
+            print(f"# plan-db {args.plan_db}: "
+                  f"{plan_service['prewarm']['records_in_namespace']} "
+                  f"records for namespace "
+                  f"{plan_service['prewarm']['namespace']}")
+        profile = None
+        if getattr(args, "record_profile", None):
+            from repro.plans import record_traffic
+            profile = stack.enter_context(
+                record_traffic(args.record_profile))
+
+        with shlib.use_sharding(mesh,
+                                overrides=dict(cfg.rule_overrides or {})):
+            params = model.init(jax.random.key(0))
+            lockstep = run_lockstep(
+                model, params, cfg, requests, n_slots=args.slots,
+                page=args.page, eos_id=args.eos_id, policy=policy)
+            paged = run_continuous(
+                model, params, cfg, requests, n_slots=args.slots,
+                page=args.page, eos_id=args.eos_id, policy=policy,
+                pool_blocks=args.pool_blocks)
+            bitwise = decode_parity_probe(model, params, cfg, policy,
+                                          page=args.page)
+        if profile is not None:
+            plan_service["recorded"] = {
+                "path": args.record_profile,
+                "buckets": len(profile),
+                "observations": profile.total_count}
+        if getattr(args, "plan_db", None) or profile is not None:
+            plan_service["stats"] = autotune.plan_stats()
 
     result = {
         "arch": args.arch,
@@ -469,6 +500,12 @@ def serve_bench(args) -> Dict[str, object]:
         "bitwise_identical": bitwise == 0.0,
         "token_count_parity": lockstep["tokens"] == paged["tokens"],
     }
+    if plan_service:
+        result["plan_service"] = plan_service
+        if "recorded" in plan_service:
+            rec = plan_service["recorded"]
+            print(f"# recorded traffic profile: {rec['buckets']} buckets / "
+                  f"{rec['observations']} observations -> {rec['path']}")
     return result
 
 
@@ -499,6 +536,14 @@ def add_serve_args(ap: argparse.ArgumentParser) -> None:
                     default="ff",
                     help="session PipePolicy mode installed around the "
                          "prefill/decode step bodies (mesh-tagged)")
+    ap.add_argument("--record-profile", default=None, metavar="PATH",
+                    help="record every plan resolution into a "
+                         "TrafficProfile JSON at PATH (the input of "
+                         "`python -m repro.plans sweep`)")
+    ap.add_argument("--plan-db", default=None, metavar="PATH",
+                    help="release PlanDB consulted after the per-host plan "
+                         "cache and before measuring (pre-warmed at "
+                         "startup; overrides $REPRO_PLAN_DB)")
 
 
 def main(argv=None):

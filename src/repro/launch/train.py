@@ -53,6 +53,14 @@ def main(argv=None):
                          "tagged) around the train-step body, so stream-"
                          "kernel call sites inside the model plan under "
                          "the training mesh; default: no policy override")
+    ap.add_argument("--record-profile", default=None, metavar="PATH",
+                    help="record every plan resolution into a "
+                         "TrafficProfile JSON at PATH (the input of "
+                         "`python -m repro.plans sweep`)")
+    ap.add_argument("--plan-db", default=None, metavar="PATH",
+                    help="release PlanDB consulted after the per-host plan "
+                         "cache and before measuring (pre-warmed at "
+                         "startup; overrides $REPRO_PLAN_DB)")
     args = ap.parse_args(argv)
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -75,8 +83,25 @@ def main(argv=None):
         from repro.core.program import PipePolicy
         policy = PipePolicy(mode=args.policy_mode, interpret=True)
 
+    # plan-service hooks (same contract as launch/serve.py): --plan-db
+    # feeds the autotune lookup chain, --record-profile captures the
+    # training traffic for an offline sweep
+    import contextlib
+
+    stack = contextlib.ExitStack()
+    if args.plan_db:
+        from repro.core import autotune
+        from repro.plans import plandb as plandb_lib
+        stack.enter_context(autotune.tuning_config(plan_db=args.plan_db))
+        pre = plandb_lib.prewarm(args.plan_db)
+        print(f"# plan-db {args.plan_db}: {pre['records_in_namespace']} "
+              f"records for namespace {pre['namespace']}")
+    if args.record_profile:
+        from repro.plans import record_traffic
+        profile = stack.enter_context(record_traffic(args.record_profile))
+
     overrides = dict(cfg.rule_overrides or {})
-    with shlib.use_sharding(mesh, overrides=overrides):
+    with stack, shlib.use_sharding(mesh, overrides=overrides):
         params = model.init(jax.random.key(0))
         opt_init, _ = steps_lib.opt_init_and_update(cfg.optimizer, opt_cfg)
         opt_state = opt_init(params)
@@ -128,6 +153,9 @@ def main(argv=None):
             pipe.stop()
         print(f"done at step {args.steps}; median step "
               f"{np.median(t_hist)*1e3:.0f} ms")
+        if args.record_profile:
+            print(f"# recorded traffic profile: {len(profile)} buckets -> "
+                  f"{args.record_profile}")
         return state
 
 

@@ -209,10 +209,12 @@ def _session_kernel_policy(interpret: bool):
     """Derive the kernel policy from the session `repro.policy` context (so
     no-touch A/B runs reach model code), pinning only what the layer
     contract fixes; modes the attention kernels don't speak (e.g.
-    chunk_scan's "xla") fall back to "ff"."""
+    chunk_scan's "xla") fall back to "ff". "autotune" passes through — the
+    serve/train ``--policy-mode autotune`` path and the plan service
+    (record/replay through the PlanDB lookup chain) depend on it."""
     from repro.core.program import current_policy
     pol = current_policy()
-    if pol.mode not in ("ff", "baseline", "ref"):
+    if pol.mode not in ("ff", "baseline", "ref", "autotune"):
         pol = pol.replace(mode="ff")
     return pol.replace(interpret=interpret)
 

@@ -1,0 +1,93 @@
+"""Device/backend registry: hardware fingerprints -> plan namespaces.
+
+One PlanDB artifact serves a heterogeneous fleet by partitioning records
+into *namespaces*, one per hardware class. This module maps the hardware a
+process actually runs on (its *fingerprint*: JAX backend platform, device
+kind, device count) to the namespace its lookups should hit.
+
+Resolution follows the ludwig registry idiom (SNIPPETS.md): named resolver
+functions self-register via a decorator; non-default resolvers are
+consulted in sorted-name order and the first non-None answer wins, with
+default-registered resolvers as the fallback tier. Deployments add their
+own hardware classes by registering a resolver — no core edits:
+
+    from repro.plans import registry
+
+    @registry.register_fingerprint_resolver("my-pod")
+    def _my_pod(fp):
+        if fp["platform"] == "tpu" and fp["device_count"] >= 256:
+            return "tpu-pod.v5e"
+        return None
+
+``REPRO_PLAN_NAMESPACE`` overrides everything (operator escape hatch), and
+:data:`DEFAULT_NAMESPACE` ("default") is the shared namespace lookups fall
+back to when an artifact carries no records for this hardware class.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+from typing import Callable, Dict, Optional
+
+# namespace consulted when the fingerprint namespace has no record: a
+# publisher can ship conservative plans for unknown fleet members here
+DEFAULT_NAMESPACE = "default"
+
+Resolver = Callable[[Dict[str, object]], Optional[str]]
+
+_RESOLVERS: Dict[str, Resolver] = {}
+_DEFAULT_RESOLVERS: Dict[str, Resolver] = {}
+
+
+def register_fingerprint_resolver(name: str, default: bool = False):
+    """Decorator registering ``fn(fingerprint) -> namespace | None`` under
+    ``name``. ``default=True`` puts it in the fallback tier (consulted only
+    when every non-default resolver abstains)."""
+    def wrap(fn: Resolver) -> Resolver:
+        (_DEFAULT_RESOLVERS if default else _RESOLVERS)[name] = fn
+        return fn
+    return wrap
+
+
+def _sanitize(s: str) -> str:
+    return re.sub(r"[^a-z0-9.]+", "-", str(s).lower()).strip("-") or "unknown"
+
+
+def hardware_fingerprint() -> Dict[str, object]:
+    """What this process runs on: JAX platform, device kind, device count.
+    Degrades to an "unknown" fingerprint when no backend is reachable
+    (plan tooling must work on machines with no accelerator)."""
+    try:
+        import jax
+        devs = jax.devices()
+        return {"platform": str(jax.default_backend()),
+                "device_kind": str(devs[0].device_kind) if devs else "none",
+                "device_count": len(devs)}
+    except Exception:   # noqa: BLE001 — no backend is a valid tooling state
+        return {"platform": "unknown", "device_kind": "none",
+                "device_count": 0}
+
+
+@register_fingerprint_resolver("generic", default=True)
+def _generic(fp: Dict[str, object]) -> str:
+    """Fallback namespace: ``<platform>.<device-kind>`` (e.g. ``cpu.cpu``,
+    ``tpu.tpu-v5-lite``) — every fingerprint resolves somewhere."""
+    return f"{_sanitize(fp['platform'])}.{_sanitize(fp['device_kind'])}"
+
+
+def plan_namespace(fingerprint: Optional[Dict[str, object]] = None) -> str:
+    """The namespace this process's PlanDB lookups hit.
+
+    Order: ``$REPRO_PLAN_NAMESPACE`` > registered resolvers (sorted name
+    order) > default-tier resolvers. Always returns a non-empty token."""
+    env = os.environ.get("REPRO_PLAN_NAMESPACE")
+    if env:
+        return env
+    fp = fingerprint if fingerprint is not None else hardware_fingerprint()
+    for tier in (_RESOLVERS, _DEFAULT_RESOLVERS):
+        for name in sorted(tier):
+            ns = tier[name](fp)
+            if ns:
+                return str(ns)
+    return DEFAULT_NAMESPACE

@@ -194,7 +194,10 @@ def paged_decode_attention(q, kv_pool, block_tables, lengths, *,
         dtype=kv_pool.dtype, signature=sig,
         workload_fn=lambda tk: graphlib.graph_workload(build()),
         runner=None if autotune.has_tracers(q, kv_pool, block_tables, lens)
-        else runner)
+        else runner,
+        site={"b": b, "h": h, "kvh": kvh, "n_pages": n_pages, "page": page,
+              "d": d, "n_blocks": nb, "q_dtype": str(q.dtype)},
+        site_dynamic=("b", "n_pages", "n_blocks"))
     # compiled fresh per call: the graph closure may capture trace-scoped
     # constants, so it must never be reused across jit traces (the outer
     # jitted decode step already amortizes the rebuild)
@@ -470,6 +473,25 @@ def _paged_unfused(idx, table, lengths, q):
     return out.reshape(b, kvh, g_pad, d)
 
 
+def _paged_sweep_inputs(key, site):
+    """Rebuild paged_decode_attention operands at a recorded call-site
+    shape (plan sweep). ``dtype`` is the resolve dtype (the KV pool's);
+    ``q_dtype`` rides along in the recorded site dict."""
+    b, h, kvh = int(site["b"]), int(site["h"]), int(site["kvh"])
+    n_pages, page = int(site["n_pages"]), int(site["page"])
+    d, nb = int(site["d"]), int(site["n_blocks"])
+    kv_dt = jnp.dtype(site.get("dtype", "float32"))
+    q_dt = jnp.dtype(site.get("q_dtype", "float32"))
+    q = 0.3 * jax.random.normal(key, (b, h, d), q_dt)
+    pool = jax.random.normal(jax.random.fold_in(key, 1),
+                             (nb, 2, page, kvh, d), kv_dt)
+    bt = (jax.random.permutation(jax.random.fold_in(key, 2),
+                                 max(nb, b * n_pages))[:b * n_pages]
+          % nb).reshape(b, n_pages).astype(jnp.int32)
+    lens = jnp.full((b,), n_pages * page, jnp.int32)
+    return (q, pool, bt, lens), {}
+
+
 def _register_paged_graph():
     from repro.kernels.registry import register_graph
 
@@ -487,6 +509,10 @@ def _register_paged_graph():
         doc="block-table KV page gather -> paged decode attention; the "
             "gathered pages stream through a VMEM ring (continuous-"
             "batching serving's irregular decode path)",
+        # plan-service sweep: resolve at call-site shapes through the real
+        # entrypoint, not run_graph's fixed smoke point
+        op=paged_decode_attention,
+        sweep_inputs=_paged_sweep_inputs,
     )
 
 

@@ -1,0 +1,391 @@
+"""Plan-service tests (repro.plans + the core profiling/plandb hooks).
+
+Covers: PlanDB merge semantics (disjoint union, newer-wins, bitwise
+namespace preservation, format-mismatch rejection, corrupt-file handling),
+shape-bucketing determinism, traffic recording (autotune vs planner origin,
+double-count suppression), the fingerprint registry, the per-(op, workload)
+fallback-warning dedup, and record -> sweep -> fresh-process PlanDB lookup
+end to end on a real registry kernel.
+"""
+
+import json
+import os
+import warnings
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import Workload, autotune, profiling
+from repro.core.autotune import (
+    resolve_call,
+    tuned_cache_clear,
+    tuning_config,
+)
+from repro.core.program import PipePolicy
+from repro.plans import (
+    PlanDB,
+    PlanDBError,
+    TrafficProfile,
+    bucket_site,
+    bucket_value,
+    content_hash,
+    plan_namespace,
+    record_traffic,
+    register_fingerprint_resolver,
+    sweep_profile,
+)
+from repro.plans import plandb as plandb_lib
+from repro.plans import registry as plan_registry
+
+W = Workload(n_words=512, word_bytes=128 * 128 * 4.0,
+             flops_per_word=2.0 * 128 * 128 * 128, regular=True)
+W2 = Workload(n_words=260, word_bytes=64 * 64 * 4.0,
+              flops_per_word=0.0, regular=False)
+TILE = (128, 128)
+
+REC_A = {"op": "ff_synth", "depth": 3, "streams": 2, "tile_kwargs": {},
+         "measured_s": 1e-3}
+REC_B = {"op": "ff_synth", "depth": 5, "streams": 1, "tile_kwargs": {},
+         "measured_s": 2e-3}
+
+
+@pytest.fixture
+def plan_env(tmp_path, monkeypatch):
+    """Cold caches + env isolated from the host running the tests."""
+    monkeypatch.setenv("REPRO_PLAN_CACHE", os.path.join(tmp_path, "host.json"))
+    monkeypatch.delenv("REPRO_PLAN_DB", raising=False)
+    monkeypatch.delenv("REPRO_PLAN_NAMESPACE", raising=False)
+    tuned_cache_clear()
+    plandb_lib.clear_cache()
+    autotune.plan_stats_clear()
+    yield tmp_path
+    tuned_cache_clear()
+    plandb_lib.clear_cache()
+
+
+# ---------------------------------------------------------------------------
+# PlanDB merge semantics
+# ---------------------------------------------------------------------------
+
+def test_merge_disjoint_keys_is_union():
+    a, b = PlanDB(), PlanDB()
+    a.put("cpu.cpu", "k1", REC_A, tuned_at=1.0)
+    b.put("cpu.cpu", "k2", REC_B, tuned_at=2.0)
+    report = a.merge(b)
+    assert report.added == 1 and not report.conflicts
+    assert set(a.records("cpu.cpu")) == {"k1", "k2"}
+
+
+def test_merge_same_key_newer_wins_and_is_reported():
+    a, b = PlanDB(), PlanDB()
+    a.put("cpu.cpu", "k", REC_A, tuned_at=1.0)
+    b.put("cpu.cpu", "k", REC_B, tuned_at=2.0)
+    report = a.merge(b)
+    assert report.replaced == 1 and len(report.conflicts) == 1
+    assert a.get("cpu.cpu", "k")["depth"] == REC_B["depth"]
+    # and the mirror merge keeps the same (newer) record: order-independent
+    c = PlanDB()
+    c.put("cpu.cpu", "k", REC_B, tuned_at=2.0)
+    d = PlanDB()
+    d.put("cpu.cpu", "k", REC_A, tuned_at=1.0)
+    rep2 = c.merge(d)
+    assert rep2.kept == 1 and c.get("cpu.cpu", "k")["depth"] == REC_B["depth"]
+
+
+def test_merge_identical_content_keeps_ours_and_advances_timestamp():
+    a, b = PlanDB(), PlanDB()
+    a.put("cpu.cpu", "k", REC_A, tuned_at=1.0)
+    b.put("cpu.cpu", "k", REC_A, tuned_at=9.0)
+    report = a.merge(b)
+    assert report.kept == 1 and not report.conflicts
+    assert a.get("cpu.cpu", "k")["tuned_at"] == 9.0
+
+
+def test_merge_preserves_foreign_namespaces_bitwise(plan_env):
+    """The acceptance criterion: merging DBs tuned on different hardware
+    fingerprints never rewrites a byte of either namespace."""
+    a, b = PlanDB(), PlanDB()
+    a.put("cpu.cpu", "k1", REC_A, tuned_at=1.0)
+    b.put("tpu.tpu-v5-lite", "k1", REC_B, tuned_at=2.0)  # same key, other ns
+    before_a = json.dumps(a.records("cpu.cpu"), sort_keys=True)
+    before_b = json.dumps(b.records("tpu.tpu-v5-lite"), sort_keys=True)
+    report = a.merge(b)
+    assert not report.conflicts
+    assert json.dumps(a.records("cpu.cpu"), sort_keys=True) == before_a
+    assert json.dumps(a.records("tpu.tpu-v5-lite"),
+                      sort_keys=True) == before_b
+    # and a save/load round trip keeps both
+    path = os.path.join(plan_env, "merged.json")
+    a.save(path)
+    again = PlanDB.load(path)
+    assert json.dumps(again.records("tpu.tpu-v5-lite"),
+                      sort_keys=True) == before_b
+
+
+def test_merge_rejects_plan_format_mismatch():
+    a = PlanDB()
+    b = PlanDB(plan_format=-1)
+    with pytest.raises(PlanDBError, match="plan format"):
+        a.merge(b)
+
+
+def test_load_rejects_format_mismatch_and_corruption(plan_env):
+    path = os.path.join(plan_env, "db.json")
+    db = PlanDB()
+    db.put("cpu.cpu", "k", REC_A)
+    db.save(path)
+    payload = json.load(open(path))
+    payload["format"] = 99
+    json.dump(payload, open(path, "w"))
+    with pytest.raises(PlanDBError, match="format"):
+        PlanDB.load(path)
+    with open(path, "w") as f:
+        f.write("{not json")
+    with pytest.raises(PlanDBError, match="corrupt"):
+        PlanDB.load(path)
+    with pytest.raises(FileNotFoundError):
+        PlanDB.load(os.path.join(plan_env, "missing.json"))
+
+
+def test_serving_lookup_degrades_on_corrupt_db_with_one_warning(plan_env):
+    path = os.path.join(plan_env, "bad.json")
+    with open(path, "w") as f:
+        f.write("{not json")
+    with pytest.warns(RuntimeWarning, match="unusable PlanDB"):
+        assert plandb_lib.lookup("k", path=path) is None
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")      # second lookup: no re-warn
+        assert plandb_lib.lookup("k", path=path) is None
+
+
+def test_lookup_falls_back_to_default_namespace(plan_env):
+    path = os.path.join(plan_env, "db.json")
+    db = PlanDB()
+    db.put(plan_registry.DEFAULT_NAMESPACE, "k", REC_A)
+    db.save(path)
+    rec = plandb_lib.lookup("k", path=path, namespace="no.such.hw")
+    assert rec is not None and rec["depth"] == REC_A["depth"]
+
+
+def test_content_hash_ignores_volatile_fields():
+    assert content_hash(dict(REC_A, tuned_at=1.0, content_hash="x")) \
+        == content_hash(dict(REC_A, tuned_at=2.0))
+    assert content_hash(REC_A) != content_hash(REC_B)
+
+
+# ---------------------------------------------------------------------------
+# Shape bucketing: deterministic, idempotent, dynamic-keys-only
+# ---------------------------------------------------------------------------
+
+def test_bucket_value_rounds_to_pow2_and_is_idempotent():
+    assert [bucket_value(v) for v in (1, 2, 3, 12, 16, 17)] \
+        == [1, 2, 4, 16, 16, 32]
+    assert bucket_value(0) == 0 and bucket_value(-3) == -3
+    for v in range(1, 200):
+        assert bucket_value(bucket_value(v)) == bucket_value(v)
+
+
+def test_bucket_site_touches_only_dynamic_int_keys():
+    site = {"m": 12, "k": 7, "block": (8, 8), "causal": True}
+    out = bucket_site(site, dynamic=("m", "causal", "block"))
+    assert out == {"m": 16, "k": 7, "block": (8, 8), "causal": True}
+    assert bucket_site(None, dynamic=("m",)) is None
+
+
+def test_profile_bucketing_and_roundtrip(plan_env):
+    prof = TrafficProfile()
+    pol = PipePolicy(mode="autotune", interpret=True)
+
+    def see(n):
+        profiling.set_recorder(prof.observe)
+        try:
+            profiling.emit_call(
+                op="ff_synth", policy=pol,
+                workload=Workload(n_words=n, word_bytes=4.0,
+                                  flops_per_word=0.0, regular=False),
+                tile=TILE, dtype="float32",
+                mesh=autotune.resolve_mesh(None),
+                site={"n": n, "cols": 8}, site_dynamic=("n",))
+        finally:
+            profiling.set_recorder(None)
+
+    for n in (12, 13, 16, 40):
+        see(n)
+    # 12, 13, 16 share the pow2-16 bucket; 40 lands in 64
+    assert len(prof) == 2 and prof.total_count == 4
+    (b16,) = [e for e in prof.entries.values() if e.site["n"] == 16]
+    assert b16.count == 3 and len(b16.variants) == 3   # exact variants kept
+    path = os.path.join(plan_env, "prof.json")
+    prof.save(path)
+    again = TrafficProfile.load(path)
+    assert again.to_payload() == prof.to_payload()     # deterministic bytes
+    again.merge(prof)
+    assert again.total_count == 8 and len(again) == 2
+
+
+def test_profile_rejects_format_mismatch():
+    with pytest.raises(ValueError, match="format"):
+        TrafficProfile.from_payload({"format": 99, "entries": {}})
+
+
+# ---------------------------------------------------------------------------
+# Traffic recording through the real resolution hooks
+# ---------------------------------------------------------------------------
+
+def _synthetic_runner(tile_kwargs, depth, streams):
+    return lambda: jnp.float32(abs(depth - 3) + abs(streams - 2))
+
+
+def test_record_traffic_captures_resolve_call_once(plan_env, monkeypatch):
+    monkeypatch.setattr(autotune, "measure",
+                        lambda fn, **kw: 1e-3 * (1.0 + float(fn())))
+    with record_traffic() as prof:
+        resolve_call("ff_synth", PipePolicy(mode="autotune"), workload=W,
+                     tile=TILE, dtype=jnp.float32,
+                     workload_fn=lambda tk: (W, TILE),
+                     runner=_synthetic_runner,
+                     site={"m": 128}, site_dynamic=("m",))
+    # exactly one autotune-origin bucket: the internal planner funnel was
+    # suppressed, not double-counted
+    (entry,) = prof.entries.values()
+    assert entry.origin == "autotune" and entry.count == 1
+    assert entry.site == {"m": 128}
+    assert not profiling.recording()          # recorder restored on exit
+
+
+def test_record_traffic_sees_direct_planner_calls(plan_env):
+    from repro.core import planner
+    with record_traffic() as prof:
+        planner.resolve_policy("ff_direct", PipePolicy(), workload=W,
+                               tile=TILE, dtype=jnp.float32)
+    (entry,) = prof.entries.values()
+    assert entry.origin == "planner" and entry.op == "ff_direct"
+
+
+def test_recorder_exceptions_disable_recording_not_serving(plan_env):
+    profiling.set_recorder(lambda cs: 1 / 0)
+    try:
+        with pytest.warns(RuntimeWarning, match="recorder raised"):
+            choice = resolve_call("ff_synth", PipePolicy(), workload=W,
+                                  tile=TILE, dtype=jnp.float32)
+        assert choice.source == "analytic"    # resolution survived
+        assert not profiling.recording()      # recorder dropped
+    finally:
+        profiling.set_recorder(None)
+
+
+# ---------------------------------------------------------------------------
+# Fallback-warning dedup: once per (op, workload), not once per op
+# ---------------------------------------------------------------------------
+
+def test_unmeasurable_warning_dedup_per_workload(plan_env):
+    autotune._warned_fallback_ops.clear()
+    pol = PipePolicy(mode="autotune")
+
+    def unmeasurable(w):
+        return resolve_call("ff_synth", pol, workload=w, tile=TILE,
+                            dtype=jnp.float32, runner=None)
+
+    with pytest.warns(RuntimeWarning, match="not measurable"):
+        unmeasurable(W)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")        # same workload: silent
+        unmeasurable(W)
+    with pytest.warns(RuntimeWarning, match="not measurable"):
+        unmeasurable(W2)                      # new workload: warns again
+
+
+# ---------------------------------------------------------------------------
+# Fingerprint registry
+# ---------------------------------------------------------------------------
+
+def test_namespace_env_override(monkeypatch):
+    monkeypatch.setenv("REPRO_PLAN_NAMESPACE", "ops.override")
+    assert plan_namespace() == "ops.override"
+
+
+def test_generic_resolver_and_custom_resolver_priority(monkeypatch):
+    monkeypatch.delenv("REPRO_PLAN_NAMESPACE", raising=False)
+    fp = {"platform": "TPU", "device_kind": "TPU v5 Lite",
+          "device_count": 8}
+    assert plan_namespace(fp) == "tpu.tpu-v5-lite"   # sanitized generic
+
+    @register_fingerprint_resolver("test-pod")
+    def _pod(f):
+        return "tpu-pod.v5e" if f["device_count"] >= 8 else None
+
+    try:
+        assert plan_namespace(fp) == "tpu-pod.v5e"   # beats the default tier
+        assert plan_namespace({"platform": "cpu", "device_kind": "cpu",
+                               "device_count": 1}) == "cpu.cpu"  # abstains
+    finally:
+        del plan_registry._RESOLVERS["test-pod"]
+
+
+def test_plan_db_path_precedence(plan_env, monkeypatch):
+    assert autotune.plan_db_path() is None
+    monkeypatch.setenv("REPRO_PLAN_DB", "/tmp/env.json")
+    assert autotune.plan_db_path() == "/tmp/env.json"
+    with tuning_config(plan_db="/tmp/cfg.json"):
+        assert autotune.plan_db_path() == "/tmp/cfg.json"
+    assert autotune.plan_db_path() == "/tmp/env.json"
+
+
+# ---------------------------------------------------------------------------
+# End to end: record -> sweep -> fresh-process PlanDB hit (real kernel)
+# ---------------------------------------------------------------------------
+
+def test_record_sweep_plandb_roundtrip(plan_env):
+    from repro.kernels.ff_gather import gather
+
+    # depth/streams pinned: the sweep measures exactly one candidate, so
+    # this stays a unit test, not a benchmark
+    pol = PipePolicy(mode="autotune", depth=2, streams=1, interpret=True)
+    tab = jax.random.normal(jax.random.key(0), (64, 8), jnp.float32)
+    idx = jax.random.randint(jax.random.key(1), (16,), 0, 64)
+
+    host = os.path.join(plan_env, "host.json")
+    with record_traffic() as prof, tuning_config(cache_path=host):
+        gather(tab, idx, policy=pol)
+    assert len(prof) == 1
+
+    # namespace defaults to this process's fingerprint namespace — the
+    # same one the replay lookups resolve to
+    sweep = sweep_profile(prof,
+                          scratch_cache=os.path.join(plan_env, "scratch.json"),
+                          warmup=0, iters=1)
+    assert sweep.tuned_buckets == 1 and sweep.keys_written == 1, sweep.skipped
+    dbp = os.path.join(plan_env, "db.json")
+    sweep.db.save(dbp)
+
+    # simulated fresh process: all in-memory state cleared, empty host
+    # cache, only the swept DB in the chain
+    tuned_cache_clear()
+    plandb_lib.clear_cache()
+    autotune.plan_stats_clear()
+    cold = os.path.join(plan_env, "cold.json")
+    with tuning_config(cache_path=cold, plan_db=dbp), warnings.catch_warnings():
+        warnings.simplefilter("error")        # a re-measure warning = failure
+        gather(tab, idx, policy=pol)
+    stats = autotune.plan_stats()
+    assert stats.get("plandb") == 1
+    assert stats["hit_rate"] == 1.0
+    assert not os.path.exists(cold)           # nothing re-measured/persisted
+
+
+def test_sweep_skips_unsweepable_buckets_with_reasons(plan_env):
+    prof = TrafficProfile()
+    pol = PipePolicy(mode="autotune", interpret=True)
+    profiling.set_recorder(prof.observe)
+    try:
+        # a graph-style op that is not a registered graph
+        profiling.emit_call(op="graph:synth", policy=pol, workload=W,
+                            tile=TILE, dtype="float32",
+                            mesh=autotune.resolve_mesh(None))
+    finally:
+        profiling.set_recorder(None)
+    sweep = sweep_profile(prof, namespace="cpu.test", warmup=0, iters=1)
+    assert sweep.tuned_buckets == 0
+    assert len(sweep.skipped) == 1 and "not a registered graph" \
+        in sweep.skipped[0]
