@@ -47,7 +47,17 @@ process (cleared caches, swept DB only) and gates the plan-cache hit rate
 at >= 0.9. Writes ``BENCH_plans.json`` (hit rate, cold-start sweep /
 prewarm / replay seconds) plus the swept ``PLANDB_swept.json`` artifact
 CI caches keyed by the plan-format version. ``--smoke`` shrinks the
-trace and is consumed, like ``--serve``."""
+trace and is consumed, like ``--serve``.
+
+``--chaos`` runs the fault-injection suite (``repro.runtime.chaos``):
+SIGKILL + cold-cache restart (bitwise resume, plan snapshot pre-warmed,
+zero re-measurements), boundary-coincident SIGTERM drain (exactly one
+save), pod eviction (stale-mesh plans dropped, PlanDB serves the new
+topology), and an injected straggler (MAD detection -> rebalance ->
+shrunk-shard re-plan). Writes ``BENCH_chaos.json`` (per-scenario ok +
+recovery seconds + plan-stat breakdowns) and exits non-zero if any
+scenario fails — the CI resilience gate. ``--smoke`` shrinks step counts
+and is consumed, like ``--serve``."""
 
 from __future__ import annotations
 
@@ -688,6 +698,39 @@ def _shard_factor(spec, args):
     return 1
 
 
+def chaos_bench(json_path: str = "BENCH_chaos.json",
+                smoke: bool = True) -> None:
+    """Fault-injection suite: every scenario must hold its invariant.
+
+    Orchestration only — the workers are subprocesses, so this mode stays
+    jax-free in the parent and each restart legitimately starts with a
+    cold plan cache."""
+    from repro.runtime import chaos
+
+    result = chaos.run_scenarios(smoke=smoke)
+    for name, sc in sorted(result["scenarios"].items()):
+        ok = "ok" if sc.get("ok") else "FAIL"
+        extras = []
+        for key in ("recovery_s", "bitwise_identical", "save_count",
+                    "post_remesh_source", "share_after"):
+            if key in sc:
+                v = sc[key]
+                extras.append(f"{key}={v:.2f}" if isinstance(v, float)
+                              else f"{key}={v}")
+        print(f"# chaos {name}: {ok} " + " ".join(extras))
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(result, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"# wrote {json_path}")
+    if not result["ok"]:
+        failed = [n for n, s in result["scenarios"].items()
+                  if not s.get("ok")]
+        print(f"chaos scenarios FAILED: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+    print(f"chaos ok ({result['wall_s']:.1f}s)")
+
+
 def full() -> None:
     from benchmarks import (fig4_m2c2, kernel_bench, roofline_report,
                             table2_feedforward, table3_microbench)
@@ -761,6 +804,16 @@ def main() -> None:
     parser.add_argument("--plans-db-out", default="PLANDB_swept.json",
                         help="where to copy the swept PlanDB artifact "
                              "('' disables; default %(default)s)")
+    parser.add_argument("--chaos", action="store_true",
+                        help="run the fault-injection suite (kill/restart "
+                             "bitwise resume with plan-snapshot pre-warm, "
+                             "SIGTERM drain, pod-eviction remesh, "
+                             "straggler rebalance) and gate on every "
+                             "scenario; --smoke shrinks step counts (and "
+                             "is consumed, like --serve)")
+    parser.add_argument("--chaos-json", default="BENCH_chaos.json",
+                        help="path for the chaos JSON report "
+                             "('' disables; default %(default)s)")
     args = parser.parse_args()
     if args.sharded and "jax" not in sys.modules:
         # must land before the first jax import anywhere in the process
@@ -768,7 +821,7 @@ def main() -> None:
         if "xla_force_host_platform_device_count" not in flags:
             os.environ["XLA_FLAGS"] = \
                 f"{flags} --xla_force_host_platform_device_count=8".strip()
-    if args.smoke and not (args.serve or args.plans):
+    if args.smoke and not (args.serve or args.plans or args.chaos):
         smoke(args.json)
     if args.autotune:
         autotune_bench(args.autotune_json, args.budget_s)
@@ -781,8 +834,10 @@ def main() -> None:
     if args.plans:
         plans_bench(args.plans_json, smoke=args.smoke,
                     budget_s=args.budget_s, db_out=args.plans_db_out)
+    if args.chaos:
+        chaos_bench(args.chaos_json, smoke=args.smoke)
     if not (args.smoke or args.autotune or args.graph or args.sharded
-            or args.serve or args.plans):
+            or args.serve or args.plans or args.chaos):
         full()
 
 

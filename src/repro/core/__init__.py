@@ -58,6 +58,7 @@ from repro.core.pipeline_model import (
 from repro.core.planner import (
     Plan,
     PlanError,
+    invalidate_mesh_plans,
     last_plan,
     plan_cache_clear,
     plan_cache_info,
@@ -72,6 +73,8 @@ from repro.core.autotune import (
     measure,
     resolve_call,
     resolve_graph,
+    restore_snapshot,
+    snapshot_plans,
     tuned_cache_clear,
     tuning_config,
 )
@@ -152,6 +155,7 @@ __all__ = [
     "current_policy",
     "estimate_baseline",
     "estimate_feedforward",
+    "invalidate_mesh_plans",
     "last_plan",
     "localize_workload",
     "make_entrypoint",
@@ -172,8 +176,10 @@ __all__ = [
     "resolve_mesh",
     "resolve_policy",
     "resolve_sharding",
+    "restore_snapshot",
     "run_multistream_reference",
     "run_reference",
+    "snapshot_plans",
     "speedup",
     "split_words_static",
     "tuned_cache_clear",

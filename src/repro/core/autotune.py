@@ -231,6 +231,87 @@ def tuned_cache_clear() -> None:
     _LAST.clear()
 
 
+def _key_mesh_component(mesh: MeshSpec) -> str:
+    return f"|mesh{mesh.token}|dev{mesh.device_count}|"
+
+
+def invalidate_mesh(keep: MeshSpec, *, keep_single: bool = True) -> int:
+    """Drop in-memory tuned-plan entries keyed by a mesh other than
+    ``keep`` (the elastic-recovery hook, mirroring
+    ``planner.invalidate_mesh_plans``).
+
+    Only the in-memory front is touched: the on-disk cache and the PlanDB
+    are already partitioned by mesh token inside every key, so entries for
+    other topologies can never be *served* to the surviving mesh — what
+    must go is the warm state (``_MEM``/``_LAST``) a long-lived process
+    accumulated under the lost topology, so a remesh's memory footprint
+    and introspection surface reflect the new world. Returns the number of
+    records dropped."""
+    kept_components = {_key_mesh_component(keep)}
+    kept_tokens = {keep.token}
+    if keep_single:
+        kept_components.add(_key_mesh_component(SINGLE_DEVICE))
+        kept_tokens.add(SINGLE_DEVICE.token)
+    stale = [mk for mk in _MEM
+             if not any(c in mk[1] for c in kept_components)]
+    for mk in stale:
+        del _MEM[mk]
+    for op in [op for op, rec in _LAST.items()
+               if rec.get("mesh", SINGLE_DEVICE.token) not in kept_tokens]:
+        del _LAST[op]
+    return len(stale)
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint-carried plan snapshots (runtime.fault_tolerance)
+# ---------------------------------------------------------------------------
+
+
+def snapshot_plans(path: Optional[str] = None) -> dict:
+    """Every tuned-plan record this process can currently serve for its
+    plan-cache path — the parsed disk cache overlaid with the in-memory
+    front — as a JSON-serializable snapshot keyed by
+    :data:`PLAN_FORMAT_VERSION`.
+
+    The fault-tolerance supervisor embeds this in every checkpoint's
+    ``extra`` so a restarted job (possibly on a *different* host with a
+    cold plan cache) pre-warms the autotune chain from the checkpoint and
+    skips re-measurement entirely (:func:`restore_snapshot`)."""
+    path = path or cache_path()
+    plans: Dict[str, dict] = dict(load_plans(path))
+    plans.update({k: rec for (p, k), rec in _MEM.items() if p == path})
+    return {"format": PLAN_FORMAT_VERSION, "plans": plans}
+
+
+def restore_snapshot(snapshot: Optional[Mapping[str, Any]],
+                     path: Optional[str] = None) -> int:
+    """Pre-warm the in-memory tuned-plan cache from a checkpoint-carried
+    snapshot (:func:`snapshot_plans`).
+
+    A snapshot from another plan format is ignored with a warning (every
+    plan key embeds its format, so stale records could never be *served* —
+    but silently carrying them forward would hide that the restarted job
+    is re-measuring). Records never overwrite fresher entries this
+    process already measured. Returns the number of records installed."""
+    if not snapshot:
+        return 0
+    if snapshot.get("format") != PLAN_FORMAT_VERSION:
+        warnings.warn(
+            f"ignoring checkpoint plan snapshot with format "
+            f"{snapshot.get('format')!r} != {PLAN_FORMAT_VERSION}; tuned "
+            f"plans will be re-measured", RuntimeWarning, stacklevel=2)
+        return 0
+    path = path or cache_path()
+    installed = 0
+    for key, rec in dict(snapshot.get("plans") or {}).items():
+        if not isinstance(rec, dict):
+            continue
+        if (path, key) not in _MEM:
+            _MEM[(path, key)] = rec
+            installed += 1
+    return installed
+
+
 def last_record(op: str) -> Optional[dict]:
     """The most recent tuned-plan record resolved for ``op`` (bench report
     hook; includes the candidate table and the measured analytic config)."""

@@ -10,8 +10,7 @@ framework can size pipes automatically per kernel call site.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Optional, Sequence, Tuple, Union
+from typing import NamedTuple, Optional, Sequence, Tuple, Union
 
 import jax.numpy as jnp
 
@@ -132,17 +131,67 @@ def plan_pipe(
 # functions of (op, shape, dtype), so this is the per-(op, shape, dtype, hw,
 # mesh) plan cache with no risk of shape aliasing, and plans sized under one
 # mesh topology are never served to call sites running under another.
+#
+# The cache is a hand-rolled insertion-ordered dict (not functools.lru_cache)
+# so the resilience layer can *selectively* invalidate: an elastic remesh
+# drops exactly the entries keyed by meshes that no longer exist
+# (invalidate_mesh_plans) instead of nuking plans that are still valid.
 
 
-@functools.lru_cache(maxsize=1024)
+class _CacheInfo(NamedTuple):
+    hits: int
+    misses: int
+    maxsize: int
+    currsize: int
+
+
+_PLAN_MAXSIZE = 1024
+_PLANS: "dict[tuple, Plan]" = {}    # insertion-ordered: FIFO eviction
+_PLAN_HITS = 0
+_PLAN_MISSES = 0
+
+
 def _plan_cached(op: str, w: Workload, tile: Tuple[int, ...],
                  dtype_name: str, hw: HardwareModel,
                  stream_options: Tuple[int, ...], depth_cap: int,
                  vmem_budget_bytes: int, mesh: MeshSpec) -> Plan:
+    global _PLAN_HITS, _PLAN_MISSES
+    key = (op, w, tile, dtype_name, hw, stream_options, depth_cap,
+           vmem_budget_bytes, mesh)
+    plan = _PLANS.get(key)
+    if plan is not None:
+        _PLAN_HITS += 1
+        return plan
+    _PLAN_MISSES += 1
     plan = plan_pipe(w, tile, jnp.dtype(dtype_name), hw,
                      stream_options=stream_options, depth_cap=depth_cap,
                      vmem_budget_bytes=vmem_budget_bytes)
-    return dataclasses.replace(plan, mesh=mesh)
+    plan = dataclasses.replace(plan, mesh=mesh)
+    if len(_PLANS) >= _PLAN_MAXSIZE:
+        _PLANS.pop(next(iter(_PLANS)))
+    _PLANS[key] = plan
+    return plan
+
+
+def invalidate_mesh_plans(keep: MeshSpec, *,
+                          keep_single: bool = True) -> int:
+    """Drop every cached plan keyed by a mesh other than ``keep``.
+
+    The elastic-recovery hook: after a remesh the surviving topology is
+    ``keep`` — plans sized under the lost topology must never be served
+    again, while plans for the surviving mesh (and, by default, the
+    topology-independent :data:`~repro.core.meshspec.SINGLE_DEVICE`
+    entries) stay warm. ``last_plan`` entries for dropped meshes are
+    cleared too. Returns the number of plans dropped.
+    """
+    kept_meshes = {keep} | ({SINGLE_DEVICE} if keep_single else set())
+    stale = [k for k, p in _PLANS.items() if p.mesh not in kept_meshes]
+    for k in stale:
+        del _PLANS[k]
+    for op in [op for op, p in _LAST_PLAN.items()
+               if p.mesh not in kept_meshes]:
+        del _LAST_PLAN[op]
+    return len(stale)
 
 
 _LAST_PLAN: "dict[str, Plan]" = {}   # op -> most recent plan resolved
@@ -295,11 +344,14 @@ def check_fused_vmem(edge: str, parts: "dict[str, int]",
                    f"{vmem_budget_bytes}B fused-stage budget")
 
 
-def plan_cache_info():
-    """Hit/miss stats of the planner's plan cache (functools CacheInfo)."""
-    return _plan_cached.cache_info()
+def plan_cache_info() -> _CacheInfo:
+    """Hit/miss stats of the planner's plan cache (CacheInfo-shaped)."""
+    return _CacheInfo(_PLAN_HITS, _PLAN_MISSES, _PLAN_MAXSIZE, len(_PLANS))
 
 
 def plan_cache_clear() -> None:
-    _plan_cached.cache_clear()
+    global _PLAN_HITS, _PLAN_MISSES
+    _PLANS.clear()
+    _PLAN_HITS = 0
+    _PLAN_MISSES = 0
     _LAST_PLAN.clear()

@@ -27,7 +27,8 @@ from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.optim import adamw
 from repro.runtime import sharding as shlib
 from repro.runtime.fault_tolerance import FTConfig, Supervisor
-from repro.runtime.stragglers import StragglerConfig, StragglerWatchdog
+from repro.runtime.stragglers import (BatchRebalancer, StragglerConfig,
+                                      StragglerWatchdog)
 
 
 def main(argv=None):
@@ -112,19 +113,41 @@ def main(argv=None):
                 quantized_accum=args.quantized_accum, policy=policy),
             donate_argnums=(0, 1))
 
-        sup = Supervisor(FTConfig(ckpt_dir=args.ckpt_dir,
-                                  ckpt_every=args.ckpt_every),
-                         state_like={"params": params, "opt": opt_state,
-                                     "data_step": np.zeros((), np.int64)},
-                         fail_at_step=args.fail_at)
+        sup = stack.enter_context(
+            Supervisor(FTConfig(ckpt_dir=args.ckpt_dir,
+                                ckpt_every=args.ckpt_every),
+                       state_like={"params": params, "opt": opt_state,
+                                   "data_step": np.zeros((), np.int64)},
+                       fail_at_step=args.fail_at))
         state, start = sup.resume()
         if start:
-            print(f"resumed from checkpoint at step {start}")
+            print(f"resumed from checkpoint at step {start}"
+                  + (f" ({sup.resume_prewarmed} tuned plans pre-warmed)"
+                     if sup.resume_prewarmed else ""))
         params, opt_state = state["params"], state["opt"]
 
         pipe = HostPipeline(lambda s: batch_at(spec, s), depth=2,
                             producers=2, start_step=start)
-        watchdog = StragglerWatchdog(StragglerConfig(), hosts=["host0"])
+
+        # watchdog actions are real: "rebalance" shrinks this host's batch
+        # share and re-plans the stream kernels at the shrunk local shape
+        # (the next tuned resolution repopulates the caches); "replace" is
+        # the elastic path — single-host smoke can only log it, a pod
+        # driver wires elastic.replace_host here
+        def replan(host, share):
+            from repro.core import planner
+            print(f"# straggler {host}: share -> {share}; re-planning "
+                  f"local pipes ({planner.plan_cache_info().currsize} "
+                  f"cached plans)", flush=True)
+            return share
+
+        rebalancer = BatchRebalancer({"host0": max(args.batch, 1)},
+                                     replan=replan)
+        watchdog = StragglerWatchdog(
+            StragglerConfig(), hosts=["host0"], rebalancer=rebalancer,
+            on_replace=lambda h: print(f"# straggler {h}: replace "
+                                       f"requested (elastic.replace_host "
+                                       f"on a pod driver)", flush=True))
 
         t_hist = []
 
@@ -136,7 +159,7 @@ def main(argv=None):
             metrics = jax.device_get(metrics)
             dt = time.time() - t0
             t_hist.append(dt)
-            watchdog.observe_step({"host0": dt})
+            watchdog.step({"host0": dt})
             if step % args.log_every == 0:
                 print(f"step {step:5d} loss={float(metrics['loss']):.4f} "
                       f"gnorm={float(metrics.get('grad_norm', 0)):.3f} "

@@ -12,6 +12,15 @@ from repro.runtime import (
 )
 
 __all__ = [
-    "collectives", "elastic", "fault_tolerance", "pipeline_parallel",
-    "sharding", "stragglers",
+    "chaos", "collectives", "elastic", "fault_tolerance",
+    "pipeline_parallel", "sharding", "stragglers",
 ]
+
+
+def __getattr__(name):
+    # lazy: chaos is also an entrypoint (python -m repro.runtime.chaos);
+    # importing it eagerly here would shadow the runpy execution
+    if name == "chaos":
+        import importlib
+        return importlib.import_module("repro.runtime.chaos")
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

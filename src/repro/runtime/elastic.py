@@ -1,14 +1,32 @@
-"""Elastic scaling: reshard a checkpoint onto a different mesh.
+"""Elastic scaling: reshard a checkpoint onto a different mesh, plan-aware.
 
 Recovery path when a pod (or slice) is lost: rebuild the mesh from the
 surviving device set, recompute shardings from the same logical rules, and
 restore the last checkpoint with the new placements. Since checkpoints are
 host-numpy and shardings are derived (not stored), any mesh whose axes
 divide the array dims works — scale down 2 pods -> 1, or up 1 -> 2.
+
+The restore is **plan-aware** (this is what makes a remesh safe for the
+stream/plan stack):
+
+* the surviving topology is resolved to a
+  :class:`~repro.core.meshspec.MeshSpec` and every planner / autotune
+  cache entry keyed by a mesh that no longer exists is dropped
+  (``planner.invalidate_mesh_plans`` / ``autotune.invalidate_mesh``) — a
+  2-pod->1-pod recovery can never serve a plan sized for the lost
+  topology;
+* the release PlanDB (``REPRO_PLAN_DB`` / ``tuning_config(plan_db=)``),
+  whose keys embed the mesh token, is pre-warmed so call sites under the
+  *new* topology hit swept plans before falling back to measurement or
+  the analytic planner;
+* :func:`last_remesh` exposes a :class:`RemeshReport` (surviving mesh
+  token, dropped-entry counts, PlanDB coverage) so the chaos harness can
+  assert the invalidation actually happened.
 """
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Optional, Sequence, Tuple
 
 import jax
@@ -16,13 +34,57 @@ import numpy as np
 from jax.sharding import Mesh
 
 from repro.checkpoint import restore
+from repro.core import autotune, planner
+from repro.core.meshspec import MeshSpec
 from repro.runtime import sharding as shlib
+
+
+@dataclasses.dataclass(frozen=True)
+class RemeshReport:
+    """What one :func:`remesh_restore` did to the plan stack."""
+
+    mesh: MeshSpec
+    step: int
+    planner_dropped: int
+    autotune_dropped: int
+    plan_db: Optional[str] = None
+    plan_db_records: int = 0     # swept records covering the new namespace
+
+
+_LAST_REMESH: "list[RemeshReport]" = []
+
+
+def last_remesh() -> Optional[RemeshReport]:
+    """The most recent remesh's report (chaos-harness introspection)."""
+    return _LAST_REMESH[-1] if _LAST_REMESH else None
 
 
 def remesh_restore(ckpt_dir: str, state_like: Any, axes_tree: Any,
                    mesh: Mesh, *, step: Optional[int] = None,
-                   overrides=None) -> Tuple[Any, int]:
-    """Restore ``state_like`` onto ``mesh`` using logical ``axes_tree``."""
+                   overrides=None, invalidate_plans: bool = True,
+                   plan_db: Optional[str] = None) -> Tuple[Any, int]:
+    """Restore ``state_like`` onto ``mesh`` using logical ``axes_tree``.
+
+    ``invalidate_plans`` (default on) drops planner/autotune entries keyed
+    by any topology other than the surviving ``mesh`` (single-device plans
+    survive: they are topology-independent) and pre-warms the PlanDB
+    (``plan_db`` > ``$REPRO_PLAN_DB``/``tuning_config``) for the new
+    topology's lookups. Pass ``invalidate_plans=False`` only when the
+    caller manages plan caches itself (e.g. a fresh process whose caches
+    are empty anyway).
+    """
+    spec = MeshSpec.from_mesh(mesh)
+    planner_dropped = autotune_dropped = 0
+    db = plan_db if plan_db is not None else autotune.plan_db_path()
+    db_records = 0
+    if invalidate_plans:
+        planner_dropped = planner.invalidate_mesh_plans(spec)
+        autotune_dropped = autotune.invalidate_mesh(spec)
+    if db:
+        from repro.plans import plandb as plandb_lib
+        pre = plandb_lib.prewarm(db)
+        db_records = int(pre["records_in_namespace"]
+                         + pre["records_in_default"])
     with shlib.use_sharding(mesh, overrides=overrides) as ctx:
         shardings = jax.tree.map(
             lambda ax: shlib.sharding_for(ax, ctx), axes_tree,
@@ -30,6 +92,10 @@ def remesh_restore(ckpt_dir: str, state_like: Any, axes_tree: Any,
             all(a is None or isinstance(a, str) for a in x))
         state, got_step, _ = restore(ckpt_dir, state_like, step=step,
                                      shardings=shardings)
+    _LAST_REMESH[:] = [RemeshReport(
+        mesh=spec, step=got_step, planner_dropped=planner_dropped,
+        autotune_dropped=autotune_dropped, plan_db=db,
+        plan_db_records=db_records)]
     return state, got_step
 
 
@@ -38,12 +104,19 @@ def survivable_mesh(devices: Sequence[jax.Device], model_axis: int,
     """Largest (pod, data, model) mesh the surviving devices support.
 
     Keeps the model axis intact (TP groups must be complete) and shrinks
-    data parallelism — the standard elastic-DP policy.
+    data parallelism — the standard elastic-DP policy. The surviving
+    device count must divide evenly into ``pod_axis * model_axis`` groups
+    (a partial TP group or ragged pod cannot host the model); non-divisible
+    counts raise ``ValueError`` instead of silently dropping devices.
     """
     n = len(devices)
     if n % model_axis != 0:
         raise ValueError(
             f"{n} surviving devices cannot host model_axis={model_axis}")
+    if n % (model_axis * pod_axis) != 0:
+        raise ValueError(
+            f"{n} surviving devices do not divide into pod_axis={pod_axis} "
+            f"x model_axis={model_axis} groups")
     data = n // (model_axis * pod_axis)
     if data < 1:
         raise ValueError("not enough devices for one data shard")
@@ -51,3 +124,20 @@ def survivable_mesh(devices: Sequence[jax.Device], model_axis: int,
     names = ("pod", "data", "model") if pod_axis > 1 else ("data", "model")
     devs = np.asarray(devices[:pod_axis * data * model_axis]).reshape(shape)
     return Mesh(devs, names)
+
+
+def replace_host(ckpt_dir: str, state_like: Any, axes_tree: Any,
+                 surviving_devices: Sequence[jax.Device], *,
+                 model_axis: int, pod_axis: int = 1,
+                 step: Optional[int] = None, overrides=None,
+                 plan_db: Optional[str] = None,
+                 ) -> Tuple[Any, int, Mesh]:
+    """The straggler watchdog's "replace" action, end to end: build the
+    largest mesh the surviving devices support and plan-aware-restore the
+    newest checkpoint onto it. Returns ``(state, step, mesh)`` — the
+    caller re-installs ``use_sharding(mesh)`` and re-jits its steps."""
+    mesh = survivable_mesh(surviving_devices, model_axis, pod_axis=pod_axis)
+    state, got_step = remesh_restore(
+        ckpt_dir, state_like, axes_tree, mesh, step=step,
+        overrides=overrides, plan_db=plan_db)
+    return state, got_step, mesh

@@ -4,11 +4,19 @@ Designed for the 1000+ node regime where *something* is always failing:
 
 * periodic atomic checkpoints (every N steps) + async host offload;
 * SIGTERM/preemption -> drain current step, final checkpoint, clean exit
-  (cluster schedulers send SIGTERM before eviction);
+  (cluster schedulers send SIGTERM before eviction); the supervisor saves
+  the previous SIGTERM handler and restores it on ``close()`` (it is a
+  context manager), and a preemption landing exactly on a ``ckpt_every``
+  boundary saves once, not twice;
+* checkpoints carry a **tuned-plan snapshot** (``autotune.snapshot_plans``,
+  keyed by ``PLAN_FORMAT_VERSION``): ``resume()`` pre-warms the autotune
+  lookup chain from it, so a restarted job — even on a host with a cold
+  plan cache — serves every previously tuned call site from memory and
+  re-measures nothing;
 * on start, auto-resume from the newest complete checkpoint — a killed job
   restarted with the same command continues bitwise-identically (stateless
   data pipeline + pure-function batches make this exact; tested by killing
-  a training subprocess mid-run);
+  a training subprocess mid-run: ``runtime/chaos.py`` + ``tests/test_chaos``);
 * failure injection hooks for tests.
 """
 
@@ -17,8 +25,7 @@ from __future__ import annotations
 import dataclasses
 import signal
 import threading
-import time
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Optional
 
 from repro.checkpoint import latest_step, restore, save
 
@@ -29,10 +36,19 @@ class FTConfig:
     ckpt_every: int = 50
     keep_last: int = 3
     handle_sigterm: bool = True
+    # embed autotune.snapshot_plans() in every checkpoint's extra (and
+    # pre-warm from it on resume) so restarts skip plan re-measurement
+    plan_snapshot: bool = True
 
 
 class Supervisor:
-    """Wraps a step function with checkpoint/restart semantics."""
+    """Wraps a step function with checkpoint/restart semantics.
+
+    Use as a context manager (or call :meth:`close`) so the previously
+    installed SIGTERM handler is restored when supervision ends — nested
+    tools (test harnesses, notebook kernels, an outer supervisor) keep
+    their own preemption handling.
+    """
 
     def __init__(self, cfg: FTConfig, state_like: Any,
                  fail_at_step: Optional[int] = None):
@@ -40,22 +56,70 @@ class Supervisor:
         self.state_like = state_like
         self.fail_at_step = fail_at_step
         self._preempted = threading.Event()
+        self._prev_sigterm = None
+        self._sigterm_installed = False
+        self._last_saved_step: Optional[int] = None
+        self.save_count = 0
+        self.resume_prewarmed = 0    # plan records installed by resume()
         if cfg.handle_sigterm:
             try:
+                self._prev_sigterm = signal.getsignal(signal.SIGTERM)
                 signal.signal(signal.SIGTERM, self._on_sigterm)
+                self._sigterm_installed = True
             except ValueError:
                 pass    # not on main thread (tests)
 
     def _on_sigterm(self, *_):
         self._preempted.set()
 
+    @property
+    def preempted(self) -> bool:
+        return self._preempted.is_set()
+
+    def close(self) -> None:
+        """Restore the SIGTERM handler that was installed before this
+        supervisor took over (idempotent)."""
+        if self._sigterm_installed:
+            signal.signal(signal.SIGTERM, self._prev_sigterm)
+            self._sigterm_installed = False
+
+    def __enter__(self) -> "Supervisor":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
     def resume(self) -> tuple[Any, int]:
-        """(state, start_step); fresh state_like if no checkpoint exists."""
+        """(state, start_step); fresh state_like if no checkpoint exists.
+
+        When the checkpoint carries a plan snapshot, the autotune chain is
+        pre-warmed from it (``resume_prewarmed`` records how many tuned
+        plans were installed) before any kernel call site resolves — the
+        restarted job replays tuned plans instead of re-measuring."""
         step = latest_step(self.cfg.ckpt_dir)
         if step is None:
             return self.state_like, 0
-        state, step, _ = restore(self.cfg.ckpt_dir, self.state_like, step=step)
+        state, step, extra = restore(self.cfg.ckpt_dir, self.state_like,
+                                     step=step)
+        if self.cfg.plan_snapshot:
+            from repro.core import autotune
+            self.resume_prewarmed = autotune.restore_snapshot(
+                (extra or {}).get("plan_snapshot"))
         return state, step
+
+    def _save(self, step: int, state: Any) -> None:
+        # a preemption on a ckpt_every boundary (or the final step) must
+        # not write the same checkpoint twice
+        if step == self._last_saved_step:
+            return
+        extra = None
+        if self.cfg.plan_snapshot:
+            from repro.core import autotune
+            extra = {"plan_snapshot": autotune.snapshot_plans()}
+        save(self.cfg.ckpt_dir, step, state, extra=extra,
+             keep_last=self.cfg.keep_last)
+        self._last_saved_step = step
+        self.save_count += 1
 
     def run(self, state: Any, start_step: int, n_steps: int,
             step_fn: Callable[[Any, int], Any],
@@ -68,10 +132,11 @@ class Supervisor:
             step += 1
             if on_step:
                 on_step(step, state)
-            if step % self.cfg.ckpt_every == 0 or self._preempted.is_set() \
-                    or step == n_steps:
-                save(self.cfg.ckpt_dir, step, state,
-                     keep_last=self.cfg.keep_last)
+            if step % self.cfg.ckpt_every == 0 or step == n_steps:
+                self._save(step, state)
             if self._preempted.is_set():
+                # drain: the current step finished above — final checkpoint
+                # (deduplicated when it coincides with the boundary save)
+                self._save(step, state)
                 break
         return state

@@ -1,0 +1,160 @@
+"""Chaos harness: injected faults against real training subprocesses.
+
+The four scenarios in ``repro.runtime.chaos`` each orchestrate worker
+processes built on the live stream/plan stack:
+
+* SIGKILL mid-run -> cold-cache restart resumes bitwise-identically with
+  the tuned-plan chain pre-warmed from the checkpoint (zero re-measures);
+* SIGTERM on a ``ckpt_every`` boundary -> drain, exactly one save, clean
+  exit, bitwise-identical completion;
+* pod eviction -> ``replace_host`` restores shard-exact state, drops
+  stale-mesh plans, serves the new topology from the PlanDB;
+* injected straggler -> MAD detection -> rebalance -> local pipes
+  re-planned through ``shard_streams`` at the shrunk shard shape.
+
+Plus ``survivable_mesh`` edge cases (satellite coverage): non-divisible
+survivor counts raise, ``pod_axis > 1`` shapes, and scale-*up* 1 -> 2
+pods restores shard-exact state.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import pytest
+
+from repro.runtime import chaos
+from repro.runtime.elastic import survivable_mesh
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def run_sub(body: str, n_dev: int = 8, timeout: int = 560) -> str:
+    prog = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={n_dev}"
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    """) + textwrap.dedent(body)
+    env = {**os.environ, "PYTHONPATH": SRC, "JAX_PLATFORMS": "cpu"}
+    r = subprocess.run([sys.executable, "-c", prog], env=env,
+                       capture_output=True, text=True, timeout=timeout)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr[-3000:]}"
+    return r.stdout
+
+
+# ---------------------------------------------------------------------------
+# survivable_mesh edge cases (fast: the raise paths never build a Mesh)
+# ---------------------------------------------------------------------------
+
+
+def test_survivable_mesh_non_divisible_model_axis_raises():
+    devs = list(jax.devices()) * 7          # n=7 survivors
+    with pytest.raises(ValueError, match="cannot host model_axis=2"):
+        survivable_mesh(devs, model_axis=2)
+
+
+def test_survivable_mesh_non_divisible_pod_groups_raise():
+    devs = list(jax.devices()) * 8          # n=8: model ok, pods ragged
+    with pytest.raises(ValueError, match="pod_axis=3"):
+        survivable_mesh(devs, model_axis=2, pod_axis=3)
+
+
+def test_survivable_mesh_pod_axis_shapes():
+    out = run_sub("""
+        from repro.runtime.elastic import survivable_mesh
+        m = survivable_mesh(jax.devices(), model_axis=2, pod_axis=2)
+        assert m.shape == {"pod": 2, "data": 2, "model": 2}, m.shape
+        assert m.axis_names == ("pod", "data", "model")
+        m = survivable_mesh(jax.devices(), model_axis=2)
+        assert m.shape == {"data": 4, "model": 2}, m.shape
+        m = survivable_mesh(jax.devices()[:4], model_axis=4, pod_axis=1)
+        assert m.shape == {"data": 1, "model": 4}, m.shape
+        print("shapes ok")
+    """)
+    assert "shapes ok" in out
+
+
+def test_survivable_mesh_scale_up_one_to_two_pods(tmp_path):
+    """Elasticity goes both ways: a checkpoint written by a 1-pod (4-dev)
+    job restores shard-exact onto a 2-pod (8-dev) mesh."""
+    out = run_sub(f"""
+        from repro.checkpoint import save
+        from repro.runtime.elastic import (last_remesh, remesh_restore,
+                                           survivable_mesh)
+        small = survivable_mesh(jax.devices()[:4], model_axis=2)
+        params = {{"w": np.arange(256 * 8, dtype=np.float32).reshape(256, 8)}}
+        save(r"{tmp_path}", 7, params)
+
+        big = survivable_mesh(jax.devices(), model_axis=2, pod_axis=2)
+        like = {{"w": jax.ShapeDtypeStruct((256, 8), jnp.float32)}}
+        state, step = remesh_restore(r"{tmp_path}", like,
+                                     {{"w": ("batch", None)}}, big)
+        assert step == 7
+        np.testing.assert_array_equal(np.asarray(state["w"]), params["w"])
+        rep = last_remesh()
+        assert rep.mesh.token == "pod2.data2.model2", rep
+        n_shards = len(set(state["w"].sharding.addressable_devices))
+        assert n_shards == 8, n_shards
+        print("scale-up ok")
+    """)
+    assert "scale-up ok" in out
+
+
+# ---------------------------------------------------------------------------
+# The chaos scenarios (subprocess-heavy -> slow)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_chaos_kill_restart_bitwise_and_prewarmed(tmp_path):
+    r = chaos.scenario_kill_restart(str(tmp_path), steps=10, kill_at=7,
+                                    ckpt_every=3)
+    assert r["ok"], r
+    assert r["killed"] and r["kill_rc"] == -9
+    assert r["bitwise_identical"]
+    assert r["resume_step"] == 6
+    assert r["prewarmed"] >= 1
+    stats = r["restart_plan_stats"]
+    assert stats.get("measured", 0) == 0, stats     # zero re-measurements
+    assert stats.get("memory", 0) >= 4, stats       # every step a warm hit
+    assert r["recovery_s"] <= r["recovery_bound_s"]
+
+
+@pytest.mark.slow
+def test_chaos_sigterm_drain_saves_once(tmp_path):
+    r = chaos.scenario_sigterm_drain(str(tmp_path), steps=12, sigterm_at=6,
+                                     ckpt_every=3)
+    assert r["ok"], r
+    assert r["preempted"] and r["drained_at"] == 6
+    # preemption landed exactly on the boundary: one save, not two
+    assert r["save_count"] == r["expected_saves"] == 2
+    assert r["resume_step"] == 6 and r["bitwise_identical"]
+
+
+@pytest.mark.slow
+def test_chaos_evict_remesh_plan_correctness(tmp_path):
+    r = chaos.scenario_evict_remesh(str(tmp_path))
+    assert r["ok"], r
+    assert r["old_mesh"] == "pod2.data2.model2"
+    assert r["new_mesh"] == "data2.model2"
+    assert r["planner_dropped"] >= 1 and r["autotune_dropped"] >= 1
+    # first post-remesh call site: swept PlanDB plan for the new topology
+    assert r["post_remesh_source"] == "plandb"
+    assert r["post_remesh_mesh"] == "data2.model2"
+    assert r["post_remesh_stats"].get("measured", 0) == 0
+    assert r["recovery_s"] <= r["recovery_bound_s"]
+
+
+@pytest.mark.slow
+def test_chaos_slow_host_rebalance_replans(tmp_path):
+    r = chaos.scenario_slow_host(str(tmp_path))
+    assert r["ok"], r
+    assert r["mad_path"], r                  # detected via MAD, not fallback
+    assert r["share_after"] < r["share_before"]
+    # the re-plan ran through shard_streams at the shrunk shard shape
+    assert r["replan_mesh"] == "data2"
+    assert r["n_words_after"] < r["n_words_before"]
+    assert any(m["action"] == "rebalance" for m in r["mitigations"])

@@ -11,7 +11,8 @@ import numpy as np
 import pytest
 
 from repro.runtime.fault_tolerance import FTConfig, Supervisor
-from repro.runtime.stragglers import StragglerConfig, StragglerWatchdog
+from repro.runtime.stragglers import (BatchRebalancer, StragglerConfig,
+                                      StragglerWatchdog, _median)
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
@@ -102,3 +103,160 @@ def test_straggler_watchdog_policies():
         acts = wd2.observe_step(t)
         assert acts["h1"] in ("none",) if i != 4 else True
     assert acts["h1"] == "none"
+
+
+# ---------------------------------------------------------------------------
+# Straggler statistics: true median + MAD thresholding
+# ---------------------------------------------------------------------------
+
+
+def test_median_even_and_odd_lengths():
+    assert _median([3.0, 1.0, 2.0]) == 2.0
+    assert _median([4.0, 1.0, 3.0, 2.0]) == 2.5    # mean of the middle two
+    assert _median([1.0, 2.0]) == 1.5
+    assert _median([7.0]) == 7.0
+    assert _median([]) == 0.0
+
+
+def test_mad_threshold_catches_what_slow_factor_misses():
+    """With realistic per-step jitter the MAD model flags a 1.3x host that
+    the 1.5x multiplicative fallback would tolerate."""
+    cfg = StragglerConfig(window=32, slow_factor=1.5, mad_factor=5.0,
+                          tolerate=3, evict_after=50)
+    hosts = ["h0", "h1", "h2", "h3"]
+    wd = StragglerWatchdog(cfg, hosts)
+    actions = []
+    for i in range(8):
+        jitter = 0.01 * ((i * 7) % 5 - 2) / 2.0
+        t = {h: 1.0 + jitter for h in hosts}
+        if i >= 2:
+            t["h3"] = 1.3 + jitter             # < slow_factor * median
+        actions.append(wd.observe_step(t)["h3"])
+    thr = wd._threshold()
+    assert 0 < thr < 1.3, thr                  # MAD path, below the outlier
+    assert thr < 1.5                           # tighter than the fallback
+    assert "rebalance" in actions, actions
+
+
+def test_mad_zero_falls_back_to_slow_factor():
+    """A degenerate window (every sample identical) must keep the old
+    multiplicative behavior: 1.4x tolerated, 1.6x struck."""
+    cfg = StragglerConfig(window=16, slow_factor=1.5, tolerate=2,
+                          evict_after=50)
+    hosts = ["h0", "h1", "h2", "h3"]
+    wd = StragglerWatchdog(cfg, hosts)
+    for _ in range(4):
+        acts = wd.observe_step({"h0": 1.0, "h1": 1.0, "h2": 1.0, "h3": 1.4})
+    assert acts["h3"] == "none"
+    wd2 = StragglerWatchdog(cfg, hosts)
+    for _ in range(4):
+        acts = wd2.observe_step({"h0": 1.0, "h1": 1.0, "h2": 1.0, "h3": 1.6})
+    assert acts["h3"] == "rebalance"
+
+
+def test_batch_rebalancer_shrink_floor_and_replan():
+    calls = []
+    rb = BatchRebalancer({"h0": 8, "h1": 8}, min_share=2,
+                         replan=lambda h, s: calls.append((h, s)) or s)
+    assert rb.shrink("h1") == 4 and rb.shrink("h1") == 2
+    assert rb.shrink("h1") == 2                # floored: no replan call
+    assert calls == [("h1", 4), ("h1", 2)]
+    assert rb.last_replan["h1"] == 2
+    assert rb.total() == 10 and rb.shrunk["h1"] == 2
+    rb.drop("h1")
+    assert rb.total() == 8 and rb.shrink("h1") == 0
+    assert rb.shrink("nope") == 0              # unknown host is a no-op
+
+
+def test_watchdog_mitigate_rebalance_then_replace():
+    """The actions become real through the hooks: rebalance shrinks the
+    share (and resets strikes), replace drives on_replace + eviction."""
+    replaced = []
+    hosts = ["h0", "h1", "h2", "h3"]
+    rb = BatchRebalancer({h: 4 for h in hosts})
+    cfg = StragglerConfig(window=32, slow_factor=1.5, tolerate=2,
+                          evict_after=4, hot_spares=1)
+    wd = StragglerWatchdog(cfg, hosts, rebalancer=rb,
+                           on_replace=lambda h: replaced.append(h) or "ok")
+    outcomes = []
+    for _ in range(16):
+        t = {h: 1.0 for h in hosts}
+        t["h3"] = 3.0
+        outcomes.append(wd.step(t))
+        if "h3" not in wd.hosts:
+            break
+    acted = [o["h3"]["action"] for o in outcomes if "h3" in o]
+    assert "rebalance" in acted and acted[-1] == "replace", acted
+    assert rb.shrunk["h3"] >= 2                 # shrunk to the floor first
+    assert "h3" not in rb.shares                # dropped on replace
+    assert replaced == ["h3"]
+    assert "h3" in wd.evicted and "spare_0" in wd.hosts
+    assert [m["action"] for m in wd.mitigations] == acted
+
+
+# ---------------------------------------------------------------------------
+# Supervisor lifecycle: handler restore + no double save + plan snapshot
+# ---------------------------------------------------------------------------
+
+
+def test_supervisor_restores_previous_sigterm_handler(tmp_path):
+    sentinel = lambda *_: None                  # noqa: E731
+    prev = signal.signal(signal.SIGTERM, sentinel)
+    try:
+        with Supervisor(FTConfig(ckpt_dir=str(tmp_path)),
+                        {"x": np.zeros(())}) as sup:
+            assert signal.getsignal(signal.SIGTERM) == sup._on_sigterm
+        assert signal.getsignal(signal.SIGTERM) is sentinel
+        sup.close()                             # idempotent
+        assert signal.getsignal(signal.SIGTERM) is sentinel
+    finally:
+        signal.signal(signal.SIGTERM, prev)
+
+
+def test_supervisor_no_double_save_on_boundary_preemption(tmp_path):
+    """Preemption landing exactly on a ckpt_every boundary saves once."""
+    cfg = FTConfig(ckpt_dir=str(tmp_path), ckpt_every=3,
+                   handle_sigterm=False, plan_snapshot=False)
+    sup = Supervisor(cfg, {"x": np.zeros((), np.int64)})
+
+    def on_step(step, _state):
+        if step == 6:                           # boundary: 6 % 3 == 0
+            sup._on_sigterm()
+    final = sup.run({"x": np.zeros((), np.int64)}, 0, 20, _counter_step,
+                    on_step=on_step)
+    assert sup.preempted
+    assert int(final["x"]) == sum(range(1, 7))
+    assert sup.save_count == 2                  # steps 3 and 6 — 6 once
+    from repro.checkpoint import latest_step
+    assert latest_step(str(tmp_path)) == 6
+
+
+def test_supervisor_checkpoint_carries_plan_snapshot(tmp_path):
+    """Saved checkpoints embed the tuned-plan snapshot and resume() pre-
+    warms the autotune chain from it under the *current* cache path."""
+    from repro.core import autotune
+
+    cache_a = str(tmp_path / "cache_a.json")
+    cache_b = str(tmp_path / "cache_b.json")
+    key = "ff_fake|TPUv5e|float32|fmt%d|meshsingle|dev1||tile..." \
+        % autotune.PLAN_FORMAT_VERSION
+    rec = {"tile": [128, 128], "depth": 2, "streams": 1,
+           "mesh": "single", "ms": 0.5}
+    cfg = FTConfig(ckpt_dir=str(tmp_path / "ckpt"), ckpt_every=2,
+                   handle_sigterm=False)
+    autotune.tuned_cache_clear()
+    try:
+        with autotune.tuning_config(cache_path=cache_a):
+            autotune._MEM[(autotune.cache_path(), key)] = rec
+            sup = Supervisor(cfg, {"x": np.zeros((), np.int64)})
+            sup.run({"x": np.zeros((), np.int64)}, 0, 2, _counter_step)
+        # "restarted on another host": fresh caches, different cache path
+        autotune.tuned_cache_clear()
+        with autotune.tuning_config(cache_path=cache_b):
+            sup2 = Supervisor(cfg, {"x": np.zeros((), np.int64)})
+            _state, start = sup2.resume()
+            assert start == 2
+            assert sup2.resume_prewarmed >= 1
+            assert autotune._MEM[(autotune.cache_path(), key)]["ms"] == 0.5
+    finally:
+        autotune.tuned_cache_clear()
