@@ -27,6 +27,7 @@ _LAZY = {
     "MeshSpec": ("repro.core.meshspec", "MeshSpec"),
     "ops": ("repro.ops", None),
     "plans": ("repro.plans", None),
+    "obs": ("repro.obs", None),
 }
 
 

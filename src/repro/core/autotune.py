@@ -53,6 +53,7 @@ from typing import Any, Callable, Dict, Mapping, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core import planner, profiling
 from repro.core.meshspec import MeshSpec, SINGLE_DEVICE, resolve_mesh
 from repro.core.pipe import DEFAULT_VMEM_BUDGET_BYTES, Pipe, \
@@ -81,13 +82,19 @@ class TunedChoice:
     the call site's default tile. ``source`` records where the choice came
     from: "analytic" (policy did not ask for measurement),
     "analytic-fallback" (asked but unmeasurable), "measured" (tuned now),
-    "memory"/"disk" (served from the plan cache).
+    "memory"/"disk"/"plandb" (served from the plan cache). ``origin``
+    names the tier that originally produced the record ("disk" /
+    "plandb" / "measured" / "snapshot") — for a memory hit, the tier that
+    installed the in-memory entry, so a cache hit stays distinguishable
+    from the layer it shadows; empty for analytic resolutions, which are
+    never cached.
     """
 
     tile_kwargs: Mapping[str, Any]
     depth: int
     streams: int
     source: str
+    origin: str = ""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -102,6 +109,10 @@ class TuningConfig:
     # release PlanDB (repro.plans.plandb) consulted between the per-host
     # disk cache and measurement; None = $REPRO_PLAN_DB (or nothing)
     plan_db: Optional[str] = None
+    # tracing sink for the scope: passing trace_path= to tuning_config
+    # enables obs spans to that JSONL file (None explicitly disables);
+    # leaving the field untouched keeps the ambient REPRO_TRACE state
+    trace_path: Optional[str] = None
 
 
 class _ConfigStack(threading.local):
@@ -122,13 +133,22 @@ def tuning_config(**fields):
 
     ``with tuning_config(budget_s=12, iters=2): ...`` bounds the wall time
     and sampling of any tuning triggered inside; ``cache_path=`` redirects
-    the persistent plan cache (tests point it at a tmpdir).
+    the persistent plan cache (tests point it at a tmpdir);
+    ``trace_path=`` turns on obs tracing spans to that JSONL file for the
+    scope (``trace_path=None`` explicitly disables; omitting the field
+    keeps the ambient ``REPRO_TRACE`` state).
     """
     cfg = dataclasses.replace(current_tuning_config(), **fields)
     _configs.stack.append(cfg)
+    trace_state = None
+    if "trace_path" in fields:
+        trace_state = (obs.enable(cfg.trace_path) if cfg.trace_path
+                       else obs.disable())
     try:
         yield cfg
     finally:
+        if trace_state is not None:
+            obs.restore(trace_state)
         _configs.stack.pop()
 
 
@@ -157,6 +177,11 @@ def plan_db_path() -> Optional[str]:
 # ---------------------------------------------------------------------------
 
 _MEM: Dict[Tuple[str, str], dict] = {}   # (cache path, plan_key) -> record
+# which tier installed each _MEM record ("disk" / "plandb" / "measured" /
+# "snapshot"): repeat resolutions report source="memory", and this map is
+# what keeps a prewarmed-PlanDB hit distinguishable from a self-measured
+# one in plan_stats_snapshot() / the obs counters
+_MEM_ORIGIN: Dict[Tuple[str, str], str] = {}
 _DISK: Dict[str, Dict[str, dict]] = {}   # cache file path -> parsed plans
 _LAST: Dict[str, dict] = {}         # op -> last record resolved (for bench)
 # (op, plan_key) pairs already warned about: the traced-call-site fallback
@@ -165,21 +190,31 @@ _warned_fallback_ops = set()
 
 # per-source resolution counters for measured policies (memory / disk /
 # plandb / measured / analytic-fallback) plus "analytic" for unmeasured
-# policies — the plan service's hit-rate metric (BENCH_plans.json)
+# policies — the plan service's hit-rate metric (BENCH_plans.json).
+# "memory" hits additionally count under "memory.<origin>" (disk / plandb /
+# measured / snapshot), naming the tier that originally installed the
+# in-memory record: a PlanDB prewarm followed by hits is distinguishable
+# from records this process measured itself.
 _STATS: "collections.Counter[str]" = collections.Counter()
 
 # sources that served a plan without re-measurement at the call site
 HIT_SOURCES = ("memory", "disk", "plandb")
 
 
-def plan_stats() -> Dict[str, int]:
+def plan_stats_snapshot() -> Dict[str, int]:
     """Resolution counts by source since the last :func:`plan_stats_clear`.
 
     ``hits``/``lookups``/``hit_rate`` summarize measured-policy resolutions:
     a hit is any plan served without measuring (in-memory, per-host disk
     cache, or the release PlanDB); "measured" and "analytic-fallback" are
     the misses. Unmeasured ("analytic") resolutions are reported but not
-    counted as lookups."""
+    counted as lookups. ``memory.<origin>`` keys split the in-memory hits
+    by the tier that installed the record.
+
+    The same counts flow into the obs metrics registry as
+    ``plan_resolutions_total{source=...}`` — ``obs.metrics_snapshot()`` is
+    the unified surface; this accessor remains for plan-service internals
+    and benches."""
     out: Dict[str, Any] = dict(_STATS)
     lookups = sum(_STATS[s] for s in
                   HIT_SOURCES + ("measured", "analytic-fallback"))
@@ -190,8 +225,26 @@ def plan_stats() -> Dict[str, int]:
     return out
 
 
+_warned_plan_stats_deprecated = False
+
+
+def plan_stats() -> Dict[str, int]:
+    """Deprecated alias of :func:`plan_stats_snapshot` — the obs metrics
+    registry (``obs.metrics_snapshot()``) subsumes the ad-hoc stat surface;
+    use that or :func:`plan_stats_snapshot` directly."""
+    global _warned_plan_stats_deprecated
+    if not _warned_plan_stats_deprecated:
+        _warned_plan_stats_deprecated = True
+        warnings.warn(
+            "plan_stats() is deprecated: use obs.metrics_snapshot() "
+            "(plan_resolutions_total counters) or plan_stats_snapshot()",
+            DeprecationWarning, stacklevel=2)
+    return plan_stats_snapshot()
+
+
 def plan_stats_clear() -> None:
     _STATS.clear()
+    obs.metrics_clear("plan_resolutions_total")
 
 
 def plan_key(op: str, workload, dtype, hw, constraints: str = "",
@@ -227,6 +280,7 @@ def tuned_cache_clear() -> None:
     """Drop the in-memory tuned-plan caches (the disk *file* is untouched:
     the next lookup re-reads it, like a fresh process would)."""
     _MEM.clear()
+    _MEM_ORIGIN.clear()
     _DISK.clear()
     _LAST.clear()
 
@@ -256,6 +310,7 @@ def invalidate_mesh(keep: MeshSpec, *, keep_single: bool = True) -> int:
              if not any(c in mk[1] for c in kept_components)]
     for mk in stale:
         del _MEM[mk]
+        _MEM_ORIGIN.pop(mk, None)
     for op in [op for op, rec in _LAST.items()
                if rec.get("mesh", SINGLE_DEVICE.token) not in kept_tokens]:
         del _LAST[op]
@@ -308,6 +363,7 @@ def restore_snapshot(snapshot: Optional[Mapping[str, Any]],
             continue
         if (path, key) not in _MEM:
             _MEM[(path, key)] = rec
+            _MEM_ORIGIN[(path, key)] = "snapshot"
             installed += 1
     return installed
 
@@ -631,12 +687,22 @@ def resolve_call(op: str, policy, *, workload, tile, dtype,
         site=site, site_dynamic=site_dynamic)
     # resolve_call funnels into planner.resolve_policy internally — the
     # suppression scope keeps those inner calls out of the recorded profile
-    with profiling.suppress_planner():
-        choice = _resolve_call(
-            op, policy, workload=workload, tile=tile, dtype=dtype,
-            workload_fn=workload_fn, runner=runner,
-            tile_options=tile_options, extra_key=extra_key, mesh=mesh)
+    with obs.span("resolve_call", op=op, mesh=mesh.token) as sp:
+        with profiling.suppress_planner():
+            choice = _resolve_call(
+                op, policy, workload=workload, tile=tile, dtype=dtype,
+                workload_fn=workload_fn, runner=runner,
+                tile_options=tile_options, extra_key=extra_key, mesh=mesh)
+        sp.set(source=choice.source, origin=choice.origin,
+               depth=choice.depth, streams=choice.streams)
     _STATS[choice.source] += 1
+    if choice.source == "memory" and choice.origin:
+        _STATS[f"memory.{choice.origin}"] += 1
+    # structural counter, always on: the obs registry is the unified
+    # surface (metrics_snapshot) over the same counts plan_stats reports
+    obs.counter("plan_resolutions_total",
+                "plan resolutions by source (autotune lookup chain)",
+                source=choice.source, origin=choice.origin).inc()
     return choice
 
 
@@ -655,12 +721,16 @@ def _resolve_call(op, policy, *, workload, tile, dtype, workload_fn,
     path = cache_path()
     mem_key = (path, key)
     source = "memory"
+    origin = ""
     record = _MEM.get(mem_key)
+    if record is not None:
+        origin = _MEM_ORIGIN.get(mem_key, "")
     if record is None:
         record = load_plans(path).get(key)
         source = "disk"
         if record is not None:
             _MEM[mem_key] = record
+            _MEM_ORIGIN[mem_key] = "disk"
     if record is None:
         db = plan_db_path()
         if db is not None:
@@ -669,6 +739,7 @@ def _resolve_call(op, policy, *, workload, tile, dtype, workload_fn,
             source = "plandb"
             if record is not None:
                 _MEM[mem_key] = record
+                _MEM_ORIGIN[mem_key] = "plandb"
     if record is None:
         if runner is None or workload_fn is None:
             if (op, key) not in _warned_fallback_ops:
@@ -693,10 +764,15 @@ def _resolve_call(op, policy, *, workload, tile, dtype, workload_fn,
                                     source="analytic-fallback", mesh=mesh)
         source = "measured"
         _MEM[mem_key] = record
+        _MEM_ORIGIN[mem_key] = "measured"
         store_plan(key, record, path)
     _LAST[op] = dict(record, source=source)
+    # origin = which lookup layer first produced this record (every branch
+    # above stamps _MEM_ORIGIN as it populates the memory front), so a
+    # later memory hit stays distinguishable from the layer it shadowed
     return TunedChoice(_as_tuples(record["tile_kwargs"]),
-                       int(record["depth"]), int(record["streams"]), source)
+                       int(record["depth"]), int(record["streams"]), source,
+                       _MEM_ORIGIN.get(mem_key, origin))
 
 
 def resolve_graph(graph_name: str, policy, *, workload, tile, dtype,

@@ -68,6 +68,7 @@ a declared dtype.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, \
     Tuple
 
@@ -77,6 +78,7 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import obs
 from repro.core import planner
 from repro.core.emitter import GatherRingPipe, RingPipe, acquire, release
 from repro.core.meshspec import MeshSpec, SINGLE_DEVICE, localize_workload, \
@@ -821,6 +823,24 @@ def _resolve_node(graph: StreamGraph, node: GraphNode, policy,
     return w, depth, streams
 
 
+def _traced_compile_graph(fn):
+    """Wrap the graph compile in an obs span carrying the per-edge
+    fused/staged decision and rationale (no-op when tracing is off)."""
+    @functools.wraps(fn)
+    def wrapper(graph, **kw):
+        with obs.span("compile_graph", graph=graph.name,
+                      nodes=len(graph.nodes)) as sp:
+            compiled = fn(graph, **kw)
+            sp.set(
+                hbm_bytes_saved=compiled.plan.hbm_bytes_saved,
+                edges={f"{e.edge.src}->{e.edge.dst}":
+                       {"mode": e.mode, "rationale": e.rationale}
+                       for e in compiled.plan.edges})
+            return compiled
+    return wrapper
+
+
+@_traced_compile_graph
 def compile_graph(graph: StreamGraph, *, policy=None,
                   vmem_budget_bytes: int = _VMEM_BUDGET_BYTES,
                   prefer: Optional[str] = None,

@@ -14,6 +14,7 @@ from typing import NamedTuple, Optional, Sequence, Tuple, Union
 
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core import profiling
 from repro.core.meshspec import MeshSpec, SINGLE_DEVICE, resolve_mesh
 from repro.core.pipe import DEFAULT_VMEM_BUDGET_BYTES, Pipe, \
@@ -216,9 +217,14 @@ def planned_pipe(
     mesh: MeshSpec = SINGLE_DEVICE,
 ) -> Plan:
     """Memoized :func:`plan_pipe` for one kernel call site."""
-    plan = _plan_cached(op, w, tuple(tile), jnp.dtype(dtype).name, hw,
-                        tuple(stream_options), depth_cap, vmem_budget_bytes,
-                        mesh)
+    pre_misses = _PLAN_MISSES
+    with obs.span("plan_pipe", op=op, mesh=mesh.token) as sp:
+        plan = _plan_cached(op, w, tuple(tile), jnp.dtype(dtype).name, hw,
+                            tuple(stream_options), depth_cap,
+                            vmem_budget_bytes, mesh)
+        sp.set(depth=plan.pipe.depth, streams=plan.pipe.streams,
+               predicted_s=plan.predicted_s,
+               cached=_PLAN_MISSES == pre_misses)
     _LAST_PLAN[op] = plan
     return plan
 
@@ -291,12 +297,15 @@ def resolve_policy(
         profiling.emit_planner(op=op, policy=policy, workload=workload,
                                tile=tile, dtype=jnp.dtype(dtype).name,
                                mesh=mesh)
-    depth, streams = resolve_auto(
-        op, policy.depth, policy.streams, workload=workload, tile=tile,
-        dtype=dtype, hw=policy.hw, stream_options=tuple(policy.stream_options),
-        mesh=mesh)
-    if policy.mode == "baseline":
-        depth = 1
+    with obs.span("resolve_policy", op=op, mode=policy.mode,
+                  mesh=mesh.token) as sp:
+        depth, streams = resolve_auto(
+            op, policy.depth, policy.streams, workload=workload, tile=tile,
+            dtype=dtype, hw=policy.hw,
+            stream_options=tuple(policy.stream_options), mesh=mesh)
+        if policy.mode == "baseline":
+            depth = 1
+        sp.set(depth=depth, streams=streams)
     return depth, streams
 
 

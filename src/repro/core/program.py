@@ -51,6 +51,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import obs
 from repro.core import planner
 from repro.core.emitter import GatherRingPipe, RingPipe, acquire, release
 from repro.core.meshspec import MeshSpec, localize_workload, resolve_sharding
@@ -512,6 +513,19 @@ def _clamped_streams(tile0: int, streams: int) -> int:
     return max(1, s)
 
 
+def _traced_compile(fn):
+    """Wrap the program lowering in an obs span (no-op when tracing is
+    off) so compile time and ring structure land in the trace."""
+    @functools.wraps(fn)
+    def wrapper(program, **kw):
+        with obs.span("compile_program", program=program.name,
+                      n_words=program.n_words,
+                      streams=len(program.streams)):
+            return fn(program, **kw)
+    return wrapper
+
+
+@_traced_compile
 def compile_program(program: StreamProgram, *,
                     interpret: Optional[bool] = None,
                     pipe_overrides: Optional[Mapping[str, Pipe]] = None,

@@ -43,6 +43,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs.base import ARCH_IDS, get_config, smoke_config
 from repro.launch import steps as steps_lib
 from repro.launch.mesh import make_host_mesh
@@ -176,6 +177,14 @@ def run_lockstep(model, params, cfg, requests: List[Request], *,
     steps = 0
     emits: Dict[int, List[float]] = {}
     utils: List[float] = []
+    # live telemetry: one enabled check per run, then per-token histogram
+    # observes of exactly the quantity _summarize computes post hoc (first
+    # token from arrival, later tokens from the previous emit)
+    telemetry = obs.enabled()
+    hist = (obs.histogram("serve_token_latency_seconds",
+                          "per-token emit latency (live)",
+                          scheduler="lockstep") if telemetry else None)
+    prev_emit: Dict[int, float] = {}
     queue = deque(sorted(requests, key=lambda r: r.arrival))
     while queue:
         batch = [queue.popleft() for _ in range(min(n_slots, len(queue)))]
@@ -188,9 +197,11 @@ def run_lockstep(model, params, cfg, requests: List[Request], *,
             lens[i] = len(r.prompt)
 
         t0 = time.perf_counter()
-        _, cache = prefill(params, {"tokens": jnp.asarray(toks)})
-        cache = pad_cache_to(cache, p_max, s_max, 2)
-        jax.block_until_ready(cache)
+        with obs.span("serve_prefill", scheduler="lockstep",
+                      batch=len(batch)):
+            _, cache = prefill(params, {"tokens": jnp.asarray(toks)})
+            cache = pad_cache_to(cache, p_max, s_max, 2)
+            jax.block_until_ready(cache)
         dt = time.perf_counter() - t0
         clock += dt
         prefill_s += dt
@@ -205,9 +216,10 @@ def run_lockstep(model, params, cfg, requests: List[Request], *,
         # lockstep's cost: the batch steps until its slowest row finishes
         while active.any():
             t0 = time.perf_counter()
-            nxt, _, cache = decode(
-                params, {"token": cur, "lengths": lengths}, cache)
-            nxt_np = np.asarray(nxt)
+            with obs.span("serve_decode_step", scheduler="lockstep"):
+                nxt, _, cache = decode(
+                    params, {"token": cur, "lengths": lengths}, cache)
+                nxt_np = np.asarray(nxt)
             dt = time.perf_counter() - t0
             clock += dt
             decode_s += dt
@@ -216,6 +228,9 @@ def run_lockstep(model, params, cfg, requests: List[Request], *,
                 r = batch[i]
                 tok = int(nxt_np[i])
                 emits.setdefault(r.rid, []).append(clock)
+                if telemetry:
+                    hist.observe(clock - prev_emit.get(r.rid, r.arrival))
+                    prev_emit[r.rid] = clock
                 produced[i] += 1
                 if tok == eos_id or produced[i] >= r.max_new:
                     active[i] = False      # retired; cache stays allocated
@@ -272,6 +287,14 @@ def run_continuous(model, params, cfg, requests: List[Request], *,
     emits: Dict[int, List[float]] = {}
     utils: List[float] = []
     utils_pool: List[float] = []
+    telemetry = obs.enabled()
+    hist = (obs.histogram("serve_token_latency_seconds",
+                          "per-token emit latency (live)",
+                          scheduler="paged") if telemetry else None)
+    kv_gauge = (obs.gauge("serve_kv_utilization",
+                          "paged KV pool utilization vs allocated blocks")
+                if telemetry else None)
+    prev_emit: Dict[int, float] = {}
     pending = deque(sorted(requests, key=lambda r: r.arrival))
     slot_req: List[Optional[Request]] = [None] * n_slots
     cur = np.zeros(n_slots, np.int32)
@@ -297,10 +320,12 @@ def run_continuous(model, params, cfg, requests: List[Request], *,
             toks = np.zeros((1, pb), np.int32)
             toks[0, :plen] = r.prompt
             t0 = time.perf_counter()
-            _, pc = prefill(params, {"tokens": jnp.asarray(toks)})
-            kv.admit(slot, pc["k"][:, 0], pc["v"][:, 0], plen,
-                     plen + r.max_new)
-            jax.block_until_ready(kv.pool)
+            with obs.span("serve_admit", scheduler="paged", rid=r.rid,
+                          slot=slot, prompt_len=plen):
+                _, pc = prefill(params, {"tokens": jnp.asarray(toks)})
+                kv.admit(slot, pc["k"][:, 0], pc["v"][:, 0], plen,
+                         plen + r.max_new)
+                jax.block_until_ready(kv.pool)
             dt = time.perf_counter() - t0
             clock += dt
             prefill_s += dt
@@ -319,11 +344,12 @@ def run_continuous(model, params, cfg, requests: List[Request], *,
             break
 
         t0 = time.perf_counter()
-        nxt, _, new_caches = decode(
-            params, {"token": jnp.asarray(cur),
-                     "lengths": jnp.asarray(kv.lengths)},
-            kv.cache_view())
-        nxt_np = np.asarray(nxt)
+        with obs.span("serve_decode_step", scheduler="paged"):
+            nxt, _, new_caches = decode(
+                params, {"token": jnp.asarray(cur),
+                         "lengths": jnp.asarray(kv.lengths)},
+                kv.cache_view())
+            nxt_np = np.asarray(nxt)
         dt = time.perf_counter() - t0
         clock += dt
         decode_s += dt
@@ -334,15 +360,22 @@ def run_continuous(model, params, cfg, requests: List[Request], *,
             r = slot_req[slot]
             tok = int(nxt_np[slot])
             emits.setdefault(r.rid, []).append(clock)
+            if telemetry:
+                hist.observe(clock - prev_emit.get(r.rid, r.arrival))
+                prev_emit[r.rid] = clock
             produced[slot] += 1
             if tok == eos_id or produced[slot] >= r.max_new:
-                kv.retire(slot)             # blocks recycle immediately
+                with obs.span("serve_retire", scheduler="paged",
+                              rid=r.rid, slot=int(slot)):
+                    kv.retire(slot)         # blocks recycle immediately
                 slot_req[slot] = None
             else:
                 cur[slot] = tok
         u = kv.utilization()
         utils.append(u["util_vs_allocated"])
         utils_pool.append(u["util_vs_pool"])
+        if telemetry:
+            kv_gauge.set(u["util_vs_allocated"])
     out = _summarize(emits, requests, utils, prefill_s, decode_s, steps)
     out["kv_util_pool"] = (float(np.mean(utils_pool))
                            if utils_pool else None)
@@ -443,6 +476,12 @@ def serve_bench(args) -> Dict[str, object]:
 
     from repro.core import autotune
     plan_service: Dict[str, object] = {}
+    # --metrics-json opts into live telemetry: per-token latency
+    # histograms and the kv gauge observe only while obs is enabled
+    metrics_path = getattr(args, "metrics_json", None)
+    trace_state = None
+    if metrics_path and not obs.enabled():
+        trace_state = obs.enable()      # in-memory ring, no JSONL sink
     with contextlib.ExitStack() as stack:
         if getattr(args, "plan_db", None):
             from repro.plans import plandb as plandb_lib
@@ -476,7 +515,7 @@ def serve_bench(args) -> Dict[str, object]:
                 "buckets": len(profile),
                 "observations": profile.total_count}
         if getattr(args, "plan_db", None) or profile is not None:
-            plan_service["stats"] = autotune.plan_stats()
+            plan_service["stats"] = autotune.plan_stats_snapshot()
 
     result = {
         "arch": args.arch,
@@ -506,6 +545,14 @@ def serve_bench(args) -> Dict[str, object]:
             rec = plan_service["recorded"]
             print(f"# recorded traffic profile: {rec['buckets']} buckets / "
                   f"{rec['observations']} observations -> {rec['path']}")
+    if metrics_path:
+        import json
+        with open(metrics_path, "w") as f:
+            json.dump(obs.metrics_snapshot(), f, indent=2, sort_keys=True)
+        result["metrics_json"] = metrics_path
+        print(f"# wrote live metrics snapshot -> {metrics_path}")
+        if trace_state is not None:
+            obs.restore(trace_state)
     return result
 
 
@@ -544,6 +591,10 @@ def add_serve_args(ap: argparse.ArgumentParser) -> None:
                     help="release PlanDB consulted after the per-host plan "
                          "cache and before measuring (pre-warmed at "
                          "startup; overrides $REPRO_PLAN_DB)")
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="enable live telemetry (per-token latency "
+                         "histograms, plan-source counters) and write "
+                         "obs.metrics_snapshot() to PATH at exit")
 
 
 def main(argv=None):

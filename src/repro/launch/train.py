@@ -62,6 +62,9 @@ def main(argv=None):
                     help="release PlanDB consulted after the per-host plan "
                          "cache and before measuring (pre-warmed at "
                          "startup; overrides $REPRO_PLAN_DB)")
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="enable live telemetry and write "
+                         "obs.metrics_snapshot() to PATH at exit")
     args = ap.parse_args(argv)
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -90,6 +93,20 @@ def main(argv=None):
     import contextlib
 
     stack = contextlib.ExitStack()
+    if args.metrics_json:
+        from repro import obs
+        if not obs.enabled():
+            prev_obs = obs.enable()     # in-memory ring, no JSONL sink
+            stack.callback(obs.restore, prev_obs)
+
+        def _dump_metrics(path=args.metrics_json):
+            from repro import obs as _obs
+            import json
+            with open(path, "w") as f:
+                json.dump(_obs.metrics_snapshot(), f, indent=2,
+                          sort_keys=True)
+            print(f"# wrote live metrics snapshot -> {path}")
+        stack.callback(_dump_metrics)
     if args.plan_db:
         from repro.core import autotune
         from repro.plans import plandb as plandb_lib

@@ -520,6 +520,76 @@ def _attention_proj_unfused(q, k, v, w):
                             block=(128, 128, d))
 
 
+def attention_proj(q, k, v, w, *, causal: bool = True,
+                   policy=None) -> jnp.ndarray:
+    """Causal attention → out-projection through the fused StreamGraph, at
+    the caller's shapes.
+
+    q/k/v: [BH, S, D]; w: [D, D_out]. Returns [BH*S, D_out].
+
+    Unlike ``run_graph`` (fixed smoke shapes), this entrypoint resolves the
+    joint graph plan at the call site's shapes and records the site for the
+    plan-service sweep — mirroring ``paged_decode_attention``.
+    """
+    from repro.core import autotune
+    from repro.core import graph as graphlib
+    from repro.core.program import current_policy
+
+    policy = current_policy() if policy is None else policy
+    if policy.mode == "ref":
+        return _attention_proj_ref(q, k, v, w)
+    bh, s, d = q.shape
+    d_out = w.shape[1]
+
+    def build(depth=2, streams=1, **tk):
+        return build_attention_proj_graph(
+            bh=bh, s=s, d=d, d_out=d_out, causal=causal, dtype=q.dtype,
+            depth=depth, streams=streams, **tk)
+
+    g0 = build()
+    wl, tile = graphlib.graph_workload(g0)
+    sig = graphlib.graph_signature(g0)
+
+    def runner(tk, depth, streams):
+        cg = graphlib.compile_graph(
+            build(depth=depth, streams=streams, **dict(tk)),
+            policy=policy.replace(mode="ff", depth=depth, streams=streams))
+        return lambda: cg(q, k, v, w)
+
+    choice = autotune.resolve_graph(
+        "attention_proj", policy, workload=wl, tile=tile,
+        dtype=q.dtype, signature=sig,
+        workload_fn=lambda tk: graphlib.graph_workload(build(**dict(tk))),
+        runner=None if autotune.has_tracers(q, k, v, w) else runner,
+        site={"bh": bh, "s": s, "d": d, "d_out": d_out,
+              "causal": bool(causal)},
+        site_dynamic=("bh", "s"),
+        tile_options=({"block_q": 64},))
+    # compiled fresh per call (trace-scoped closures must not be reused)
+    mode = "ff" if policy.mode == "autotune" else policy.mode
+    cg = graphlib.compile_graph(
+        build(depth=choice.depth, streams=choice.streams,
+              **dict(choice.tile_kwargs)),
+        policy=policy.replace(mode=mode, depth=choice.depth,
+                              streams=choice.streams))
+    return cg(q, k, v, w)
+
+
+def _attention_proj_sweep_inputs(key, site):
+    """Rebuild attention_proj operands at a recorded call-site shape
+    (plan sweep)."""
+    bh, s = int(site["bh"]), int(site["s"])
+    d, d_out = int(site["d"]), int(site["d_out"])
+    dt = jnp.dtype(site.get("dtype", "float32"))
+    q = 0.3 * jax.random.normal(key, (bh, s, d), dt)
+    k = 0.3 * jax.random.normal(jax.random.fold_in(key, 1), (bh, s, d), dt)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (bh, s, d), dt)
+    w = jax.random.normal(jax.random.fold_in(key, 3), (d, d_out),
+                          dt) / jnp.sqrt(d)
+    kwargs = {"causal": bool(site.get("causal", True))}
+    return (q, k, v, w), kwargs
+
+
 def _register_attention_proj_graph():
     from repro.kernels.registry import register_graph
 
@@ -533,6 +603,10 @@ def _register_attention_proj_graph():
         tol=5e-4,
         doc="flash attention -> out-projection matmul; the [BH,S,D] "
             "intermediate stays in a VMEM ring when block_q tiles match",
+        # plan-service sweep: resolve at call-site shapes through the real
+        # entrypoint, not run_graph's fixed smoke point
+        op=attention_proj,
+        sweep_inputs=_attention_proj_sweep_inputs,
     )
 
 

@@ -298,6 +298,83 @@ def _moe_graph_unfused(idx, tokens, w1, comb):
     return repro.ops.gather(y, comb)
 
 
+def moe_dispatch_ffn(idx, tokens, w1, comb, *, policy=None) -> jnp.ndarray:
+    """Dispatch→expert-matmul→combine through the fused StreamGraph, at the
+    caller's shapes.
+
+    idx: [n_dispatch] int32 rows into ``tokens``; tokens: [T, d_model];
+    w1: [d_model, d_ff]; comb: [t_out] int32 rows into the expert output.
+    Returns [t_out, d_ff] = ``(tokens[idx] @ w1)[comb]``.
+
+    Unlike ``run_graph`` (fixed smoke shapes), this entrypoint resolves the
+    joint graph plan at the call site's shapes and records the site for the
+    plan-service sweep — mirroring ``paged_decode_attention``.
+    """
+    from repro.core import autotune
+    from repro.core import graph as graphlib
+    from repro.core.program import current_policy
+
+    policy = current_policy() if policy is None else policy
+    if policy.mode == "ref":
+        return _moe_graph_ref(idx, tokens, w1, comb)
+    n = idx.shape[0]
+    t_tokens, d_model = tokens.shape
+    d_ff = w1.shape[1]
+    t_out = comb.shape[0]
+
+    def build(depth=2, streams=1, **tk):
+        return build_moe_graph(
+            t_tokens=t_tokens, n_dispatch=n, d_model=d_model, d_ff=d_ff,
+            t_out=t_out, dtype=tokens.dtype, depth=depth, streams=streams,
+            **tk)
+
+    g0 = build()
+    w, tile = graphlib.graph_workload(g0)
+    sig = graphlib.graph_signature(g0)
+
+    def runner(tk, depth, streams):
+        cg = graphlib.compile_graph(
+            build(depth=depth, streams=streams, **dict(tk)),
+            policy=policy.replace(mode="ff", depth=depth, streams=streams))
+        return lambda: cg(idx, tokens, w1, comb)
+
+    choice = autotune.resolve_graph(
+        "moe_dispatch_ffn", policy, workload=w, tile=tile,
+        dtype=tokens.dtype, signature=sig,
+        workload_fn=lambda tk: graphlib.graph_workload(build(**dict(tk))),
+        runner=None if autotune.has_tracers(idx, tokens, w1, comb)
+        else runner,
+        site={"t_tokens": t_tokens, "n_dispatch": n, "d_model": d_model,
+              "d_ff": d_ff, "t_out": t_out},
+        site_dynamic=("t_tokens", "n_dispatch", "t_out"),
+        tile_options=({"bn": 64},))
+    # compiled fresh per call (trace-scoped closures must not be reused)
+    mode = "ff" if policy.mode == "autotune" else policy.mode
+    cg = graphlib.compile_graph(
+        build(depth=choice.depth, streams=choice.streams,
+              **dict(choice.tile_kwargs)),
+        policy=policy.replace(mode=mode, depth=choice.depth,
+                              streams=choice.streams))
+    return cg(idx, tokens, w1, comb)
+
+
+def _moe_sweep_inputs(key, site):
+    """Rebuild moe_dispatch_ffn operands at a recorded call-site shape
+    (plan sweep)."""
+    t = int(site.get("t_tokens", 96))
+    n, d = int(site["n_dispatch"]), int(site["d_model"])
+    f, t_out = int(site["d_ff"]), int(site["t_out"])
+    dt = jnp.dtype(site.get("dtype", "float32"))
+    tokens = jax.random.normal(key, (t, d), dt)
+    idx = jax.random.randint(jax.random.fold_in(key, 1), (n,), 0, t,
+                             dtype=jnp.int32)
+    w1 = jax.random.normal(jax.random.fold_in(key, 2), (d, f),
+                           dt) / jnp.sqrt(d).astype(dt)
+    comb = jax.random.randint(jax.random.fold_in(key, 3), (t_out,), 0, n,
+                              dtype=jnp.int32)
+    return (idx, tokens, w1, comb), {}
+
+
 def _register_moe_graph():
     from repro.kernels.registry import register_graph
 
@@ -311,6 +388,10 @@ def _register_moe_graph():
         tol=5e-4,
         doc="MoE dispatch (irregular gather) -> expert matmul -> combine; "
             "dispatch->expert fuses, expert->combine stages (gather edge)",
+        # plan-service sweep: resolve at call-site shapes through the real
+        # entrypoint, not run_graph's fixed smoke point
+        op=moe_dispatch_ffn,
+        sweep_inputs=_moe_sweep_inputs,
     )
 
 

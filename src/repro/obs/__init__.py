@@ -1,0 +1,57 @@
+"""Unified telemetry: tracing spans, live metrics, bandwidth accounting.
+
+Three layers, one import (``from repro import obs``):
+
+* :mod:`repro.obs.tracing` — ``obs.span("compile_graph", ...)`` context
+  managers with thread-local nesting and a JSONL sink
+  (``REPRO_TRACE=/path`` or ``tuning_config(trace_path=...)``);
+* :mod:`repro.obs.metrics` — process-global counters / gauges /
+  exponential-bucket histograms behind ``obs.metrics_snapshot()`` and a
+  Prometheus-style ``obs.render_text()`` exporter;
+* :mod:`repro.obs.bandwidth` — achieved-GB/s and roofline-utilization
+  joins of modeled bytes with measured wall time, per kernel and per
+  graph edge (``benchmarks/run.py --telemetry``).
+
+stdlib-only on purpose: ``repro.core`` imports ``repro.obs``, never the
+reverse, so instrumentation can sit in the lowest layers. Everything is
+zero-cost when disabled — ``obs.span`` returns a shared no-op behind one
+``obs.enabled()`` check, and only cold structural counters are always on.
+"""
+
+from repro.obs.tracing import (   # noqa: F401
+    NOOP_SPAN,
+    Span,
+    TRACE_ENV,
+    current_span,
+    disable,
+    drain,
+    enable,
+    enabled,
+    restore,
+    span,
+    trace_path,
+)
+from repro.obs.metrics import (   # noqa: F401
+    Counter,
+    Gauge,
+    Histogram,
+    counter,
+    gauge,
+    histogram,
+    metrics_clear,
+    metrics_snapshot,
+    parse_text,
+    render_text,
+)
+from repro.obs.bandwidth import (   # noqa: F401
+    graph_utilization,
+    kernel_utilization,
+)
+
+__all__ = [
+    "NOOP_SPAN", "Span", "TRACE_ENV", "current_span", "disable", "drain",
+    "enable", "enabled", "restore", "span", "trace_path",
+    "Counter", "Gauge", "Histogram", "counter", "gauge", "histogram",
+    "metrics_clear", "metrics_snapshot", "parse_text", "render_text",
+    "graph_utilization", "kernel_utilization",
+]

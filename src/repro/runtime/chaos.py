@@ -128,7 +128,7 @@ def _worker_train(args) -> None:
                 "preempted": sup.preempted,
                 "save_count": sup.save_count,
                 "prewarmed": sup.resume_prewarmed,
-                "plan_stats": autotune.plan_stats(),
+                "plan_stats": autotune.plan_stats_snapshot(),
                 "resume_s": resume_s,
                 "first_step_s": progress["first_step_s"],
                 "total_s": time.perf_counter() - t_start,
@@ -224,7 +224,7 @@ def _worker_remesh(args) -> None:
         # the stale 2-pod plan is gone from the planner cache entirely
         stale = planner.last_plan("ff_matmul")
         assert stale is None or stale.mesh != old_spec, stale
-        stats = autotune.plan_stats()
+        stats = autotune.plan_stats_snapshot()
         assert stats.get("plandb", 0) >= 1, stats
         assert stats.get("measured", 0) == 0, stats
 

@@ -33,6 +33,7 @@ import jax
 import numpy as np
 from jax.sharding import Mesh
 
+from repro import obs
 from repro.checkpoint import restore
 from repro.core import autotune, planner
 from repro.core.meshspec import MeshSpec
@@ -74,28 +75,39 @@ def remesh_restore(ckpt_dir: str, state_like: Any, axes_tree: Any,
     are empty anyway).
     """
     spec = MeshSpec.from_mesh(mesh)
-    planner_dropped = autotune_dropped = 0
-    db = plan_db if plan_db is not None else autotune.plan_db_path()
-    db_records = 0
-    if invalidate_plans:
-        planner_dropped = planner.invalidate_mesh_plans(spec)
-        autotune_dropped = autotune.invalidate_mesh(spec)
-    if db:
-        from repro.plans import plandb as plandb_lib
-        pre = plandb_lib.prewarm(db)
-        db_records = int(pre["records_in_namespace"]
-                         + pre["records_in_default"])
-    with shlib.use_sharding(mesh, overrides=overrides) as ctx:
-        shardings = jax.tree.map(
-            lambda ax: shlib.sharding_for(ax, ctx), axes_tree,
-            is_leaf=lambda x: isinstance(x, tuple) and
-            all(a is None or isinstance(a, str) for a in x))
-        state, got_step, _ = restore(ckpt_dir, state_like, step=step,
-                                     shardings=shardings)
+    with obs.span("remesh_restore", mesh=spec.token,
+                  devices=spec.device_count) as sp:
+        planner_dropped = autotune_dropped = 0
+        db = plan_db if plan_db is not None else autotune.plan_db_path()
+        db_records = 0
+        if invalidate_plans:
+            planner_dropped = planner.invalidate_mesh_plans(spec)
+            autotune_dropped = autotune.invalidate_mesh(spec)
+        if db:
+            from repro.plans import plandb as plandb_lib
+            pre = plandb_lib.prewarm(db)
+            db_records = int(pre["records_in_namespace"]
+                             + pre["records_in_default"])
+        with shlib.use_sharding(mesh, overrides=overrides) as ctx:
+            shardings = jax.tree.map(
+                lambda ax: shlib.sharding_for(ax, ctx), axes_tree,
+                is_leaf=lambda x: isinstance(x, tuple) and
+                all(a is None or isinstance(a, str) for a in x))
+            state, got_step, _ = restore(ckpt_dir, state_like, step=step,
+                                         shardings=shardings)
+        sp.set(step=got_step, planner_dropped=planner_dropped,
+               autotune_dropped=autotune_dropped, plan_db_records=db_records)
     _LAST_REMESH[:] = [RemeshReport(
         mesh=spec, step=got_step, planner_dropped=planner_dropped,
         autotune_dropped=autotune_dropped, plan_db=db,
         plan_db_records=db_records)]
+    obs.counter("remesh_total", "elastic remesh_restore calls").inc()
+    obs.counter("remesh_plans_dropped_total",
+                "stale plan entries dropped by remesh", layer="planner"
+                ).inc(planner_dropped)
+    obs.counter("remesh_plans_dropped_total",
+                "stale plan entries dropped by remesh", layer="autotune"
+                ).inc(autotune_dropped)
     return state, got_step
 
 

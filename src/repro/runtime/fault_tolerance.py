@@ -27,6 +27,7 @@ import signal
 import threading
 from typing import Any, Callable, Optional
 
+from repro import obs
 from repro.checkpoint import latest_step, restore, save
 
 
@@ -96,15 +97,23 @@ class Supervisor:
         pre-warmed from it (``resume_prewarmed`` records how many tuned
         plans were installed) before any kernel call site resolves — the
         restarted job replays tuned plans instead of re-measuring."""
-        step = latest_step(self.cfg.ckpt_dir)
-        if step is None:
-            return self.state_like, 0
-        state, step, extra = restore(self.cfg.ckpt_dir, self.state_like,
-                                     step=step)
-        if self.cfg.plan_snapshot:
-            from repro.core import autotune
-            self.resume_prewarmed = autotune.restore_snapshot(
-                (extra or {}).get("plan_snapshot"))
+        with obs.span("supervisor_resume", ckpt_dir=self.cfg.ckpt_dir) as sp:
+            step = latest_step(self.cfg.ckpt_dir)
+            if step is None:
+                sp.set(found=False, step=0)
+                return self.state_like, 0
+            state, step, extra = restore(self.cfg.ckpt_dir, self.state_like,
+                                         step=step)
+            if self.cfg.plan_snapshot:
+                from repro.core import autotune
+                self.resume_prewarmed = autotune.restore_snapshot(
+                    (extra or {}).get("plan_snapshot"))
+            sp.set(found=True, step=step, prewarmed=self.resume_prewarmed)
+        obs.counter("supervisor_resumes_total",
+                    "checkpoint resumes (fault_tolerance.Supervisor)").inc()
+        obs.counter("supervisor_plans_prewarmed_total",
+                    "tuned plans installed from checkpoint snapshots"
+                    ).inc(self.resume_prewarmed)
         return state, step
 
     def _save(self, step: int, state: Any) -> None:
@@ -112,14 +121,18 @@ class Supervisor:
         # not write the same checkpoint twice
         if step == self._last_saved_step:
             return
-        extra = None
-        if self.cfg.plan_snapshot:
-            from repro.core import autotune
-            extra = {"plan_snapshot": autotune.snapshot_plans()}
-        save(self.cfg.ckpt_dir, step, state, extra=extra,
-             keep_last=self.cfg.keep_last)
+        with obs.span("supervisor_save", step=step,
+                      ckpt_dir=self.cfg.ckpt_dir):
+            extra = None
+            if self.cfg.plan_snapshot:
+                from repro.core import autotune
+                extra = {"plan_snapshot": autotune.snapshot_plans()}
+            save(self.cfg.ckpt_dir, step, state, extra=extra,
+                 keep_last=self.cfg.keep_last)
         self._last_saved_step = step
         self.save_count += 1
+        obs.counter("supervisor_saves_total",
+                    "checkpoints written (fault_tolerance.Supervisor)").inc()
 
     def run(self, state: Any, start_step: int, n_steps: int,
             step_fn: Callable[[Any, int], Any],

@@ -35,6 +35,7 @@ from typing import Any, Callable, Optional
 
 import jax
 
+from repro import obs
 from repro.core.meshspec import MeshSpec
 from repro.core.program import PipePolicy, current_policy
 from repro.core.program import policy as policy_ctx
@@ -108,4 +109,6 @@ def shard_streams(fn: Callable[..., Any], *, in_specs, out_specs,
         with policy_ctx(pol):
             return fn(*args)
 
-    return shard_map_compat(body, mesh, in_specs, out_specs, check=check)
+    with obs.span("shard_streams", mesh=pol.mesh.token,
+                  devices=pol.mesh.device_count):
+        return shard_map_compat(body, mesh, in_specs, out_specs, check=check)

@@ -1,0 +1,360 @@
+"""Observability stack: tracing spans, metrics registry, bandwidth
+accounting, and the live-telemetry wiring through autotune and serve."""
+
+import json
+import os
+import time
+import types
+import warnings
+
+import pytest
+
+from repro import obs
+from repro.core import TPU_V5E, Workload, autotune
+
+
+@pytest.fixture
+def obs_memory():
+    """Tracing on, in-memory ring, drained before and after."""
+    prev = obs.enable()
+    obs.drain()
+    yield
+    obs.drain()
+    obs.restore(prev)
+
+
+@pytest.fixture
+def obs_off():
+    prev = obs.disable()
+    yield
+    obs.restore(prev)
+
+
+# ---------------------------------------------------------------------------
+# Tracing spans
+# ---------------------------------------------------------------------------
+
+def test_disabled_span_is_shared_noop(obs_off):
+    s = obs.span("anything", k=1)
+    assert s is obs.NOOP_SPAN
+    assert s.set(more=2) is obs.NOOP_SPAN     # chainable, still no-op
+    with s:
+        assert obs.current_span() is obs.NOOP_SPAN
+    assert obs.drain() == []                  # nothing was emitted
+    assert obs.trace_path() is None
+
+
+def test_disabled_span_overhead_is_negligible(obs_off):
+    n = 50_000
+    t0 = time.perf_counter()
+    for _ in range(n):
+        with obs.span("hot", a=1):
+            pass
+    per_call = (time.perf_counter() - t0) / n
+    # the disabled path is one bool check + a shared singleton; anything
+    # near 10us/call means an allocation or clock read snuck in
+    assert per_call < 10e-6
+
+
+def test_span_nesting_records_parent_ids(obs_memory):
+    with obs.span("outer", op="o") as so:
+        with obs.span("inner") as si:
+            assert obs.current_span() is si
+        assert obs.current_span() is so
+    recs = {r["name"]: r for r in obs.drain()}
+    assert recs["inner"]["parent"] == recs["outer"]["id"]
+    assert recs["outer"]["parent"] is None
+    assert recs["inner"]["dur_s"] <= recs["outer"]["dur_s"]
+    assert recs["outer"]["status"] == "ok"
+
+
+def test_span_closes_under_exception_and_unwinds_stack(obs_memory):
+    with pytest.raises(ValueError):
+        with obs.span("outer"):
+            with obs.span("boom"):
+                raise ValueError("x")
+    recs = {r["name"]: r for r in obs.drain()}
+    assert recs["boom"]["status"] == "error"
+    assert recs["boom"]["error"] == "ValueError"
+    assert recs["outer"]["status"] == "error"
+    # the thread-local stack fully unwound: a fresh span is a root again
+    with obs.span("after"):
+        pass
+    assert obs.drain()[0]["parent"] is None
+
+
+def test_span_set_attaches_late_attributes(obs_memory):
+    with obs.span("resolve", op="ff_x") as sp:
+        sp.set(source="memory", origin="plandb")
+    (rec,) = obs.drain()
+    assert rec["attrs"] == {"op": "ff_x", "source": "memory",
+                            "origin": "plandb"}
+
+
+def test_trace_jsonl_sink(tmp_path):
+    path = os.path.join(tmp_path, "trace.jsonl")
+    prev = obs.enable(path)
+    try:
+        with obs.span("a", n=1):
+            with obs.span("b"):
+                pass
+    finally:
+        obs.restore(prev)
+    lines = [json.loads(x) for x in open(path)]
+    assert [r["name"] for r in lines] == ["b", "a"]
+    assert lines[0]["parent"] == lines[1]["id"]
+
+
+def test_tuning_config_trace_path_scopes_tracing(tmp_path, obs_off):
+    path = os.path.join(tmp_path, "scoped.jsonl")
+    with autotune.tuning_config(trace_path=path):
+        assert obs.enabled() and obs.trace_path() == path
+        with obs.span("scoped"):
+            pass
+    assert not obs.enabled()                  # prior state restored
+    assert json.loads(open(path).readline())["name"] == "scoped"
+
+
+# ---------------------------------------------------------------------------
+# Metrics registry
+# ---------------------------------------------------------------------------
+
+def test_counter_gauge_histogram_snapshot_and_text_roundtrip():
+    obs.metrics_clear("t_")
+    obs.counter("t_requests_total", "requests", route="a").inc()
+    obs.counter("t_requests_total", route="a").inc(2)
+    obs.counter("t_requests_total", route="b").inc()
+    obs.gauge("t_depth", "queue depth").set(7.5)
+    h = obs.histogram("t_latency_seconds", "latency")
+    for v in (0.001, 0.002, 0.004):
+        h.observe(v)
+    snap = obs.metrics_snapshot()
+    assert snap["counters"]["t_requests_total{route=a}"] == 3
+    assert snap["counters"]["t_requests_total{route=b}"] == 1
+    assert snap["gauges"]["t_depth"] == 7.5
+    assert snap["histograms"]["t_latency_seconds"]["count"] == 3
+    assert snap["histograms"]["t_latency_seconds"]["min"] == 0.001
+
+    text = obs.render_text()
+    parsed = obs.parse_text(text)
+    assert parsed['t_requests_total{route="a"}'] == 3
+    assert parsed["t_depth"] == 7.5
+    assert parsed["t_latency_seconds_count"] == 3
+    assert parsed["t_latency_seconds_sum"] == pytest.approx(0.007)
+    obs.metrics_clear("t_")
+    assert not [k for k in obs.metrics_snapshot() if k.startswith("t_")]
+
+
+def test_metric_kind_collision_raises():
+    obs.metrics_clear("t_kind")
+    obs.counter("t_kind_x", "a counter").inc()
+    with pytest.raises(ValueError):
+        obs.gauge("t_kind_x")
+    obs.metrics_clear("t_kind")
+
+
+def test_histogram_quantiles_track_percentiles():
+    obs.metrics_clear("t_q")
+    h = obs.histogram("t_q_seconds")
+    vals = [0.001 + 0.001 * i / 999 for i in range(1000)]   # uniform [1,2]ms
+    for v in vals:
+        h.observe(v)
+    s = h.summary()
+    # exponential buckets at 2**(1/8) spacing: <= ~4.4% quantile error
+    assert s["p50"] == pytest.approx(0.0015, rel=0.05)
+    assert s["p99"] == pytest.approx(0.00199, rel=0.05)
+    assert s["min"] == 0.001 and s["max"] == 0.002
+    assert s["p50"] <= s["p90"] <= s["p99"] <= s["max"]
+    obs.metrics_clear("t_q")
+
+
+# ---------------------------------------------------------------------------
+# Bandwidth accounting
+# ---------------------------------------------------------------------------
+
+W = Workload(n_words=1024, word_bytes=65536.0, flops_per_word=1e5,
+             store_bytes_per_word=4096.0)
+
+
+def test_kernel_utilization_in_unit_interval():
+    total_bytes = 1024 * (65536.0 + 4096.0)
+    # measured exactly at the roofline -> utilization 1.0
+    at_roof = obs.kernel_utilization(W, TPU_V5E,
+                                     total_bytes / TPU_V5E.hbm_bw)
+    assert at_roof["utilization"] == pytest.approx(1.0)
+    # 10x slower than the roofline -> 0.1
+    slow = obs.kernel_utilization(W, TPU_V5E,
+                                  10 * total_bytes / TPU_V5E.hbm_bw)
+    assert slow["utilization"] == pytest.approx(0.1)
+    assert slow["hbm_bytes"] == total_bytes
+    assert slow["achieved_gb_s"] == pytest.approx(
+        TPU_V5E.hbm_bw / 10 / 1e9)
+    assert 0.0 < slow["utilization"] <= 1.0
+    # a byte model claiming more than the roofline clamps, keeps the raw
+    fast = obs.kernel_utilization(W, TPU_V5E,
+                                  0.5 * total_bytes / TPU_V5E.hbm_bw)
+    assert fast["utilization"] == 1.0
+    assert fast["utilization_raw"] == pytest.approx(2.0)
+
+
+def _stage(bw, total_s):
+    return types.SimpleNamespace(achieved_bw=bw, total_s=total_s)
+
+
+def _edge(label, mode):
+    return types.SimpleNamespace(edge=label, mode=mode,
+                                 hbm_bytes_saved=111, rationale="test")
+
+
+def test_graph_utilization_attributes_wall_by_model_share():
+    est = types.SimpleNamespace(
+        total_s=3e-3,
+        hbm_bytes_saved=111,
+        per_stage=[("a", _stage(100e9, 1e-3)), ("b", _stage(100e9, 2e-3))],
+        edges=[_edge("a->b", "fused")],
+    )
+    rep = obs.graph_utilization(est, TPU_V5E, measured_s=6e-3)
+    # measured wall split 1:2 by modeled share
+    assert rep["stages"]["a"]["attributed_s"] == pytest.approx(2e-3)
+    assert rep["stages"]["b"]["attributed_s"] == pytest.approx(4e-3)
+    # bytes recovered from modeled bw * modeled time
+    assert rep["stages"]["a"]["hbm_bytes"] == pytest.approx(100e9 * 1e-3)
+    (edge,) = rep["edges"]
+    assert edge["edge"] == "a->b" and edge["mode"] == "fused"
+    assert edge["hbm_bytes"] == pytest.approx(100e9 * 3e-3)
+    assert edge["attributed_s"] == pytest.approx(6e-3)
+    assert edge["hbm_bytes_saved"] == 111
+    # 2x slower than modeled -> utilization = modeled_bw/2 / roofline
+    want = (100e9 / 2) / TPU_V5E.hbm_bw
+    assert edge["utilization"] == pytest.approx(want)
+    assert 0.0 < edge["utilization"] <= 1.0
+    assert rep["graph"]["measured_s"] == 6e-3
+    assert rep["graph"]["modeled_s"] == 3e-3
+
+
+# ---------------------------------------------------------------------------
+# Autotune wiring: plan-source counters, origin split, deprecation shim
+# ---------------------------------------------------------------------------
+
+def test_plan_stats_deprecation_shim():
+    autotune._warned_plan_stats_deprecated = False
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        old = autotune.plan_stats()
+    assert any(issubclass(w.category, DeprecationWarning) for w in caught)
+    assert old == autotune.plan_stats_snapshot()
+
+
+def test_memory_hit_keeps_plandb_origin(tmp_path, monkeypatch):
+    """Satellite: a PlanDB-prewarm-then-hit is distinguishable from a
+    plain memory hit — the second resolution counts under
+    ``memory.plandb`` and tags the plan_resolutions_total counter."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.program import PipePolicy
+    from repro.kernels.ff_gather import gather
+    from repro.plans import plandb as plandb_lib
+    from repro.plans import record_traffic, sweep_profile
+
+    monkeypatch.setenv("REPRO_PLAN_CACHE",
+                       os.path.join(tmp_path, "host.json"))
+    monkeypatch.delenv("REPRO_PLAN_DB", raising=False)
+    monkeypatch.delenv("REPRO_PLAN_NAMESPACE", raising=False)
+    autotune.tuned_cache_clear()
+    plandb_lib.clear_cache()
+    autotune.plan_stats_clear()
+    obs.metrics_clear("plan_resolutions_total")
+
+    pol = PipePolicy(mode="autotune", depth=2, streams=1, interpret=True)
+    tab = jax.random.normal(jax.random.key(0), (64, 8), jnp.float32)
+    idx = jax.random.randint(jax.random.key(1), (16,), 0, 64)
+
+    with record_traffic() as prof, \
+            autotune.tuning_config(cache_path=os.path.join(tmp_path,
+                                                           "rec.json")):
+        gather(tab, idx, policy=pol)
+    sweep = sweep_profile(
+        prof, scratch_cache=os.path.join(tmp_path, "scratch.json"),
+        warmup=0, iters=1)
+    dbp = os.path.join(tmp_path, "db.json")
+    sweep.db.save(dbp)
+
+    # fresh process simulation: only the swept DB in the lookup chain
+    autotune.tuned_cache_clear()
+    plandb_lib.clear_cache()
+    autotune.plan_stats_clear()
+    obs.metrics_clear("plan_resolutions_total")
+    cold = os.path.join(tmp_path, "cold.json")
+    with autotune.tuning_config(cache_path=cold, plan_db=dbp), \
+            warnings.catch_warnings():
+        warnings.simplefilter("error")       # a re-measure warning = failure
+        gather(tab, idx, policy=pol)         # 1st: PlanDB hit -> memory
+        gather(tab, idx, policy=pol)         # 2nd: memory hit, plandb origin
+    stats = autotune.plan_stats_snapshot()
+    assert stats.get("plandb") == 1
+    assert stats.get("memory") == 1
+    assert stats.get("memory.plandb") == 1   # the fix under test
+    assert stats["hit_rate"] == 1.0
+    counters = obs.metrics_snapshot()["counters"]
+    assert counters.get(
+        "plan_resolutions_total{origin=plandb,source=plandb}") == 1
+    assert counters.get(
+        "plan_resolutions_total{origin=plandb,source=memory}") == 1
+
+
+def test_resolve_call_span_carries_source_tag(obs_memory, tmp_path,
+                                              monkeypatch):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.program import PipePolicy
+    from repro.kernels.ff_gather import gather
+
+    monkeypatch.setenv("REPRO_PLAN_CACHE",
+                       os.path.join(tmp_path, "host.json"))
+    monkeypatch.delenv("REPRO_PLAN_DB", raising=False)
+    autotune.tuned_cache_clear()
+    tab = jax.random.normal(jax.random.key(0), (64, 8), jnp.float32)
+    idx = jax.random.randint(jax.random.key(1), (16,), 0, 64)
+    obs.drain()
+    gather(tab, idx, policy=PipePolicy(mode="ff", interpret=True))
+    spans = [r for r in obs.drain() if r["name"] == "resolve_call"]
+    assert spans, "op entrypoint did not open a resolve_call span"
+    assert spans[0]["attrs"]["op"] == "ff_gather"
+    assert spans[0]["attrs"]["source"]   # plan-source tag present
+
+
+# ---------------------------------------------------------------------------
+# Serve: --metrics-json live telemetry
+# ---------------------------------------------------------------------------
+
+def test_serve_metrics_json_snapshot_parses(tmp_path):
+    import argparse
+
+    from repro.launch import serve as serve_lib
+
+    obs.metrics_clear("serve_")
+    path = os.path.join(tmp_path, "serve_metrics.json")
+    ap = argparse.ArgumentParser()
+    serve_lib.add_serve_args(ap)
+    args = ap.parse_args(
+        ["--smoke", "--requests", "3", "--slots", "2", "--prompt-len", "8",
+         "--max-new", "4", "--rate", "50", "--metrics-json", path])
+    result = serve_lib.serve_bench(args)
+    assert result["metrics_json"] == path
+    assert not obs.enabled()                 # bench restored the prior state
+    snap = json.load(open(path))
+    lock = snap["histograms"]["serve_token_latency_seconds{scheduler=lockstep}"]
+    paged = snap["histograms"]["serve_token_latency_seconds{scheduler=paged}"]
+    assert lock["count"] == paged["count"] == result["paged"]["tokens"]
+    # the gauge tracks live pool utilization; at drain end it reads 0
+    assert 0.0 <= snap["gauges"]["serve_kv_utilization"] <= 1.0
+    # live histogram vs the bench's post-hoc percentiles: same samples,
+    # so only bucket resolution separates them (acceptance bar: 10%)
+    for sched, m in (("lockstep", result["lockstep"]),
+                     ("paged", result["paged"])):
+        live = snap["histograms"][
+            f"serve_token_latency_seconds{{scheduler={sched}}}"]
+        assert live["p50"] * 1e3 == pytest.approx(m["p50_ms"], rel=0.10)
+        assert live["p99"] * 1e3 == pytest.approx(m["p99_ms"], rel=0.10)

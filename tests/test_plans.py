@@ -368,7 +368,7 @@ def test_record_sweep_plandb_roundtrip(plan_env):
     with tuning_config(cache_path=cold, plan_db=dbp), warnings.catch_warnings():
         warnings.simplefilter("error")        # a re-measure warning = failure
         gather(tab, idx, policy=pol)
-    stats = autotune.plan_stats()
+    stats = autotune.plan_stats_snapshot()
     assert stats.get("plandb") == 1
     assert stats["hit_rate"] == 1.0
     assert not os.path.exists(cold)           # nothing re-measured/persisted
