@@ -78,6 +78,11 @@ class ArchConfig:
                                               # cache's page size so the
                                               # contiguous path is bitwise-
                                               # equal to the paged path
+    layer_graph: bool = False                 # route dense-cache decode steps
+                                              # through the whole-layer
+                                              # decode_layer StreamGraph (one
+                                              # planned multi-kernel program
+                                              # per layer step)
     scan_impl: str = "xla"                    # xla | xla_tiled | ff
     scan_layers: bool = True                  # lax.scan over layer stack
     loss_chunk: int = 0                       # >1: chunked-vocab CE (no full

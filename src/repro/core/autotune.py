@@ -66,7 +66,12 @@ from repro.core.pipeline_model import estimate_feedforward
 # v2: keys gained the mesh-topology component (axis names/sizes + device
 # count) — plans tuned on one topology must never be served to another, so
 # every pre-mesh entry is invalidated wholesale.
-PLAN_FORMAT_VERSION = 2
+# v3: whole-layer graphs widened the joint search space — one (tile, depth,
+# streams) choice now covers a 4-6 node decode_layer graph with epilogues
+# and multi-consumer edges, and the VMEM budget is split across every fused
+# chain stage — so a v2 record tuned against the old per-pair space could
+# silently pin a layer-wide plan it never measured.
+PLAN_FORMAT_VERSION = 3
 
 _DEFAULT_CACHE_PATH = os.path.join("~", ".cache", "repro", "plans.json")
 _VMEM_BUDGET_BYTES = DEFAULT_VMEM_BUDGET_BYTES

@@ -63,6 +63,29 @@ Producer ``BlockIn`` operands are promoted to ring streams (Pallas block
 delivery follows the grid, but the inlined producer's words are
 schedule-driven), which is why :class:`repro.core.program.BlockIn` carries
 a declared dtype.
+
+Whole-layer chains, epilogues, multi-consumer edges
+---------------------------------------------------
+
+Fusion is not limited to pairs: fused edges compose into linear *chains*
+(``qkv → attention → out-proj → mlp``), lowered recursively — each stage's
+words inline the words of the stage above it on first request, every
+intermediate living in its own VMEM ring, the whole chain one
+``pallas_call`` checked against the *sum* of the member nodes' split VMEM
+budgets (``planner.split_graph_budget``).
+
+A :class:`GraphNode` may carry an :class:`Epilogue` — a residual add or
+RMSNorm folded into the consumer body at the output write (the paper's
+"compute stage owns the final store"). Epilogue inputs are extra
+``BlockIn`` operands of the node, so an edge may feed them
+(``dst_input`` naming a BlockIn rather than a Stream): such *block
+edges* stage by default, but when the producer is fused away inside the
+same chain the consumer is served directly from the chain's intermediate
+VMEM ring ("ring-served", a fused edge) — this is how one producer feeds
+both the next stage's stream and a later stage's residual epilogue
+without ever materializing in HBM. When a fused-away producer's other
+consumers *cannot* be served in-chain, the fusion unwinds to staged with
+a rationale — never a silent wrong answer.
 """
 
 from __future__ import annotations
@@ -84,11 +107,12 @@ from repro.core.emitter import GatherRingPipe, RingPipe, acquire, release
 from repro.core.meshspec import MeshSpec, SINGLE_DEVICE, localize_workload, \
     resolve_sharding
 from repro.core.pipe import DEFAULT_VMEM_BUDGET_BYTES, Pipe
-from repro.core.pipeline_model import GraphStage, Workload, estimate_graph
+from repro.core.pipeline_model import EdgeEstimate, GraphStage, Workload, \
+    estimate_graph
 from repro.core.planner import PlanError
 from repro.core.program import BlockIn, ProducerCtx, ProgramCtx, ScalarIn, \
-    ScheduleOpaqueError, Stream, StreamProgram, _clamped_streams, \
-    compile_program, program_workload
+    ScheduleOpaqueError, Stream, StreamProgram, _OpaqueScalar, \
+    _clamped_streams, compile_program, program_workload
 
 _VMEM_BUDGET_BYTES = DEFAULT_VMEM_BUDGET_BYTES
 
@@ -96,6 +120,96 @@ _VMEM_BUDGET_BYTES = DEFAULT_VMEM_BUDGET_BYTES
 # ---------------------------------------------------------------------------
 # The graph IR
 # ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Epilogue:
+    """A per-output-write transform folded into a node's consumer body.
+
+    ``fn(ctx, idx, value) -> value`` runs at every ``ctx.out[idx] = value``
+    the node's consumer performs, inside the kernel, before the store —
+    residual adds and RMSNorm live here so they ride the fused chain
+    instead of costing an extra HBM round trip. ``ctx`` is the node's
+    :class:`~repro.core.program.ProgramCtx` (so ``fn`` may read
+    ``ctx.g`` and ``ctx.ref(...)``); ``inputs`` declares extra
+    :class:`~repro.core.program.BlockIn` operands ``fn`` reads (a residual
+    tensor, a norm weight). They are appended to the program's inputs and
+    may be fed by a graph edge like any other block operand.
+    """
+
+    fn: Callable
+    inputs: Tuple[BlockIn, ...] = ()
+
+
+class _EpilogueOut:
+    """Output-ref proxy that applies the epilogue at each write."""
+
+    __slots__ = ("_ctx", "_fn", "_out")
+
+    def __init__(self, ctx, fn, out):
+        self._ctx = ctx
+        self._fn = fn
+        self._out = out
+
+    def __setitem__(self, idx, value):
+        self._out[idx] = self._fn(self._ctx, idx, value)
+
+    def __getitem__(self, idx):
+        return self._out[idx]
+
+    @property
+    def at(self):
+        return self._out.at
+
+
+class _EpilogueCtx:
+    """ProgramCtx proxy whose ``out`` routes writes through the epilogue.
+
+    The epilogue ``fn`` receives the *underlying* ctx, so it can read its
+    declared BlockIns via ``ctx.ref`` without re-entering the proxy.
+    """
+
+    __slots__ = ("_ctx", "out")
+
+    def __init__(self, ctx, fn):
+        self._ctx = ctx
+        self.out = _EpilogueOut(ctx, fn, ctx.out)
+
+    @property
+    def g(self):
+        return self._ctx.g
+
+    @property
+    def n_words(self):
+        return self._ctx.n_words
+
+    def ref(self, name):
+        return self._ctx.ref(name)
+
+    def word(self, name):
+        return self._ctx.word(name)
+
+    def scratch(self, name):
+        return self._ctx.scratch(name)
+
+
+def _with_epilogue(program: StreamProgram,
+                   ep: Optional[Epilogue]) -> StreamProgram:
+    """The node's effective program: epilogue inputs appended, consumer
+    wrapped so every output write passes through ``ep.fn``. A pure program
+    transform — the result lowers through every path (standalone node,
+    fused producer, fused consumer) with no special cases."""
+    if ep is None:
+        return program
+    orig = program.consumer
+
+    def consumer(ctx, _orig=orig, _fn=ep.fn):
+        _orig(_EpilogueCtx(ctx, _fn))
+
+    return dataclasses.replace(
+        program, name=f"{program.name}+ep",
+        inputs=tuple(program.inputs) + tuple(ep.inputs),
+        consumer=consumer)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -107,12 +221,20 @@ class GraphNode:
     ``workload`` builders produce it; when omitted a conservative one is
     synthesized from the program's streams. ``plan_tile`` is the tile the
     planner sizes pipes against (default: the first stream's tile).
+    ``epilogue`` folds residual/norm math into the consumer body at the
+    output write (see :class:`Epilogue`).
     """
 
     name: str
     program: StreamProgram
     workload: Optional[Workload] = None
     plan_tile: Optional[Tuple[int, ...]] = None
+    epilogue: Optional[Epilogue] = None
+
+    @property
+    def effective_program(self) -> StreamProgram:
+        """The program as compiled: epilogue folded into the consumer."""
+        return _with_epilogue(self.program, self.epilogue)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -152,7 +274,9 @@ class StreamGraph:
     """A DAG of stream programs joined by pipe edges.
 
     Validated at construction: node names unique, edges name known nodes
-    and Stream inputs, no input is fed twice, and the graph is acyclic
+    and Stream/BlockIn inputs (epilogue inputs count — that is how a
+    residual epilogue is fed by an upstream node), no input is fed twice,
+    and the graph is acyclic
     (a pipe cycle would deadlock the FPGA channels it models — rejected
     here, like the paper rejects true memory loop-carried dependencies).
     """
@@ -174,12 +298,15 @@ class StreamGraph:
                                      f"unknown node {end!r}")
             if e.src == e.dst:
                 raise ValueError(f"{self.name}: self-edge on {e.src!r}")
-            try:
-                by_name[e.dst].program.stream(e.dst_input)
-            except KeyError as err:
+            dst_node = by_name[e.dst]
+            prog = dst_node.effective_program
+            names = {i.name for i in prog.inputs
+                     if not isinstance(i, ScalarIn)}
+            if e.dst_input not in names:
                 raise ValueError(
                     f"{self.name}: edge {e.label} must feed a Stream input "
-                    f"of {e.dst!r}: {err}") from err
+                    f"or BlockIn operand of {e.dst!r}: {e.dst_input!r} not "
+                    f"in {sorted(names)}")
             key = (e.dst, e.dst_input)
             if key in fed:
                 raise ValueError(f"{self.name}: input {e.dst}.{e.dst_input} "
@@ -274,7 +401,8 @@ def graph_signature(graph: StreamGraph) -> str:
     for n in graph.topo_order():
         p = n.program
         tiles = ",".join("x".join(map(str, s.spec.tile)) for s in p.streams)
-        parts.append(f"{n.name}={p.name}/{p.n_words}w/"
+        ep = f"+ep{len(n.epilogue.inputs)}" if n.epilogue else ""
+        parts.append(f"{n.name}={p.name}{ep}/{p.n_words}w/"
                      f"{'x'.join(map(str, p.out_shape))}"
                      f"{jnp.dtype(p.out_dtype).name}/[{tiles}]")
     for e in graph.edges:
@@ -513,133 +641,334 @@ def _wrap_index_map(orig: Callable, lo: int, hi: int, takes_scalars: bool):
     return lambda g, *s: orig(g)
 
 
-def _compile_fused(pnode: GraphNode, cnode: GraphNode, edge: GraphEdge,
-                   rep: FusionReport, p_sizing: Tuple[int, int],
-                   c_sizing: Tuple[int, int], *, interpret: bool):
-    """Lower one fused pair into a single ``pallas_call``.
+@dataclasses.dataclass(frozen=True)
+class _RingServe:
+    """A second consumer edge served from a fused chain's intermediate
+    VMEM ring: the producer at chain position ``src_pos`` feeds stage
+    ``dst_pos``'s input ``edge.dst_input`` (a Stream or BlockIn) directly
+    from the ring of edge ``src_pos -> src_pos+1``. ``slot_seq[w]`` is the
+    ring slot holding the needed block at stage-``dst_pos`` word ``w``."""
 
-    Returns ``(fn, operands)`` where ``operands`` names the external inputs
-    in call order as ``(node_name, input_name)`` pairs. The schedule tables
-    (block ordinal + first-request flag per consumer word) are closed over
-    and passed as scalar-prefetch operands ahead of the user's scalars.
+    edge: GraphEdge
+    src_pos: int
+    dst_pos: int
+    kind: str                     # "stream" | "block"
+    slot_seq: Tuple[int, ...]
+    squeeze: int
+
+
+def _blockin_schedule(program: StreamProgram,
+                      bi: BlockIn) -> Tuple[Tuple[int, ...], ...]:
+    """A BlockIn's block schedule, one index tuple per word (static-only,
+    like ``out_schedule``); raises ScheduleOpaqueError when data-dependent."""
+    dummies = tuple(_OpaqueScalar()
+                    for _ in range(program.num_scalar_prefetch))
+    sched = []
+    for g in range(program.n_words):
+        try:
+            idx = bi.index_map(g, *dummies)
+            sched.append(tuple(int(i) for i in idx))
+        except ScheduleOpaqueError:
+            raise
+        except Exception as e:   # noqa: BLE001 — map not int-evaluable
+            raise ScheduleOpaqueError(
+                f"{program.name}: BlockIn {bi.name!r} index_map is not "
+                f"statically evaluable at word {g}: "
+                f"{type(e).__name__}: {e}") from e
+    return tuple(sched)
+
+
+def _check_ring_serve(progs: Sequence[StreamProgram],
+                      reps: Sequence[FusionReport], edge: GraphEdge,
+                      src_pos: int, dst_pos: int):
+    """Can ``edge`` be served from the fused chain's intermediate ring?
+
+    Legal iff, at every word of the consuming stage, the block the input
+    requests *is* the block the chain's demand-driven schedule most
+    recently produced into the ring of edge ``src_pos -> src_pos+1`` (so
+    the read is always of a live slot, no extra buffering). Returns
+    ``(ok, rationale, _RingServe | None)``.
     """
-    P, C = pnode.program, cnode.program
-    (p_depth, p_streams_n), (c_depth, c_streams_n) = p_sizing, c_sizing
+    def no(reason: str):
+        return False, reason, None
 
-    p_scalars = [i for i in P.inputs if isinstance(i, ScalarIn)]
-    c_scalars = [i for i in C.inputs if isinstance(i, ScalarIn)]
-    p_tensors = [i for i in P.inputs if not isinstance(i, ScalarIn)]
-    c_tensors = [i for i in C.inputs
-                 if not isinstance(i, ScalarIn) and i.name != edge.dst_input]
+    P, D = progs[src_pos], progs[dst_pos]
+    try:
+        st = D.stream(edge.dst_input)
+    except KeyError:
+        st = None
+    if st is not None:
+        if st.gather:
+            return no(f"input {edge.dst_input!r} is an irregular gather "
+                      f"(data-dependent addresses)")
+        kind, tile, dt = "stream", tuple(st.spec.tile), \
+            jnp.dtype(st.spec.dtype)
+        try:
+            creq = D.stream_schedule(edge.dst_input)
+        except ScheduleOpaqueError as e:
+            return no(str(e))
+    else:
+        bi = next((i for i in D.inputs
+                   if isinstance(i, BlockIn) and i.name == edge.dst_input),
+                  None)
+        if bi is None:
+            return no(f"{D.name} has no input {edge.dst_input!r}")
+        kind, tile, dt = "block", tuple(bi.block), jnp.dtype(bi.dtype)
+        try:
+            creq = _blockin_schedule(D, bi)
+        except ScheduleOpaqueError as e:
+            return no(str(e))
 
-    p_over = _stream_overrides(P, p_depth, p_streams_n)
-    c_over = _stream_overrides(C, c_depth, c_streams_n)
-    p_scal_names = [s.name for s in p_scalars]
-    p_streams: Dict[str, Stream] = {}
-    promoted = set()
-    for i in p_tensors:
-        if isinstance(i, Stream):
-            p_streams[i.name] = dataclasses.replace(i, spec=p_over[i.name])
+    pblock = tuple(P.out_block)
+    squeeze = 0
+    while len(pblock) - squeeze > len(tile) and pblock[squeeze] == 1:
+        squeeze += 1
+    if pblock[squeeze:] != tile:
+        return no(f"mismatched block schedules: producer out_block {pblock} "
+                  f"vs consumer block {tile}")
+    if jnp.dtype(P.out_dtype) != dt:
+        return no(f"dtype mismatch: producer "
+                  f"{jnp.dtype(P.out_dtype).name} vs consumer {dt.name}")
+    cshape = tuple(edge.reshape) if edge.reshape else tuple(P.out_shape)
+    if len(cshape) != len(tile):
+        return no(f"consumer operand rank {len(cshape)} != block rank "
+                  f"{len(tile)}")
+    if not _is_contiguous_slab(P.out_block, P.out_shape) \
+            or not _is_contiguous_slab(tile, cshape):
+        return no("blocks are not contiguous slabs (cannot be matched "
+                  "through a reshape)")
+    try:
+        pout = P.out_schedule()
+    except ScheduleOpaqueError as e:
+        return no(f"producer schedule opaque: {e}")
+    runs: List[List[Any]] = []
+    for w, blk in enumerate(pout):
+        if runs and runs[-1][0] == blk:
+            runs[-1][1] += 1
         else:
-            promoted.add(i.name)
-            p_streams[i.name] = _promote_blockin(i, p_scal_names, p_depth)
-    c_streams = {
-        i.name: dataclasses.replace(i, spec=c_over[i.name])
-        for i in c_tensors if isinstance(i, Stream)
-    }
+            runs.append([blk, 1])
+    p_by_off = {
+        _block_offset(blk, P.out_block, P.out_shape): o
+        for o, (blk, _) in enumerate(runs)}
+    depth = reps[src_pos].inter_depth
+    slot_seq = []
+    for g, blk in enumerate(creq):
+        off = _block_offset(blk, tile, cshape)
+        if off not in p_by_off:
+            return no(f"word {g} requests block {blk} the producer never "
+                      f"writes")
+        need = p_by_off[off]
+        # the ring holds the block the chain most recently produced: walk
+        # the demand-driven schedule from the consuming stage back to the
+        # producer (block -> last word that completed it, per edge)
+        w, j = g, dst_pos - 1
+        while True:
+            held = reps[j].ord_seq[w]
+            if j == src_pos:
+                break
+            w = (held + 1) * reps[j].wpb - 1
+            j -= 1
+        if need != held:
+            return no(f"input does not track the chain's live intermediate "
+                      f"(word {g} needs producer block ordinal {need}, the "
+                      f"ring holds {held})")
+        slot_seq.append(need % depth)
+    rationale = (f"served in-chain from {edge.src!r}'s intermediate VMEM "
+                 f"ring (depth {depth}); the shared output never "
+                 f"materializes in HBM")
+    return True, rationale, _RingServe(edge, src_pos, dst_pos, kind,
+                                       tuple(slot_seq), squeeze)
 
-    rings_p = {n: (GatherRingPipe if st.gather else RingPipe)(st.spec)
-               for n, st in p_streams.items()}
-    rings_c = {n: (GatherRingPipe if st.gather else RingPipe)(st.spec)
-               for n, st in c_streams.items()}
 
-    ord_arr = jnp.asarray(rep.ord_seq, jnp.int32)
-    fresh_arr = jnp.asarray(
-        [1 if g == 0 or rep.ord_seq[g] != rep.ord_seq[g - 1] else 0
-         for g in range(C.n_words)], jnp.int32)
-    n_scal = 2 + len(p_scalars) + len(c_scalars)
-    c_lo, c_hi = 2 + len(p_scalars), n_scal
-    c_takes = C.num_scalar_prefetch > 0
+def _compile_chain(cnodes: Sequence[GraphNode], cedges: Sequence[GraphEdge],
+                   reps: Sequence[FusionReport],
+                   sizings: Sequence[Tuple[int, int]],
+                   serves: Sequence[_RingServe], *, interpret: bool):
+    """Lower one fused chain ``n0 -> n1 -> ... -> n{k-1}`` into a single
+    ``pallas_call``.
+
+    The grid runs the tail stage's words; each stage recursively inlines
+    the words of the stage above it on first request (``fresh`` table per
+    edge), every intermediate living in its own VMEM ring. ``serves`` are
+    additional in-chain consumers fed straight from an intermediate ring.
+    Returns ``(fn, operands)`` with ``operands`` the external inputs in
+    call order as ``(node_name, input_name)`` pairs. A fused pair is the
+    ``k == 2`` special case.
+    """
+    k = len(cnodes)
+    progs = [n.program for n in cnodes]
+    scalars = [[i for i in P.inputs if isinstance(i, ScalarIn)]
+               for P in progs]
+    excl: List[set] = [set() for _ in range(k)]
+    for i, e in enumerate(cedges):
+        excl[i + 1].add(e.dst_input)
+    for s in serves:
+        excl[s.dst_pos].add(s.edge.dst_input)
+    tensors = [[i for i in P.inputs
+                if not isinstance(i, ScalarIn) and i.name not in excl[pos]]
+               for pos, P in enumerate(progs)]
+
+    # Whether stage ``pos``'s word ordinal equals the grid index: true for
+    # the tail, and propagates up through every edge whose consumer takes
+    # exactly one producer word per block in identity order. Grid-aligned
+    # stages can have their BlockIns delivered by BlockSpecs (same as the
+    # tail, no ring machinery); only schedule-driven stages need rings.
+    aligned = [False] * k
+    aligned[k - 1] = True
+    for pos in range(k - 2, -1, -1):
+        r = reps[pos]
+        aligned[pos] = (aligned[pos + 1] and r.wpb == 1
+                        and tuple(r.ord_seq) == tuple(range(len(r.ord_seq))))
+
+    # streams per stage: non-grid-aligned stages' BlockIns promote to
+    # rings (their words are schedule-driven, not grid-driven); aligned
+    # stages' BlockIns ride BlockSpecs like the tail's
+    overs = [_stream_overrides(P, *sz) for P, sz in zip(progs, sizings)]
+    stream_map: List[Dict[str, Stream]] = []
+    promoted: List[set] = []
+    for pos in range(k):
+        m: Dict[str, Stream] = {}
+        pr = set()
+        scal_names = [s.name for s in scalars[pos]]
+        for i in tensors[pos]:
+            if isinstance(i, Stream):
+                m[i.name] = dataclasses.replace(i, spec=overs[pos][i.name])
+            elif pos < k - 1 and not aligned[pos]:
+                pr.add(i.name)
+                m[i.name] = _promote_blockin(i, scal_names, sizings[pos][0])
+        stream_map.append(m)
+        promoted.append(pr)
+    rings = [{n: (GatherRingPipe if st.gather else RingPipe)(st.spec)
+              for n, st in stream_map[pos].items()} for pos in range(k)]
+
+    ord_arrs = [jnp.asarray(r.ord_seq, jnp.int32) for r in reps]
+    fresh_arrs = [jnp.asarray(
+        [1 if g == 0 or r.ord_seq[g] != r.ord_seq[g - 1] else 0
+         for g in range(len(r.ord_seq))], jnp.int32) for r in reps]
+    slot_arrs = [jnp.asarray(s.slot_seq, jnp.int32) for s in serves]
+    # identity edges (one producer word per block, in order) need none of
+    # the dynamic machinery: the producer word IS the consumer word, every
+    # word is fresh, and the ring slot is w % depth — resolved statically
+    # so the kernel skips the table reads and the (always-true) pl.when
+    identity_edge = [r.wpb == 1
+                     and tuple(r.ord_seq) == tuple(range(len(r.ord_seq)))
+                     for r in reps]
+    serve_inline = [s.slot_seq == tuple(
+        w % reps[s.src_pos].inter_depth for w in range(len(s.slot_seq)))
+        for s in serves]
+
+    n_user_scal = sum(len(s) for s in scalars)
+    n_scal = 2 * (k - 1) + n_user_scal + len(serves)
+    scal_lo = [2 * (k - 1) + sum(len(scalars[j]) for j in range(pos))
+               for pos in range(k)]
+    last_lo = scal_lo[k - 1]
+    last_hi = last_lo + len(scalars[-1])
+    last_takes = progs[-1].num_scalar_prefetch > 0
+    serves_by_dst: Dict[int, List[Tuple[int, _RingServe]]] = {}
+    for si, s in enumerate(serves):
+        serves_by_dst.setdefault(s.dst_pos, []).append((si, s))
 
     def kernel(*refs):
         it = iter(refs)
-        ord_ref, fresh_ref = next(it), next(it)
-        p_named = {s.name: next(it) for s in p_scalars}
-        c_named = {s.name: next(it) for s in c_scalars}
-        for i in p_tensors:
-            p_named[i.name] = next(it)
-        for i in c_tensors:
-            c_named[i.name] = next(it)
+        ord_refs, fresh_refs = [], []
+        for _ in range(k - 1):
+            ord_refs.append(next(it))
+            fresh_refs.append(next(it))
+        named = [{s.name: next(it) for s in scalars[pos]}
+                 for pos in range(k)]
+        slot_refs = [next(it) for _ in serves]
+        for pos in range(k):
+            for i in tensors[pos]:
+                named[pos][i.name] = next(it)
         out = next(it)
-        c_scratch = {s.name: next(it) for s in C.scratch}
-        p_scratch = {s.name: next(it) for s in P.scratch}
-        inter = next(it)
+        scratch = [{s.name: next(it) for s in progs[pos].scratch}
+                   for pos in range(k)]
+        inters = [next(it) for _ in range(k - 1)]
+        bound: List[Dict[str, Any]] = []
+        for pos in range(k):
+            raw = ProducerCtx(named[pos])
+            bm: Dict[str, Any] = {}
+            for name, st in stream_map[pos].items():
+                buf, sems = next(it), next(it)
+                if st.gather:
+                    bm[name] = rings[pos][name].bind(
+                        buf, sems,
+                        lambda word, r, s=st, rw=raw: s.slicer(rw, word, r))
+                else:
+                    bm[name] = rings[pos][name].bind(
+                        buf, sems,
+                        lambda word, s=st, rw=raw: s.slicer(rw, word))
+            bound.append(bm)
+        ring_lists = [list(b.values()) for b in bound]
 
-        p_raw = ProducerCtx(p_named)
-        bound_p = {}
-        for name, st in p_streams.items():
-            buf, sems = next(it), next(it)
-            if st.gather:
-                bound_p[name] = rings_p[name].bind(
-                    buf, sems, lambda word, r, s=st: s.slicer(p_raw, word, r))
+        def run_stage(pos, w):
+            P = progs[pos]
+            if pos > 0 and identity_edge[pos - 1]:
+                # identity edge: producer word == consumer word, always
+                # fresh — inline unconditionally, no table reads
+                run_stage(pos - 1, w)
+            elif pos > 0:
+                rep = reps[pos - 1]
+                b = ord_refs[pos - 1][w]
+
+                # inlined upstream stage: block b's words on first request
+                @pl.when(fresh_refs[pos - 1][w] == 1)
+                def _():
+                    for j in range(rep.wpb):
+                        run_stage(pos - 1, b * rep.wpb + j)
+
+            acquire(w, P.n_words, ring_lists[pos])
+            body = dict(named[pos])
+            for name in promoted[pos]:
+                body[name] = bound[pos][name].slot(w)
+            pipes_view = dict(bound[pos])
+            if pos > 0:
+                rep = reps[pos - 1]
+                b = w if identity_edge[pos - 1] else ord_refs[pos - 1][w]
+                pipes_view[cedges[pos - 1].dst_input] = _InterSlot(
+                    inters[pos - 1], b % rep.inter_depth, rep.squeeze)
+            for si, s in serves_by_dst.get(pos, ()):
+                slot = (w % reps[s.src_pos].inter_depth
+                        if serve_inline[si] else slot_refs[si][w])
+                if s.kind == "stream":
+                    pipes_view[s.edge.dst_input] = _InterSlot(
+                        inters[s.src_pos], slot, s.squeeze)
+                else:
+                    body[s.edge.dst_input] = inters[s.src_pos].at[
+                        (slot,) + (0,) * s.squeeze]
+            if pos == k - 1:
+                o = out
             else:
-                bound_p[name] = rings_p[name].bind(
-                    buf, sems, lambda word, s=st: s.slicer(p_raw, word))
-        c_raw = ProducerCtx(c_named)
-        bound_c = {}
-        for name, st in c_streams.items():
-            buf, sems = next(it), next(it)
-            if st.gather:
-                bound_c[name] = rings_c[name].bind(
-                    buf, sems, lambda word, r, s=st: s.slicer(c_raw, word, r))
+                o = inters[pos].at[
+                    (w // reps[pos].wpb) % reps[pos].inter_depth]
+            P.consumer(ProgramCtx(w, P.n_words, body, pipes_view, o,
+                                  scratch[pos]))
+            release(w, P.n_words, ring_lists[pos])
+
+        run_stage(k - 1, pl.program_id(0))
+
+    in_specs = []
+    for pos in range(k):
+        for i in tensors[pos]:
+            if isinstance(i, Stream) or (pos < k - 1 and not aligned[pos]):
+                in_specs.append(pl.BlockSpec(memory_space=pl.ANY))
             else:
-                bound_c[name] = rings_c[name].bind(
-                    buf, sems, lambda word, s=st: s.slicer(c_raw, word))
+                in_specs.append(pl.BlockSpec(
+                    i.block,
+                    _wrap_index_map(i.index_map, scal_lo[pos],
+                                    scal_lo[pos] + len(scalars[pos]),
+                                    progs[pos].num_scalar_prefetch > 0)))
+    scratch_shapes = []
+    for P in progs:
+        scratch_shapes += [pltpu.VMEM(s.shape, s.dtype) for s in P.scratch]
+    for i in range(k - 1):
+        scratch_shapes.append(pltpu.VMEM(
+            (reps[i].inter_depth, *progs[i].out_block), progs[i].out_dtype))
+    for pos in range(k):
+        for name in stream_map[pos]:
+            scratch_shapes.extend(rings[pos][name].scratch_shapes)
 
-        g = pl.program_id(0)
-        b = ord_ref[g]
-        p_list = list(bound_p.values())
-        c_list = list(bound_c.values())
-
-        # -- inlined producer stage: run block b's words on first request --
-        @pl.when(fresh_ref[g] == 1)
-        def _():
-            for j in range(rep.wpb):
-                w = b * rep.wpb + j
-                acquire(w, P.n_words, p_list)
-                body_refs = dict(p_named)
-                for name in promoted:
-                    body_refs[name] = bound_p[name].slot(w)
-                pctx = ProgramCtx(w, P.n_words, body_refs, bound_p,
-                                  inter.at[b % rep.inter_depth], p_scratch)
-                P.consumer(pctx)
-                release(w, P.n_words, p_list)
-
-        # -- consumer stage: edge word served from the intermediate ring --
-        acquire(g, C.n_words, c_list)
-        pipes_view = dict(bound_c)
-        pipes_view[edge.dst_input] = _InterSlot(
-            inter, b % rep.inter_depth, rep.squeeze)
-        cctx = ProgramCtx(g, C.n_words, c_named, pipes_view, out, c_scratch)
-        C.consumer(cctx)
-        release(g, C.n_words, c_list)
-
-    in_specs = [pl.BlockSpec(memory_space=pl.ANY) for _ in p_tensors]
-    for i in c_tensors:
-        if isinstance(i, Stream):
-            in_specs.append(pl.BlockSpec(memory_space=pl.ANY))
-        else:
-            in_specs.append(pl.BlockSpec(
-                i.block, _wrap_index_map(i.index_map, c_lo, c_hi, c_takes)))
-    scratch_shapes = [pltpu.VMEM(s.shape, s.dtype) for s in C.scratch]
-    scratch_shapes += [pltpu.VMEM(s.shape, s.dtype) for s in P.scratch]
-    scratch_shapes.append(
-        pltpu.VMEM((rep.inter_depth, *P.out_block), P.out_dtype))
-    for name in p_streams:
-        scratch_shapes.extend(rings_p[name].scratch_shapes)
-    for name in c_streams:
-        scratch_shapes.extend(rings_c[name].scratch_shapes)
-
+    C = progs[-1]
     call = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
@@ -648,41 +977,55 @@ def _compile_fused(pnode: GraphNode, cnode: GraphNode, edge: GraphEdge,
             in_specs=in_specs,
             out_specs=pl.BlockSpec(
                 C.out_block,
-                _wrap_index_map(C.out_index_map, c_lo, c_hi, c_takes)),
+                _wrap_index_map(C.out_index_map, last_lo, last_hi,
+                                last_takes)),
             scratch_shapes=scratch_shapes,
         ),
         out_shape=jax.ShapeDtypeStruct(C.out_shape, C.out_dtype),
         interpret=interpret,
     )
 
-    def fn(*ops):
-        return call(ord_arr, fresh_arr, *ops)
+    tabs = []
+    for i in range(k - 1):
+        tabs += [ord_arrs[i], fresh_arrs[i]]
 
-    operands = ([(pnode.name, s.name) for s in p_scalars]
-                + [(cnode.name, s.name) for s in c_scalars]
-                + [(pnode.name, i.name) for i in p_tensors]
-                + [(cnode.name, i.name) for i in c_tensors])
+    def fn(*ops):
+        return call(*tabs, *ops[:n_user_scal], *slot_arrs,
+                    *ops[n_user_scal:])
+
+    operands = ([(cnodes[pos].name, s.name)
+                 for pos in range(k) for s in scalars[pos]]
+                + [(cnodes[pos].name, i.name)
+                   for pos in range(k) for i in tensors[pos]])
     return fn, operands
 
 
-def _fused_vmem_parts(P: StreamProgram, C: StreamProgram, edge: GraphEdge,
-                      rep: FusionReport, p_sizing, c_sizing
-                      ) -> Dict[str, int]:
-    """Itemized VMEM footprint of a fused pair (for the planner's split
-    budget check)."""
-    p_over = _stream_overrides(P, *p_sizing)
-    c_over = _stream_overrides(C, *c_sizing)
-    p_rings = sum(p.vmem_bytes for p in p_over.values())
-    for b in (i for i in P.inputs if isinstance(i, BlockIn)):
-        p_rings += Pipe(tile=tuple(b.block), dtype=b.dtype,
-                        depth=p_sizing[0]).vmem_bytes
-    c_rings = sum(p.vmem_bytes for n, p in c_over.items()
-                  if n != edge.dst_input)
-    inter = rep.inter_depth * int(np.prod(P.out_block)) \
-        * jnp.dtype(P.out_dtype).itemsize
+def _chain_vmem_parts(progs: Sequence[StreamProgram],
+                      cedges: Sequence[GraphEdge],
+                      reps: Sequence[FusionReport],
+                      sizings: Sequence[Tuple[int, int]]) -> Dict[str, int]:
+    """Itemized VMEM footprint of a fused chain (for the planner's split
+    budget check); a pair is the length-2 case."""
+    k = len(progs)
+    p_rings = 0
+    for pos in range(k - 1):
+        over = _stream_overrides(progs[pos], *sizings[pos])
+        skip = {cedges[pos - 1].dst_input} if pos > 0 else set()
+        p_rings += sum(p.vmem_bytes for n, p in over.items()
+                       if n not in skip)
+        for b in (i for i in progs[pos].inputs if isinstance(i, BlockIn)):
+            p_rings += Pipe(tile=tuple(b.block), dtype=b.dtype,
+                            depth=sizings[pos][0]).vmem_bytes
+    over_l = _stream_overrides(progs[-1], *sizings[-1])
+    c_rings = sum(p.vmem_bytes for n, p in over_l.items()
+                  if n != cedges[-1].dst_input)
+    inter = sum(reps[i].inter_depth * int(np.prod(progs[i].out_block))
+                * jnp.dtype(progs[i].out_dtype).itemsize
+                for i in range(k - 1))
     scratch = sum(int(np.prod(s.shape)) * jnp.dtype(s.dtype).itemsize
-                  for s in P.scratch + C.scratch)
-    scratch += int(np.prod(C.out_block)) * jnp.dtype(C.out_dtype).itemsize
+                  for P in progs for s in P.scratch)
+    scratch += int(np.prod(progs[-1].out_block)) \
+        * jnp.dtype(progs[-1].out_dtype).itemsize
     return {"producer-rings": int(p_rings), "intermediate-ring": int(inter),
             "consumer-rings": int(c_rings), "scratch": int(scratch)}
 
@@ -743,8 +1086,8 @@ class CompiledGraph:
     sink node's output (or a tuple for multi-sink graphs). ``plan`` carries
     the per-edge fused/staged decisions, rationales, and the analytic
     estimate; ``units`` shows the pallas_call structure (one "fused" unit =
-    one kernel for two nodes — the acceptance check that an edge really
-    lowered into a single kernel).
+    one kernel for a whole fused chain of nodes — the acceptance check
+    that an edge really lowered into a single kernel).
     """
 
     def __init__(self, graph: StreamGraph, policy, plan: GraphPlan,
@@ -818,6 +1161,11 @@ def _resolve_node(graph: StreamGraph, node: GraphNode, policy,
         depth = d_plan if isinstance(depth, str) else int(depth)
         streams = s_plan if isinstance(streams, str) else int(streams)
     depth, streams = int(depth), int(streams)
+    # a ring deeper than the node's word count can never prefetch anything
+    # real — the extra slots are dead VMEM charged against the split budget
+    # (and dead scratch carried through every grid step)
+    if w.n_words > 0:
+        depth = max(1, min(depth, w.n_words))
     if policy.mode == "baseline":
         depth = 1
     return w, depth, streams
@@ -831,8 +1179,12 @@ def _traced_compile_graph(fn):
         with obs.span("compile_graph", graph=graph.name,
                       nodes=len(graph.nodes)) as sp:
             compiled = fn(graph, **kw)
+            n_fused = sum(1 for e in compiled.plan.edges
+                          if e.mode == "fused")
             sp.set(
                 hbm_bytes_saved=compiled.plan.hbm_bytes_saved,
+                fused_edges=n_fused,
+                staged_edges=len(compiled.plan.edges) - n_fused,
                 edges={f"{e.edge.src}->{e.edge.dst}":
                        {"mode": e.mode, "rationale": e.rationale}
                        for e in compiled.plan.edges})
@@ -862,34 +1214,56 @@ def compile_graph(graph: StreamGraph, *, policy=None,
     every node plan is cache-keyed by the mesh topology, so a graph
     compiled under a mesh never reuses single-device plans or vice versa.
 
-    Current fusion scope: one fused edge per kernel (a producer with one
-    consumer, a consumer with one fused in-edge); longer chains stage
-    between fused pairs. The producer must not feed anything else — fusing
-    it away means its output never materializes in HBM.
+    Fusion scope: fused edges compose into linear chains — each node may
+    have one fused in-edge and one fused out-edge, so a whole decode
+    layer lowers into a single kernel. Every prospective fusion is checked
+    against the *sum* of the chain members' split VMEM budgets. A
+    fused-away producer may feed additional consumers only when each of
+    them is served from the chain's intermediate VMEM ring (same chain,
+    downstream, block schedule tracking the ring's live slot — see
+    ``_check_ring_serve``); otherwise the fusion unwinds to staged with
+    the multi-consumer rationale.
     """
     from repro.core.program import current_policy
     policy = policy or current_policy()
     sh = sharding if sharding is not None else policy.mesh
     mesh, shards = resolve_sharding(sh)
     order = graph.topo_order()
-    nodes = {n.name: n for n in graph.nodes}
+    # epilogues fold into the consumer once, up front: everything below
+    # (planning, legality, lowering, operand naming) sees the effective
+    # program, so epilogues ride every lowering path with no special cases
+    nodes = {n.name: (dataclasses.replace(n, program=n.effective_program,
+                                          epilogue=None)
+                      if n.epilogue else n)
+             for n in graph.nodes}
     budgets = planner.split_graph_budget(
         [n.name for n in order], vmem_budget_bytes)
 
-    resolved = {n.name: _resolve_node(graph, n, policy, budgets[n.name],
-                                      mesh=mesh, shards=shards)
+    resolved = {n.name: _resolve_node(graph, nodes[n.name], policy,
+                                      budgets[n.name], mesh=mesh,
+                                      shards=shards)
                 for n in order}
 
-    out_degree: Dict[str, int] = {}
-    for e in graph.edges:
-        out_degree[e.src] = out_degree.get(e.src, 0) + 1
-
     pos = {n.name: i for i, n in enumerate(order)}
+
+    def _is_stream(dst: str, input_name: str) -> bool:
+        try:
+            nodes[dst].program.stream(input_name)
+            return True
+        except KeyError:
+            return False
+
+    stream_edges = [e for e in graph.edges
+                    if _is_stream(e.dst, e.dst_input)]
+    block_edges = [e for e in graph.edges if not _is_stream(e.dst,
+                                                            e.dst_input)]
+
+    # -- pass A: greedy chain building over stream edges --------------------
     edge_plans: Dict[GraphEdge, EdgePlan] = {}
     reports: Dict[GraphEdge, FusionReport] = {}
-    fused_in: Dict[str, GraphEdge] = {}       # consumer -> its fused edge
-    in_pair = set()
-    for e in sorted(graph.edges, key=lambda e: (pos[e.dst], pos[e.src])):
+    fused_in: Dict[str, GraphEdge] = {}       # consumer -> fused in-edge
+    fused_next: Dict[str, GraphEdge] = {}     # producer -> fused out-edge
+    for e in sorted(stream_edges, key=lambda e: (pos[e.dst], pos[e.src])):
         pref = prefer or e.prefer
         P, C = nodes[e.src].program, nodes[e.dst].program
         if pref == "staged":
@@ -899,18 +1273,33 @@ def compile_graph(graph: StreamGraph, *, policy=None,
         reason = None
         if not rep.ok:
             reason = rep.reason
-        elif out_degree.get(e.src, 0) > 1:
-            reason = (f"producer {e.src!r} output has "
-                      f"{out_degree[e.src]} consumers; fusing would "
-                      f"unmaterialize it for the others")
-        elif e.src in in_pair or e.dst in in_pair:
-            reason = "node already participates in a fused pair"
+        elif e.src in fused_next:
+            reason = (f"producer {e.src!r} already fuses into "
+                      f"{fused_next[e.src].dst!r} (one fused out-edge "
+                      f"per node)")
+        elif e.dst in fused_in:
+            reason = (f"consumer {e.dst!r} already has a fused in-edge "
+                      f"from {fused_in[e.dst].src!r} (one fused in-edge "
+                      f"per node)")
         else:
-            _, pd, ps = resolved[e.src]
-            _, cd, cs = resolved[e.dst]
-            parts = _fused_vmem_parts(P, C, e, rep, (pd, ps), (cd, cs))
+            # the prospective chain this fusion would create: everything
+            # already fused through either endpoint, plus this edge — the
+            # whole chain cohabits one kernel, so it is checked against
+            # the sum of its members' split budgets
+            cnames = [e.src]
+            while cnames[0] in fused_in:
+                cnames.insert(0, fused_in[cnames[0]].src)
+            cnames.append(e.dst)
+            while cnames[-1] in fused_next:
+                cnames.append(fused_next[cnames[-1]].dst)
+            chain_edges = [e if (a, b) == (e.src, e.dst) else fused_in[b]
+                           for a, b in zip(cnames, cnames[1:])]
+            parts = _chain_vmem_parts(
+                [nodes[n].program for n in cnames], chain_edges,
+                [rep if ce is e else reports[ce] for ce in chain_edges],
+                [resolved[n][1:] for n in cnames])
             fits, line = planner.check_fused_vmem(
-                e.label, parts, budgets[e.src] + budgets[e.dst])
+                e.label, parts, sum(budgets[n] for n in cnames))
             if fits:
                 st = C.stream(e.dst_input)
                 saved = (float(np.prod(P.out_shape))
@@ -920,58 +1309,156 @@ def compile_graph(graph: StreamGraph, *, policy=None,
                                          f"{rep.reason}; {line}", saved)
                 reports[e] = rep
                 fused_in[e.dst] = e
-                in_pair.update((e.src, e.dst))
+                fused_next[e.src] = e
                 continue
             reason = line
-        if pref == "fused":
-            raise PlanError(resolved[e.dst][0],
-                            budgets[e.src] + budgets[e.dst],
-                            [f"{e.label}: {reason}"])
         edge_plans[e] = EdgePlan(e, "staged", reason)
 
-    # -- build executable units (fused pairs collapse into one kernel) -----
+    # -- pass B: multi-consumer resolution (ring-serve or unwind) -----------
+    def _chains() -> Dict[str, Tuple[Tuple[str, ...], int]]:
+        res: Dict[str, Tuple[Tuple[str, ...], int]] = {}
+        for tail in (n for n in fused_in if n not in fused_next):
+            cn = [tail]
+            while cn[0] in fused_in:
+                cn.insert(0, fused_in[cn[0]].src)
+            for i, n in enumerate(cn):
+                res[n] = (tuple(cn), i)
+        return res
+
+    serves: Dict[GraphEdge, Tuple[_RingServe, str]] = {}
+    while True:
+        serves.clear()
+        in_chain = _chains()
+        conflict = None
+        for src, fe in list(fused_next.items()):
+            for e2 in graph.edges:
+                if e2.src != src or e2 == fe:
+                    continue
+                pref2 = prefer or e2.prefer
+                if pref2 == "staged":
+                    conflict = (fe, f"producer {src!r} output has multiple "
+                                    f"consumers and edge {e2.label} is "
+                                    f"staged by request, so it must "
+                                    f"materialize in HBM")
+                    break
+                sinfo, dinfo = in_chain.get(src), in_chain.get(e2.dst)
+                if sinfo and dinfo and sinfo[0] == dinfo[0] \
+                        and dinfo[1] > sinfo[1]:
+                    cn = sinfo[0]
+                    ok, why, serve = _check_ring_serve(
+                        [nodes[n].program for n in cn],
+                        [reports[fused_in[n]] for n in cn[1:]],
+                        e2, sinfo[1], dinfo[1])
+                else:
+                    ok, why, serve = False, (
+                        f"consumer {e2.dst!r} is not downstream of "
+                        f"{src!r} in the fused chain"), None
+                if ok:
+                    serves[e2] = (serve, why)
+                else:
+                    conflict = (fe, f"producer {src!r} also feeds "
+                                    f"{e2.dst}.{e2.dst_input}, which "
+                                    f"cannot be served from the chain's "
+                                    f"intermediate VMEM ring: {why}")
+                    break
+            if conflict:
+                break
+        if conflict is None:
+            break
+        fe, why = conflict
+        edge_plans[fe] = EdgePlan(fe, "staged", why)
+        del fused_in[fe.dst]
+        del fused_next[fe.src]
+        reports.pop(fe, None)
+
+    for e2, (serve, why) in serves.items():
+        D = nodes[e2.dst].program
+        if serve.kind == "stream":
+            load = float(D.n_words) * D.stream(e2.dst_input).spec.word_bytes
+        else:
+            bi = next(i for i in D.inputs
+                      if isinstance(i, BlockIn) and i.name == e2.dst_input)
+            load = float(D.n_words) * float(np.prod(bi.block)) \
+                * jnp.dtype(bi.dtype).itemsize
+        edge_plans[e2] = EdgePlan(e2, "fused", why, load)
+
+    for e2 in block_edges:
+        if e2 in edge_plans:
+            continue
+        if (prefer or e2.prefer) == "staged":
+            edge_plans[e2] = EdgePlan(e2, "staged", "staged by request")
+            continue
+        edge_plans[e2] = EdgePlan(e2, "staged", (
+            f"consumer input {e2.dst}.{e2.dst_input} is a block-delivered "
+            f"operand (BlockIn), not a pipe stream; its producer is not "
+            f"fused away, so the intermediate materializes in HBM and "
+            f"Pallas delivers its blocks by grid index"))
+
+    # a demanded fusion that ended staged (anywhere in planning) is a
+    # PlanError carrying every per-edge rejection line, like Plan.skipped
+    rejected = [
+        f"{e.label}: {edge_plans[e].rationale}"
+        for e in sorted(graph.edges, key=lambda e: (pos[e.dst], pos[e.src]))
+        if edge_plans[e].mode == "staged"
+        and (prefer or e.prefer) == "fused"]
+    if rejected:
+        first = next(e for e in graph.edges
+                     if edge_plans[e].mode == "staged"
+                     and (prefer or e.prefer) == "fused")
+        raise PlanError(resolved[first.dst][0],
+                        budgets[first.src] + budgets[first.dst], rejected)
+
+    # -- build executable units (fused chains collapse into one kernel) ----
     # only staged edges feed a materialized operand; a fused edge's
     # intermediate never exists outside the kernel
     edges_in = {(e.dst, e.dst_input): e for e in graph.edges
                 if edge_plans[e].mode == "staged"}
-    fused_producers = {e.src for e in fused_in.values()}
+    chain_map = _chains()
     units: List[_Unit] = []
     for n in order:
-        if n.name in fused_producers:
-            continue    # emitted inside its consumer's fused unit
+        if n.name in fused_next:
+            continue    # emitted inside its chain's fused unit
         if n.name in fused_in:
-            e = fused_in[n.name]
-            rep = reports[e]
-            pn, cn = nodes[e.src], nodes[e.dst]
-            _, pd, ps = resolved[e.src]
-            _, cd, cs = resolved[e.dst]
-            fn, operands = _compile_fused(pn, cn, e, rep, (pd, ps), (cd, cs),
-                                          interpret=policy.interpret)
+            cn, _ = chain_map[n.name]
+            chain_serves = sorted(
+                (s for s, _ in serves.values() if s.edge.dst in cn),
+                key=lambda s: (s.dst_pos, s.src_pos))
+            fn, operands = _compile_chain(
+                [nodes[m] for m in cn], [fused_in[m] for m in cn[1:]],
+                [reports[fused_in[m]] for m in cn[1:]],
+                [resolved[m][1:] for m in cn], chain_serves,
+                interpret=policy.interpret)
             units.append(_Unit("fused", n.name, fn, tuple(operands)))
         else:
             _, d, s = resolved[n.name]
+            prog = nodes[n.name].program
             fn = compile_program(
-                n.program, interpret=policy.interpret,
-                pipe_overrides=_stream_overrides(n.program, d, s))
+                prog, interpret=policy.interpret,
+                pipe_overrides=_stream_overrides(prog, d, s))
             units.append(_Unit(
                 "node", n.name, fn,
-                tuple((n.name, i.name) for i in n.program.inputs)))
+                tuple((n.name, i.name) for i in prog.inputs)))
 
     fed_any = {(e.dst, e.dst_input) for e in graph.edges}
     arg_names = tuple(
-        f"{n.name}.{i.name}" for n in order for i in n.program.inputs
+        f"{n.name}.{i.name}" for n in order
+        for i in nodes[n.name].program.inputs
         if (n.name, i.name) not in fed_any)
 
     # -- analytic estimate (MKPipe stage overlap + per-edge traffic) --------
-    # stages follow the *execution* order of the units (a fused pair's
-    # producer immediately precedes its consumer even when the declaration
-    # topo order interleaves an unrelated node), so estimate_graph's
-    # consecutive-stage fusion model lines up with plan.edges
+    # stages follow the *execution* order of the units (a fused chain's
+    # members are consecutive even when the declaration topo order
+    # interleaves an unrelated node), so estimate_graph's
+    # consecutive-stage fusion model lines up with plan.edges; edges not
+    # between consecutive stages (ring-served residuals, skip edges)
+    # surface through ``extra_edges``
     stage_order: List[GraphNode] = []
     for u in units:
         if u.kind == "fused":
-            stage_order.append(nodes[fused_in[u.out_node].src])
-        stage_order.append(nodes[u.out_node])
+            cn, _ = chain_map[u.out_node]
+            stage_order.extend(nodes[m] for m in cn)
+        else:
+            stage_order.append(nodes[u.out_node])
     stages = []
     for n in stage_order:
         w, d, s = resolved[n.name]
@@ -1001,7 +1488,15 @@ def compile_graph(graph: StreamGraph, *, policy=None,
             fused_with_prev=fused_with_prev,
             saved_load_bytes=saved_load, saved_store_bytes=saved_store,
             rationale=rationale))
-    estimate = estimate_graph(tuple(stages), policy.hw)
+    adjacent = {(a.name, b.name)
+                for a, b in zip(stage_order, stage_order[1:])}
+    extra = tuple(
+        EdgeEstimate(edge=e.label, mode=edge_plans[e].mode,
+                     hbm_bytes_saved=edge_plans[e].hbm_bytes_saved
+                     if edge_plans[e].mode == "fused" else 0.0,
+                     rationale=edge_plans[e].rationale)
+        for e in graph.edges if (e.src, e.dst) not in adjacent)
+    estimate = estimate_graph(tuple(stages), policy.hw, extra_edges=extra)
 
     plan = GraphPlan(
         edges=tuple(edge_plans[e] for e in graph.edges),

@@ -324,7 +324,9 @@ def _adjusted(w: Workload, saved_load: float, saved_store: float) -> Workload:
 
 
 def estimate_graph(stages: Tuple[GraphStage, ...],
-                   hw: HardwareModel) -> GraphEstimate:
+                   hw: HardwareModel, *,
+                   extra_edges: Tuple[EdgeEstimate, ...] = ()
+                   ) -> GraphEstimate:
     """Estimate a multi-kernel pipe graph (MKPipe, arXiv 2002.01614).
 
     Stages are given in topological (execution) order. Consecutive stages
@@ -334,6 +336,13 @@ def estimate_graph(stages: Tuple[GraphStage, ...],
     producer/consumer kernels overlap within one kernel). Staged edges
     serialize: the intermediate round-trips HBM and segment times add up —
     exactly the memory-controller round trip the fused lowering removes.
+
+    ``extra_edges`` carries graph edges that do not join *consecutive*
+    stages — a ring-served residual feeding a later chain member, or a
+    multi-consumer skip edge. They are appended to ``edges`` verbatim,
+    their savings count toward ``hbm_bytes_saved``, and staged ones with a
+    rationale surface in ``skipped`` — so every edge of a whole-layer
+    graph stays observable even when the stage sequence cannot express it.
     """
     if not stages:
         raise ValueError("estimate_graph needs at least one stage")
@@ -378,6 +387,12 @@ def estimate_graph(stages: Tuple[GraphStage, ...],
             total += seg_max
             seg_max = est.total_s
     total += seg_max
+    for e in extra_edges:
+        edges.append(e)
+        if e.mode == "fused":
+            saved_total += e.hbm_bytes_saved
+        elif e.rationale:
+            skipped.append(f"{e.edge}: {e.rationale}")
     return GraphEstimate(
         total_s=total,
         unfused_s=unfused,

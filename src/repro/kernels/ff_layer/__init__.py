@@ -1,0 +1,4 @@
+from repro.kernels.ff_layer.kernel import build_matmul_program, \
+    build_swiglu_program
+
+__all__ = ["build_matmul_program", "build_swiglu_program"]

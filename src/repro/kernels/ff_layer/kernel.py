@@ -1,0 +1,144 @@
+"""Decode-layer building-block programs: row-streamed matmul (with an
+optional fused RMSNorm prologue) and the SwiGLU gate/up projection.
+
+These are the node programs of the whole-layer ``decode_layer`` StreamGraph
+(models/layers.py): QKV projection, attention out-projection, gate/up MLP
+and down-projection are all instances of the two builders here. Unlike
+``ff_matmul`` they keep k and n un-tiled (decode-layer operands are small:
+one k-tile, one n-tile per word) so every program's word schedule is the
+plain row-block sequence ``w -> (w, 0)``. That makes adjacent projections
+*chain-fusable*: each node's output block schedule is exactly the next
+node's input stream schedule, so ``compile_graph`` can keep the whole
+residual stream in VMEM across the layer.
+
+Norm weights and biases ride as ``BlockIn`` operands broadcast to
+``block_m`` rows (not ``(1, n)``) so they stay ring-promotable inside a
+fused chain — a pipe tile's sublane dim must be a multiple of 8.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.pipe import Pipe
+from repro.core.program import BlockIn, Stream, StreamProgram
+
+
+def _rms(x, nw, eps):
+    """Mirror models.layers.rmsnorm numerics exactly: f32 mean-square,
+    rsqrt, scale by the (f32) weight, cast back to the input dtype."""
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    x32 = x32 * jax.lax.rsqrt(
+        jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (x32 * nw.astype(jnp.float32)).astype(dt)
+
+
+def build_matmul_program(m: int, n: int, k: int, *,
+                         block_m: int = 8, norm: bool = False,
+                         eps: float = 1e-6, dtype=jnp.float32,
+                         b_dtype=None, out_dtype=None,
+                         depth: int = 2, streams: int = 1,
+                         name: str = "ff_layer_matmul") -> StreamProgram:
+    """``out = maybe_rmsnorm(a) @ b`` with one word per ``block_m``-row
+    block of ``a`` (k and n un-tiled). With ``norm=True`` the RMSNorm
+    weight arrives as BlockIn ``nw`` of shape ``(block_m, k)`` — the
+    caller broadcasts the ``(k,)`` weight to ``block_m`` identical rows."""
+    assert m % block_m == 0, (m, block_m)
+    b_dtype = b_dtype or dtype
+    out_dtype = out_dtype or dtype
+
+    def a_slicer(ctx, word):
+        return ctx.ref("a").at[pl.ds(word * block_m, block_m), pl.ds(0, k)]
+
+    def b_slicer(ctx, word):
+        return ctx.ref("b").at[pl.ds(0, k), pl.ds(0, n)]
+
+    def consumer(ctx):
+        a = ctx.word("a")[...]
+        if norm:
+            a = _rms(a, ctx.ref("nw")[...], eps)
+        acc = jnp.dot(a, ctx.word("b")[...],
+                      preferred_element_type=jnp.float32)
+        ctx.out[...] = acc.astype(out_dtype)
+
+    inputs = [
+        Stream("a", Pipe(tile=(block_m, k), dtype=dtype, depth=depth,
+                         streams=streams), a_slicer,
+               index=lambda w: (w, 0)),
+        # the weight block is revisited every word: one HBM load, then the
+        # ring serves it for the whole grid
+        Stream("b", Pipe(tile=(k, n), dtype=b_dtype, depth=depth), b_slicer,
+               index=lambda w: (0, 0)),
+    ]
+    if norm:
+        inputs.append(BlockIn("nw", (block_m, k), lambda w: (0, 0),
+                              dtype=jnp.float32))
+
+    return StreamProgram(
+        name=name,
+        n_words=m // block_m,
+        inputs=tuple(inputs),
+        consumer=consumer,
+        out_shape=(m, n),
+        out_dtype=out_dtype,
+        out_block=(block_m, n),
+        out_index_map=lambda g: (g, 0),
+    )
+
+
+def build_swiglu_program(m: int, f: int, k: int, *,
+                         block_m: int = 8, norm: bool = True,
+                         eps: float = 1e-6, dtype=jnp.float32,
+                         out_dtype=None, depth: int = 2,
+                         streams: int = 1) -> StreamProgram:
+    """``out = silu(maybe_rmsnorm(x) @ wg) * (maybe_rmsnorm(x) @ wu)`` —
+    the gate/up half of the SwiGLU MLP as one word per row block, matching
+    models.layers.mlp_apply with ``wi = concat([wg, wu], axis=1)``."""
+    assert m % block_m == 0, (m, block_m)
+    out_dtype = out_dtype or dtype
+
+    def x_slicer(ctx, word):
+        return ctx.ref("x").at[pl.ds(word * block_m, block_m), pl.ds(0, k)]
+
+    def wg_slicer(ctx, word):
+        return ctx.ref("wg").at[pl.ds(0, k), pl.ds(0, f)]
+
+    def wu_slicer(ctx, word):
+        return ctx.ref("wu").at[pl.ds(0, k), pl.ds(0, f)]
+
+    def consumer(ctx):
+        x = ctx.word("x")[...]
+        if norm:
+            x = _rms(x, ctx.ref("nw")[...], eps)
+        g32 = jnp.dot(x, ctx.word("wg")[...],
+                      preferred_element_type=jnp.float32)
+        u32 = jnp.dot(x, ctx.word("wu")[...],
+                      preferred_element_type=jnp.float32)
+        ctx.out[...] = (jax.nn.silu(g32) * u32).astype(out_dtype)
+
+    inputs = [
+        Stream("x", Pipe(tile=(block_m, k), dtype=dtype, depth=depth,
+                         streams=streams), x_slicer,
+               index=lambda w: (w, 0)),
+        Stream("wg", Pipe(tile=(k, f), dtype=dtype, depth=depth), wg_slicer,
+               index=lambda w: (0, 0)),
+        Stream("wu", Pipe(tile=(k, f), dtype=dtype, depth=depth), wu_slicer,
+               index=lambda w: (0, 0)),
+    ]
+    if norm:
+        inputs.append(BlockIn("nw", (block_m, k), lambda w: (0, 0),
+                              dtype=jnp.float32))
+
+    return StreamProgram(
+        name="ff_layer_swiglu",
+        n_words=m // block_m,
+        inputs=tuple(inputs),
+        consumer=consumer,
+        out_shape=(m, f),
+        out_dtype=out_dtype,
+        out_block=(block_m, f),
+        out_index_map=lambda g: (g, 0),
+    )

@@ -458,6 +458,11 @@ def serve_bench(args) -> Dict[str, object]:
         # pin the dense path's KV tile to the page so lockstep decode is
         # bitwise-identical to the paged stream graph
         cfg = cfg.replace(decode_block_kv=args.page)
+    if getattr(args, "layer_graph", False):
+        # route dense-cache decode steps through the whole-layer
+        # decode_layer StreamGraph (one planned multi-kernel program per
+        # layer; the paged scheduler keeps its gather-attention graph)
+        cfg = cfg.replace(layer_graph=True)
     from repro.core.program import PipePolicy
     policy = PipePolicy(mode=args.policy_mode, interpret=True)
     from repro.models import build_model
@@ -579,6 +584,11 @@ def add_serve_args(ap: argparse.ArgumentParser) -> None:
                     help="attention implementation: ff = repro.ops stream "
                          "kernels (default), xla = HLO reference, cfg = "
                          "whatever the arch config pins")
+    ap.add_argument("--layer-graph", action="store_true",
+                    help="fuse each dense-cache decode step into the "
+                         "whole-layer decode_layer StreamGraph (QKV -> "
+                         "attention -> out-proj -> MLP with residual/norm "
+                         "epilogues, jointly planned)")
     ap.add_argument("--policy-mode", choices=("ff", "baseline", "autotune"),
                     default="ff",
                     help="session PipePolicy mode installed around the "

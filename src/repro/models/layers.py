@@ -16,6 +16,7 @@ TPU fast path, validated in interpret mode).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 
@@ -611,3 +612,403 @@ def _register_attention_proj_graph():
 
 
 _register_attention_proj_graph()
+
+
+# ---------------------------------------------------------------------------
+# StreamGraph workload: the whole transformer decode layer
+# ---------------------------------------------------------------------------
+#
+# ROADMAP item 2: QKV projection -> decode attention -> out-projection ->
+# gate/up MLP -> down-projection as ONE StreamGraph. RMSNorms ride as fused
+# prologues inside the matmul consumers, the residual adds and RoPE as
+# consumer *epilogues* (GraphNode.epilogue), and the out-projection output
+# is a multi-consumer edge: it feeds the MLP gate/up node AND the final
+# residual epilogue. compile_graph fuses oproj->gateup->down into one
+# chain kernel (the residual rides the chain's intermediate VMEM ring, so
+# the post-attention hidden state never round-trips HBM) and stages the two
+# attention-adjacent edges with per-edge rationales (the q handoff is a
+# block-delivered operand; the attention output's (g_pad, hd) blocks don't
+# match the out-projection's (block_m, hpad) row tiles).
+
+
+def build_decode_layer_graph(*, b: int = 16, d_model: int = 64,
+                             kvh: int = 1, g_pad: int = 8, hd: int = 16,
+                             d_ff: int = 128, s: int = 128,
+                             eps: float = 1e-6, dtype=jnp.float32,
+                             depth: int = 2, streams: int = 1,
+                             block_m: int = 8, block_kv: int = 128):
+    """Declare the whole-decode-layer StreamGraph at one shape point.
+
+    Row-space: ``b`` decode tokens (one per sequence), padded to a multiple
+    of ``block_m``. Head-space: ``kvh`` KV heads of ``g_pad`` (8-padded)
+    query heads each, ``hpad = kvh * g_pad * hd`` flattened q columns —
+    the entrypoint zero-pads the flattened projections so padded head rows
+    contribute exactly zero. ``block_kv`` is the joint tuner's shared tile
+    axis (``block_m`` is pinned: epilogue operands are blocked on it).
+    """
+    from repro.core.graph import Epilogue, GraphEdge, GraphNode, StreamGraph
+    from repro.core.program import BlockIn
+    from repro.kernels.ff_decode_attention.kernel import \
+        build_program as attn_prog
+    from repro.kernels.ff_decode_attention.ops import \
+        decode_attention_workload
+    from repro.kernels.ff_layer.kernel import build_matmul_program, \
+        build_swiglu_program
+    from repro.kernels.ff_matmul.ops import matmul_workload
+
+    hpad = kvh * g_pad * hd
+    half = hd // 2
+
+    qprog = build_matmul_program(b, hpad, d_model, block_m=block_m,
+                                 norm=True, eps=eps, dtype=dtype,
+                                 depth=depth, streams=streams,
+                                 name="ff_layer_qproj")
+    attn = attn_prog(b, kvh, g_pad, s, hd, block_kv=block_kv, dtype=dtype,
+                     depth=depth, streams=streams)
+    oprog = build_matmul_program(b, d_model, hpad, block_m=block_m,
+                                 dtype=dtype, depth=depth, streams=streams,
+                                 name="ff_layer_oproj")
+    gprog = build_swiglu_program(b, d_ff, d_model, block_m=block_m,
+                                 norm=True, eps=eps, dtype=dtype,
+                                 depth=depth, streams=streams)
+    dprog = build_matmul_program(b, d_model, d_ff, block_m=block_m,
+                                 dtype=dtype, depth=depth, streams=streams,
+                                 name="ff_layer_down")
+
+    def _rope_bias_ep(ctx, idx, value):
+        # q = (rmsnorm(x) @ wq + bq) rotated by the per-row cos/sin tables
+        # (rope over the trailing hd dim of each padded head), all in f32 —
+        # mirrors L.rope numerics exactly; rope(0) = 0 keeps padded head
+        # columns zero
+        v = value.astype(jnp.float32) + ctx.ref("bq")[...].astype(jnp.float32)
+        c = ctx.ref("cos")[...][:, None, :].astype(jnp.float32)
+        s_ = ctx.ref("sin")[...][:, None, :].astype(jnp.float32)
+        vh = v.reshape(v.shape[0], kvh * g_pad, hd)
+        x1, x2 = vh[..., :half], vh[..., half:]
+        vh = jnp.concatenate([x1 * c - x2 * s_, x1 * s_ + x2 * c], axis=-1)
+        return vh.reshape(v.shape).astype(value.dtype)
+
+    def _residual_ep(name):
+        def ep(ctx, idx, value):
+            return value + ctx.ref(name)[...].astype(value.dtype)
+        return ep
+
+    w_q, t_q = matmul_workload(b, hpad, d_model, (block_m, hpad, d_model),
+                               dtype)
+    w_a, t_a = decode_attention_workload(b, kvh * g_pad, kvh, s, hd,
+                                         block_kv=block_kv, dtype=dtype)
+    w_o, t_o = matmul_workload(b, d_model, hpad, (block_m, d_model, hpad),
+                               dtype)
+    w_d, t_d = matmul_workload(b, d_model, d_ff, (block_m, d_model, d_ff),
+                               dtype)
+    return StreamGraph(
+        name="decode_layer",
+        nodes=(
+            GraphNode("qproj", qprog, workload=w_q, plan_tile=t_q,
+                      epilogue=Epilogue(_rope_bias_ep, inputs=(
+                          BlockIn("bq", (block_m, hpad), lambda g: (0, 0)),
+                          BlockIn("cos", (block_m, half), lambda g: (g, 0)),
+                          BlockIn("sin", (block_m, half), lambda g: (g, 0)),
+                      ))),
+            GraphNode("attn", attn, workload=w_a, plan_tile=t_a),
+            GraphNode("oproj", oprog, workload=w_o, plan_tile=t_o,
+                      epilogue=Epilogue(_residual_ep("res1"), inputs=(
+                          BlockIn("res1", (block_m, d_model),
+                                  lambda g: (g, 0), dtype=dtype),))),
+            # gateup's workload is synthesized from its streams (exact:
+            # one x row-block + both weight blocks per word)
+            GraphNode("gateup", gprog),
+            GraphNode("down", dprog, workload=w_d, plan_tile=t_d,
+                      epilogue=Epilogue(_residual_ep("res"), inputs=(
+                          BlockIn("res", (block_m, d_model),
+                                  lambda g: (g, 0), dtype=dtype),))),
+        ),
+        edges=(
+            # staged: attn's q is a block-delivered BlockIn operand
+            GraphEdge("qproj", "attn", "q", reshape=(b, kvh, g_pad, hd)),
+            # staged: (1,1,g_pad,hd) attention blocks vs (block_m, hpad)
+            # row tiles — mismatched schedules
+            GraphEdge("attn", "oproj", "a", reshape=(b, hpad)),
+            # fused chain: oproj -> gateup -> down, one pallas_call
+            GraphEdge("oproj", "gateup", "x"),
+            # multi-consumer: the post-attention hidden state also feeds
+            # the final residual epilogue — ring-served from the chain's
+            # intermediate VMEM ring, no HBM materialization
+            GraphEdge("oproj", "down", "res"),
+            GraphEdge("gateup", "down", "a"),
+        ),
+    )
+
+
+def _decode_layer_inputs(key):
+    """Operands in CompiledGraph.arg_names order: (qproj.a, qproj.b,
+    qproj.nw, qproj.bq, qproj.cos, qproj.sin, attn.lengths, attn.k,
+    attn.v, oproj.b, oproj.res1, gateup.wg, gateup.wu, gateup.nw,
+    down.b). Norm weights and the q bias arrive broadcast to ``block_m``
+    rows (ring-promotable blocks need 8-aligned sublanes)."""
+    b, d, kvh, g_pad, hd, f, s = 16, 64, 1, 8, 16, 128, 128
+    hpad, half, bm = kvh * g_pad * hd, hd // 2, 8
+    ks = [jax.random.fold_in(key, i) for i in range(12)]
+    x = 0.3 * jax.random.normal(key, (b, d), jnp.float32)
+    wq = jax.random.normal(ks[1], (d, hpad), jnp.float32) / math.sqrt(d)
+    nw1 = jnp.broadcast_to(
+        1.0 + 0.1 * jax.random.normal(ks[2], (d,), jnp.float32), (bm, d))
+    bq = jnp.broadcast_to(
+        0.1 * jax.random.normal(ks[3], (hpad,), jnp.float32), (bm, hpad))
+    lengths = jax.random.randint(ks[4], (b,), 1, s + 1, dtype=jnp.int32)
+    ang = (lengths - 1).astype(jnp.float32)[:, None] \
+        * (1e4 ** (-jnp.arange(half, dtype=jnp.float32) / half))
+    k = 0.3 * jax.random.normal(ks[5], (b, kvh, s, hd), jnp.float32)
+    v = jax.random.normal(ks[6], (b, kvh, s, hd), jnp.float32)
+    wo = jax.random.normal(ks[7], (hpad, d), jnp.float32) / math.sqrt(hpad)
+    wg = jax.random.normal(ks[8], (d, f), jnp.float32) / math.sqrt(d)
+    wu = jax.random.normal(ks[9], (d, f), jnp.float32) / math.sqrt(d)
+    nw2 = jnp.broadcast_to(
+        1.0 + 0.1 * jax.random.normal(ks[10], (d,), jnp.float32), (bm, d))
+    wo2 = jax.random.normal(ks[11], (f, d), jnp.float32) / math.sqrt(f)
+    return (x, wq, nw1, bq, jnp.cos(ang), jnp.sin(ang), lengths, k, v,
+            wo, x, wg, wu, nw2, wo2)
+
+
+def _decode_layer_ref(x, wq, nw1, bq, cos, sin, lengths, k, v, wo, res1,
+                      wg, wu, nw2, wo2, eps: float = 1e-6):
+    """Pure-XLA decode layer at the graph's operand layout (flattened
+    zero-padded projections, broadcast norm rows, precomputed rope
+    tables). Mirrors the kernel convention that a fully-masked row
+    (length 0) attends to nothing and outputs zeros."""
+    b, d = x.shape
+    _, kvh, s, hd = k.shape
+    hpad, half = wq.shape[1], hd // 2
+    dt = x.dtype
+    xn = rmsnorm(x, nw1[0], eps)
+    q = jnp.dot(xn, wq, preferred_element_type=jnp.float32).astype(dt)
+    q = q.astype(jnp.float32) + bq[0].astype(jnp.float32)
+    qh = q.reshape(b, hpad // hd, hd)
+    c = cos[:, None, :].astype(jnp.float32)
+    s_ = sin[:, None, :].astype(jnp.float32)
+    x1, x2 = qh[..., :half], qh[..., half:]
+    qh = jnp.concatenate([x1 * c - x2 * s_, x1 * s_ + x2 * c], axis=-1)
+    q4 = qh.reshape(b, kvh, hpad // (kvh * hd), hd).astype(dt)
+    scores = jnp.einsum("bkgd,bksd->bkgs", q4.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(hd)
+    valid = jnp.arange(s)[None, None, None, :] \
+        < lengths[:, None, None, None]
+    scores = jnp.where(valid, scores, -1e30)
+    attn = jnp.einsum("bkgs,bksd->bkgd", jax.nn.softmax(scores, axis=-1),
+                      v.astype(jnp.float32))
+    attn = jnp.where(lengths[:, None, None, None] > 0, attn, 0.0)
+    a = attn.astype(dt).reshape(b, hpad)
+    h = jnp.dot(a, wo, preferred_element_type=jnp.float32).astype(dt) + res1
+    hn = rmsnorm(h, nw2[0], eps)
+    g32 = jnp.dot(hn, wg, preferred_element_type=jnp.float32)
+    u32 = jnp.dot(hn, wu, preferred_element_type=jnp.float32)
+    m = (jax.nn.silu(g32) * u32).astype(dt)
+    return jnp.dot(m, wo2, preferred_element_type=jnp.float32).astype(dt) + h
+
+
+@functools.lru_cache(maxsize=8)
+def _unfused_decode_layer_fn(b, d, kvh, g_pad, hd, d_ff, s, dtype):
+    """The chained-ops baseline: the same five planned kernels as the
+    graph (identical per-node depth/streams sizing, via a one-time staged
+    compile), but each node is its own jitted dispatch — intermediates
+    cross the dispatch boundary instead of staying device-resident inside
+    one program. Compiled once per shape so the bench measures execution,
+    not per-call re-tracing."""
+    from repro.core.graph import compile_graph
+
+    g = build_decode_layer_graph(b=b, d_model=d, kvh=kvh, g_pad=g_pad,
+                                 hd=hd, d_ff=d_ff, s=s, dtype=dtype)
+    cg = compile_graph(g, prefer="staged")
+    run = {u.out_node: jax.jit(u.fn) for u in cg.units}
+    hpad = kvh * g_pad * hd
+
+    def fn(x, wq, nw1, bq, cos, sin, lengths, k, v, wo, res1, wg, wu,
+           nw2, wo2):
+        q = run["qproj"](x, wq, nw1, bq, cos, sin)
+        a = run["attn"](lengths, q.reshape(b, kvh, -1, hd), k, v)
+        h = run["oproj"](a.reshape(b, hpad), wo, res1)
+        m = run["gateup"](h, wg, wu, nw2)
+        return run["down"](m, wo2, h)
+
+    return fn
+
+
+def _decode_layer_unfused(x, wq, nw1, bq, cos, sin, lengths, k, v, wo,
+                          res1, wg, wu, nw2, wo2):
+    """The same five node programs as five separate pallas_calls — every
+    intermediate round-trips HBM (the BENCH_graph whole-layer baseline).
+    Same lowering and sizing, no graph: the comparison isolates the
+    fusion."""
+    b, d = x.shape
+    _, kvh, s, hd = k.shape
+    hpad = wq.shape[1]
+    fn = _unfused_decode_layer_fn(b, d, kvh, hpad // (kvh * hd), hd,
+                                  wg.shape[1], s, jnp.dtype(x.dtype))
+    return fn(x, wq, nw1, bq, cos, sin, lengths, k, v, wo, res1, wg, wu,
+              nw2, wo2)
+
+
+def decode_layer(x, nw1, wq, bq, positions, k_cache, v_cache, lengths,
+                 wo, nw2, wg, wu, wo2, *, rope_theta: float = 10000.0,
+                 eps: float = 1e-6, block_kv: Optional[int] = None,
+                 policy=None) -> jnp.ndarray:
+    """One transformer decode step (post cache-update) through the
+    whole-layer ``decode_layer`` StreamGraph, at the caller's shapes.
+
+    x: [B, D] current-token hidden states; nw1/nw2: [D] RMSNorm weights;
+    wq: [D, H*hd] (bq: [H*hd] or None); positions: [B] rope positions of
+    the current token; k_cache/v_cache: [B, KVH, S, hd] post-update;
+    lengths: [B] live prefix length *including* the current token;
+    wo: [H*hd, D]; wg/wu: [D, F]; wo2: [F, D]. Returns [B, D] =
+    ``x + attn(...) @ wo + mlp(...)`` — the full pre-norm layer body.
+
+    Marshals to the graph's padded operand layout (rows to ``block_m``,
+    query-head group to ``g_pad``, cache length to ``block_kv``; the
+    zero-padded flattened projections make every padded lane contribute
+    exactly zero), resolves the joint plan, and records the call site for
+    the plan-service sweep — mirroring ``attention_proj``.
+    """
+    from repro.core import autotune
+    from repro.core import graph as graphlib
+    from repro.core.program import current_policy
+
+    policy = current_policy() if policy is None else policy
+    dt = x.dtype
+    b, d_model = x.shape
+    _, kvh, s_len, hd = k_cache.shape
+    half = hd // 2
+    n_q = wq.shape[1] // hd
+    group = max(n_q // kvh, 1)
+    g_pad = max(8, -(-group // 8) * 8)
+    hpad = kvh * g_pad * hd
+    d_ff = wg.shape[1]
+    block_m = 8
+    bkv = int(block_kv or 128)
+    bp = -(-b // block_m) * block_m
+    spad = -(-s_len // bkv) * bkv
+
+    def pad_rows(a):
+        if a.shape[0] == bp:
+            return a
+        return jnp.pad(a, ((0, bp - b),) + ((0, 0),) * (a.ndim - 1))
+
+    def pad_seq(c):
+        c = c.astype(dt)
+        if c.shape[2] != spad:
+            c = jnp.pad(c, ((0, 0), (0, 0), (0, spad - s_len), (0, 0)))
+        return pad_rows(c)
+
+    # zero-pad the flattened projections over the padded head group:
+    # padded q columns are 0 (rope keeps them 0), padded attention rows
+    # are killed by zero wo rows
+    wq4 = wq.reshape(d_model, kvh, group, hd)
+    wqf = jnp.zeros((d_model, kvh, g_pad, hd), wq.dtype) \
+        .at[:, :, :group].set(wq4).reshape(d_model, hpad)
+    bqv = jnp.zeros((n_q * hd,), dt) if bq is None else bq
+    bqf = jnp.zeros((kvh, g_pad, hd), bqv.dtype) \
+        .at[:, :group].set(bqv.reshape(kvh, group, hd)).reshape(hpad)
+    wo4 = wo.reshape(kvh, group, hd, d_model)
+    wof = jnp.zeros((kvh, g_pad, hd, d_model), wo.dtype) \
+        .at[:, :group].set(wo4).reshape(hpad, d_model)
+    freqs = rope_theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[:, None] * freqs
+    xp = pad_rows(x)
+    ops = (xp, wqf.astype(dt),
+           jnp.broadcast_to(nw1.astype(jnp.float32)[None],
+                            (block_m, d_model)),
+           jnp.broadcast_to(bqf.astype(jnp.float32)[None],
+                            (block_m, hpad)),
+           pad_rows(jnp.cos(ang)), pad_rows(jnp.sin(ang)),
+           pad_rows(lengths.astype(jnp.int32)),
+           pad_seq(k_cache), pad_seq(v_cache), wof.astype(dt), xp,
+           wg.astype(dt), wu.astype(dt),
+           jnp.broadcast_to(nw2.astype(jnp.float32)[None],
+                            (block_m, d_model)),
+           wo2.astype(dt))
+    if policy.mode == "ref":
+        return _decode_layer_ref(*ops, eps=eps)[:b]
+
+    def build(depth=2, streams=1, **tk):
+        return build_decode_layer_graph(
+            b=bp, d_model=d_model, kvh=kvh, g_pad=g_pad, hd=hd, d_ff=d_ff,
+            s=spad, eps=eps, dtype=dt, depth=depth, streams=streams,
+            block_kv=tk.pop("block_kv", bkv), **tk)
+
+    g0 = build()
+    wl, tile = graphlib.graph_workload(g0)
+    sig = graphlib.graph_signature(g0)
+
+    def runner(tk, depth, streams):
+        cg = graphlib.compile_graph(
+            build(depth=depth, streams=streams, **dict(tk)),
+            policy=policy.replace(mode="ff", depth=depth, streams=streams))
+        return lambda: cg(*ops)
+
+    choice = autotune.resolve_graph(
+        "decode_layer", policy, workload=wl, tile=tile, dtype=dt,
+        signature=sig,
+        workload_fn=lambda tk: graphlib.graph_workload(build(**dict(tk))),
+        runner=None if autotune.has_tracers(*ops) else runner,
+        site={"b": b, "d_model": d_model, "h": n_q, "kvh": kvh, "hd": hd,
+              "d_ff": d_ff, "s": s_len},
+        site_dynamic=("b", "s"),
+        tile_options=({"block_kv": 64},))
+    # compiled fresh per call (trace-scoped closures must not be reused)
+    mode = "ff" if policy.mode == "autotune" else policy.mode
+    cg = graphlib.compile_graph(
+        build(depth=choice.depth, streams=choice.streams,
+              **dict(choice.tile_kwargs)),
+        policy=policy.replace(mode=mode, depth=choice.depth,
+                              streams=choice.streams))
+    return cg(*ops)[:b]
+
+
+def _decode_layer_sweep_inputs(key, site):
+    """Rebuild decode_layer operands at a recorded call-site shape
+    (plan sweep)."""
+    b, d = int(site["b"]), int(site["d_model"])
+    h, kvh, hd = int(site["h"]), int(site["kvh"]), int(site["hd"])
+    f, s = int(site["d_ff"]), int(site["s"])
+    dt = jnp.dtype(site.get("dtype", "float32"))
+    ks = [jax.random.fold_in(key, i) for i in range(12)]
+    x = 0.3 * jax.random.normal(key, (b, d), dt)
+    nw1 = 1.0 + 0.1 * jax.random.normal(ks[1], (d,), dt)
+    wq = jax.random.normal(ks[2], (d, h * hd), dt) / math.sqrt(d)
+    bq = 0.1 * jax.random.normal(ks[3], (h * hd,), dt)
+    lengths = jax.random.randint(ks[4], (b,), 1, s + 1, dtype=jnp.int32)
+    positions = lengths - 1
+    k = 0.3 * jax.random.normal(ks[5], (b, kvh, s, hd), dt)
+    v = jax.random.normal(ks[6], (b, kvh, s, hd), dt)
+    wo = jax.random.normal(ks[7], (h * hd, d), dt) / math.sqrt(h * hd)
+    nw2 = 1.0 + 0.1 * jax.random.normal(ks[8], (d,), dt)
+    wg = jax.random.normal(ks[9], (d, f), dt) / math.sqrt(d)
+    wu = jax.random.normal(ks[10], (d, f), dt) / math.sqrt(d)
+    wo2 = jax.random.normal(ks[11], (f, d), dt) / math.sqrt(f)
+    return (x, nw1, wq, bq, positions, k, v, lengths, wo, nw2, wg, wu,
+            wo2), {}
+
+
+def _register_decode_layer_graph():
+    from repro.kernels.registry import register_graph
+
+    register_graph(
+        name="decode_layer",
+        build=build_decode_layer_graph,
+        make_inputs=_decode_layer_inputs,
+        ref=_decode_layer_ref,
+        unfused=_decode_layer_unfused,
+        tile_options=({"block_kv": 64},),
+        tol=5e-4,
+        doc="whole transformer decode layer: q-projection (+RMSNorm "
+            "prologue, +bias/RoPE epilogue) -> decode attention -> "
+            "out-projection (+residual) -> SwiGLU gate/up -> "
+            "down-projection (+residual); oproj->gateup->down fuse into "
+            "one chain kernel with the residual ring-served in VMEM",
+        # plan-service sweep: resolve at call-site shapes through the real
+        # entrypoint, not run_graph's fixed smoke point
+        op=decode_layer,
+        sweep_inputs=_decode_layer_sweep_inputs,
+    )
+
+
+_register_decode_layer_graph()

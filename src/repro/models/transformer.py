@@ -178,6 +178,12 @@ class DecoderStack:
 
     def _layer(self, p, x, positions, cache, lengths, want_cache: bool):
         cfg = self.cfg
+        if (cfg.layer_graph and cache is not None and "kv_pool" not in cache
+                and x.shape[1] == 1 and cfg.norm == "rmsnorm"
+                and cfg.act == "swiglu"
+                and self._mixer_apply is attn_apply
+                and self._ffn_apply is ffn_apply):
+            return self._decode_layer_graph(p, x, positions, cache, lengths)
         # NOTE (§Perf it4a, refuted): inserting explicit Megatron-SP
         # all-gather / reduce-scatter constraints around the norms tripled
         # compiled FLOPs — XLA SPMD fell back to replicate-and-repartition
@@ -203,6 +209,43 @@ class DecoderStack:
         if not want_cache and cache is None:
             new_cache = None    # train mode: never stack per-layer caches
         return x, new_cache, aux
+
+    def _decode_layer_graph(self, p, x, positions, cache, lengths):
+        """One dense-cache decode step through the whole-layer
+        ``decode_layer`` StreamGraph (ROADMAP item 2): q-projection +
+        RoPE + attention + out-projection + SwiGLU MLP as one planned
+        multi-kernel program, residual adds and RMSNorms folded into the
+        consumer bodies. The K/V projection and cache update stay outside
+        the graph — the cache write must materialize in HBM regardless."""
+        cfg = self.cfg
+        dt = x.dtype
+        mp = p["mixer"]
+        h1 = L.norm_apply(cfg.norm, x, p["norm1"])
+        k = jnp.einsum("bsd,dhk->bshk", h1, mp["wk"].astype(dt))
+        v = jnp.einsum("bsd,dhk->bshk", h1, mp["wv"].astype(dt))
+        if cfg.qkv_bias:
+            k = k + mp["bk"].astype(dt)
+            v = v + mp["bv"].astype(dt)
+        k = L.rope(k, positions, cfg.rope_theta)
+        ck = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice_in_dim(
+            c, u, i, axis=0))(cache["k"], k, lengths)
+        cv = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice_in_dim(
+            c, u, i, axis=0))(cache["v"], v, lengths)
+        d, h_q, hd = cfg.d_model, cfg.n_heads, cfg.hd
+        fp = p["ffn"]
+        wi = fp["wi"].astype(dt)
+        f = wi.shape[1] // 2
+        out = L.decode_layer(
+            x[:, 0], p["norm1"]["w"],
+            mp["wq"].astype(dt).reshape(d, h_q * hd),
+            mp["bq"].astype(dt).reshape(h_q * hd) if cfg.qkv_bias else None,
+            positions[:, -1],
+            ck.transpose(0, 2, 1, 3), cv.transpose(0, 2, 1, 3),
+            lengths + 1,
+            mp["wo"].astype(dt).reshape(h_q * hd, d), p["norm2"]["w"],
+            wi[:, :f], wi[:, f:], fp["wo"].astype(dt),
+            rope_theta=cfg.rope_theta, block_kv=cfg.decode_block_kv)
+        return out[:, None], {"k": ck, "v": cv}, jnp.zeros((), jnp.float32)
 
     def _remat_layer(self):
         cfg = self.cfg

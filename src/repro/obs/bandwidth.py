@@ -19,7 +19,9 @@ Controller Wall / MKPipe, PAPERS.md). This module makes the join:
 
 Graph wall time is one number per compiled graph; stages get it
 attributed proportionally to their modeled ``total_s`` share, and each
-edge combines its producer+consumer stages. ``hbm_bytes_saved`` per edge
+edge combines its producer+consumer stages (a stage shared by several
+edges — a multi-consumer producer — is split evenly across them so edge
+rows stay summable). ``hbm_bytes_saved`` per edge
 is carried through so fused edges show the traffic they *removed* next
 to the bandwidth they achieved.
 """
@@ -80,12 +82,24 @@ def graph_utilization(estimate, hw, measured_s: float) -> Dict[str, object]:
             stage_bytes[name] / max(attributed_s, _EPS), hw.hbm_bw))
         stages[name] = d
 
-    edges: List[Dict[str, object]] = []
+    # A stage may sit on several edges (multi-consumer producers like the
+    # decode layer's oproj feeding both gateup and the down residual, or a
+    # consumer with two planned inputs). Splitting each stage's bytes/wall
+    # evenly across its edge memberships keeps the edge rows summable: the
+    # shared stage is counted once across the graph, not once per edge.
+    membership: Dict[str, int] = {}
+    edge_names: List[List[str]] = []
     for e in estimate.edges:
         producer, _, consumer = e.edge.partition("->")
         names = [n for n in (producer, consumer) if n in stage_bytes]
-        e_bytes = sum(stage_bytes[n] for n in names)
-        e_attr = sum(stages[n]["attributed_s"] for n in names)
+        edge_names.append(names)
+        for n in names:
+            membership[n] = membership.get(n, 0) + 1
+
+    edges: List[Dict[str, object]] = []
+    for e, names in zip(estimate.edges, edge_names):
+        e_bytes = sum(stage_bytes[n] / membership[n] for n in names)
+        e_attr = sum(stages[n]["attributed_s"] / membership[n] for n in names)
         d: Dict[str, object] = {
             "edge": e.edge,
             "mode": e.mode,

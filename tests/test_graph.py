@@ -59,7 +59,7 @@ def _toy_inputs(key=None):
 
 
 @pytest.mark.parametrize("name", ["moe_dispatch_ffn", "attention_proj",
-                                  "paged_decode_attention"])
+                                  "paged_decode_attention", "decode_layer"])
 def test_shipped_graph_fused_matches_reference(name):
     spec = R.get_graph(name)
     out, ref, err, compiled = R.run_graph_smoke(spec)
@@ -70,7 +70,7 @@ def test_shipped_graph_fused_matches_reference(name):
 
 
 @pytest.mark.parametrize("name", ["moe_dispatch_ffn", "attention_proj",
-                                  "paged_decode_attention"])
+                                  "paged_decode_attention", "decode_layer"])
 def test_shipped_graph_staged_matches_fused(name):
     spec = R.get_graph(name)
     out_f, _, err_f, _ = R.run_graph_smoke(spec)
@@ -312,3 +312,96 @@ def test_estimate_graph_direct_api():
     assert fused.total_s < staged.total_s
     assert fused.hbm_bytes_saved == 2 * 64 * 4096.0
     assert staged.skipped == ("a->b: why not",)
+
+
+# ---------------------------------------------------------------------------
+# Whole-layer decode graph (epilogues, multi-consumer edges, chain fusion)
+# ---------------------------------------------------------------------------
+
+
+def test_decode_layer_mlp_tail_is_single_pallas_call():
+    """The acceptance shape: out-proj -> gate/up -> down collapses into
+    ONE fused chain unit while qkv projection and attention stay their
+    own calls, and every staged edge carries a rationale."""
+    spec = R.get_graph("decode_layer")
+    _, _, err, compiled = R.run_graph_smoke(spec)
+    assert err <= spec.tol
+    kinds = [(u.kind, u.out_node) for u in compiled.units]
+    assert kinds == [("node", "qproj"), ("node", "attn"),
+                     ("fused", "down")], kinds
+    modes = {e.edge.label: e.mode for e in compiled.plan.edges}
+    assert modes == {"qproj->attn": "staged", "attn->oproj": "staged",
+                     "oproj->gateup": "fused", "oproj->down": "fused",
+                     "gateup->down": "fused"}
+    for e in compiled.plan.edges:
+        if e.mode == "staged":
+            assert e.rationale, e.edge.label
+
+
+def test_decode_layer_multi_consumer_edge_ring_serves_residual():
+    """oproj feeds two consumers — gateup's stream and down's residual
+    epilogue. Both edges fuse; the residual copy is served from the
+    producer's intermediate VMEM ring instead of a second HBM read, and
+    the estimate credits that edge with saved bytes."""
+    spec = R.get_graph("decode_layer")
+    _, _, _, compiled = R.run_graph_smoke(spec)
+    by_label = {e.edge.label: e for e in compiled.plan.edges}
+    assert by_label["oproj->gateup"].mode == "fused"
+    assert by_label["oproj->down"].mode == "fused"
+    assert "ring" in by_label["oproj->down"].rationale
+    saved = {e.edge: e.hbm_bytes_saved for e in compiled.plan.estimate.edges}
+    assert saved["oproj->down"] > 0
+    assert saved["oproj->gateup"] > 0
+    assert compiled.plan.estimate.hbm_bytes_saved > 0
+
+
+def test_decode_layer_multi_consumer_edges_stage_on_request():
+    """The other legality direction: prefer='staged' demotes both edges
+    of the shared producer — five independent pallas_calls, residual
+    materialized in HBM and re-read by the epilogue BlockIn."""
+    spec = R.get_graph("decode_layer")
+    _, _, err, staged = R.run_graph_smoke(spec, prefer="staged")
+    assert err <= spec.tol
+    assert [u.kind for u in staged.units] == ["node"] * 5
+    by_label = {e.edge.label: e for e in staged.plan.edges}
+    assert by_label["oproj->gateup"].mode == "staged"
+    assert by_label["oproj->down"].mode == "staged"
+
+
+def test_decode_layer_forced_fusion_lists_every_rejection():
+    """prefer='fused' across the whole layer fails with one rationale per
+    unfusable edge — the BlockIn-fed attention q and the block-schedule
+    mismatch out of attention — not a single opaque error."""
+    spec = R.get_graph("decode_layer")
+    with pytest.raises(PlanError) as ei:
+        R.run_graph_smoke(spec, prefer="fused")
+    msg = str(ei.value)
+    assert "qproj->attn" in msg and "attn->oproj" in msg
+    assert "BlockIn" in msg
+    assert "mismatched block schedules" in msg
+    assert len(ei.value.rejected) == 2
+
+
+def test_epilogue_matches_xla_reference():
+    """A residual epilogue folded into a node's output write is
+    numerically the XLA dot + add (same operand, fed as a BlockIn)."""
+    from repro.core.graph import Epilogue
+    from repro.core.program import BlockIn
+    from repro.kernels.ff_layer import build_matmul_program
+
+    m, n, k = 32, 128, 64
+    prog = build_matmul_program(m, n, k)
+
+    def ep(ctx, idx, value):
+        return value + ctx.ref("res")[...].astype(value.dtype)
+
+    node = GraphNode("mm", prog, epilogue=Epilogue(ep, inputs=(
+        BlockIn("res", (8, n), lambda g: (g, 0), dtype=jnp.float32),)))
+    compiled = compile_graph(StreamGraph("ep", (node,), ()))
+    key = jax.random.key(7)
+    a = jax.random.normal(key, (m, k), jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (k, n),
+                          jnp.float32) / jnp.sqrt(64.0)
+    res = jax.random.normal(jax.random.fold_in(key, 2), (m, n), jnp.float32)
+    np.testing.assert_allclose(np.asarray(compiled(a, w, res)),
+                               np.asarray(a @ w + res), atol=1e-4)

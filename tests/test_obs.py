@@ -232,6 +232,32 @@ def test_graph_utilization_attributes_wall_by_model_share():
     assert rep["graph"]["modeled_s"] == 3e-3
 
 
+def test_graph_utilization_multi_consumer_edge_not_double_counted():
+    """A producer feeding two edges (decode_layer's oproj -> gateup and
+    oproj -> down residual) must contribute its bytes/wall once across the
+    graph: edge rows split the shared stage so their sum equals the total."""
+    est = types.SimpleNamespace(
+        total_s=4e-3,
+        hbm_bytes_saved=222,
+        per_stage=[("p", _stage(100e9, 2e-3)),
+                   ("c1", _stage(100e9, 1e-3)),
+                   ("c2", _stage(100e9, 1e-3))],
+        edges=[_edge("p->c1", "fused"), _edge("p->c2", "fused")],
+    )
+    rep = obs.graph_utilization(est, TPU_V5E, measured_s=4e-3)
+    total_bytes = 100e9 * 4e-3
+    assert rep["graph"]["hbm_bytes"] == pytest.approx(total_bytes)
+    edge_bytes = sum(e["hbm_bytes"] for e in rep["edges"])
+    edge_s = sum(e["attributed_s"] for e in rep["edges"])
+    # shared producer p split across its two edges, not counted twice
+    assert edge_bytes == pytest.approx(total_bytes)
+    assert edge_s == pytest.approx(4e-3)
+    for e in rep["edges"]:
+        # each edge: half of p (1e-3 worth) + its own consumer (1e-3 worth)
+        assert e["hbm_bytes"] == pytest.approx(100e9 * 2e-3)
+        assert e["attributed_s"] == pytest.approx(2e-3)
+
+
 # ---------------------------------------------------------------------------
 # Autotune wiring: plan-source counters, origin split, deprecation shim
 # ---------------------------------------------------------------------------
